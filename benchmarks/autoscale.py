@@ -1,0 +1,89 @@
+"""Fig. 4 reproduction: auto-scaling Llama-70B from 1 to 4 instances under
+infinite request rate (1000 requests).
+
+Paper claims: req/s 8.3 / 14.6 / 20.9 / 23.9 and output tok/s scaling
+1x / 1.75x / 2.52x / 2.88x at 1/2/3/4 instances (sublinear because Globus
+Compute's relay capacity becomes the ceiling), median latency dropping
+54.5 -> 30.1 -> 18.8 -> 16.0 s.  The relay cap is modeled by
+``ComputeClient.relay`` (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (LLAMA70B, csv_line, first_system,
+                               make_workload, print_table, warm_up)
+from repro.core.testbed import drive_workload
+
+N_REQ = 1000
+# Globus relay: 2 workers x 24 ms/task-leg; both legs (dispatch + result)
+# share the FIFO, reproducing the paper's 'scaling is currently limited by
+# the ability of Globus Compute to scale and route requests' ceiling
+RELAY = dict(relay_workers=2, relay_cpu=0.024)
+# DGX-A100 constants for the paper-validation sweep (8x A100-40GB/node);
+# step_overhead 4 ms ~ vLLM scheduler+sampling per iteration
+A100 = dict(peak_flops=312e12, hbm_bw=1555e9, step_overhead=0.004)
+
+
+def run(max_instances: int, n: int = N_REQ, hw: dict | None = None) -> dict:
+    # result_cpu: each instance's single Globus endpoint worker serializes
+    # result packaging/upload (~120 ms per completed task).  This is what
+    # makes ONE instance saturate near 8 req/s while added instances keep
+    # scaling (each brings its own worker) until the shared relay binds --
+    # the paper's 'limited by the ability of Globus Compute to scale and
+    # route requests'.  Calibrated against Fig. 4; Fig. 3/5 reproduce
+    # without it because their endpoints aren't result-worker-bound.
+    dep_kw = dict(chips_per_instance=8, nodes_per_instance=1, max_slots=128,
+                  mfu=0.5, storage_bw=2e9, result_cpu=0.12)
+    if hw:
+        dep_kw["hw"] = hw
+    sysd = first_system(LLAMA70B, max_instances=max_instances,
+                        dep_kw=dep_kw, **RELAY)
+    # steady-state capacity: the paper measures saturated configurations in
+    # which auto-scaling has already brought the instances up (a 70B cold
+    # start is ~90 s -- longer than the whole 1000-request run)
+    warm_up(sysd, LLAMA70B.name, instances=max_instances)
+    wl = make_workload(n, rate=float("inf"), seed=11)
+    s = drive_workload(sysd, wl, LLAMA70B.name)
+    ep = sysd.endpoints["sophia-ep"]
+    s["instances"] = len([i for i in ep.instances[LLAMA70B.name]])
+    return s
+
+
+def sweep(label: str, n: int, hw: dict | None) -> list[dict]:
+    rows, out = [], []
+    for k in (1, 2, 3, 4):
+        s = run(k, n, hw)
+        scale = s["output_tok_per_s"] / out[0]["output_tok_per_s"] \
+            if out else 1.0
+        rows.append([k, s["instances"], f"{s['req_per_s']:.1f}",
+                     f"{s['output_tok_per_s']:.0f}", f"{scale:.2f}x",
+                     f"{s['median_e2e_s']:.1f}"])
+        out.append(s)
+        csv_line(f"autoscale/{label}/{k}inst", s["median_e2e_s"] * 1e6,
+                 f"req_s={s['req_per_s']:.1f};"
+                 f"tok_s={s['output_tok_per_s']:.0f};scale={scale:.2f}")
+    print_table(
+        f"Fig.4 — auto-scaling (Llama-70B, infinite rate) [{label}]",
+        ["max_inst", "spawned", "req/s", "tok/s", "tok/s scale",
+         "median e2e s"],
+        rows, widths=[8, 8, 7, 7, 11, 12])
+    scaling = [round(s["output_tok_per_s"] / out[0]["output_tok_per_s"], 2)
+               for s in out]
+    lat = [round(s["median_e2e_s"], 1) for s in out]
+    print(f"check[{label}]: tok/s scaling {scaling} "
+          f"(paper, on A100: [1, 1.75, 2.52, 2.88]); latency {lat} "
+          f"(paper: [54.5, 30.1, 18.8, 16.0])")
+    return out
+
+
+def main(fast: bool = False) -> dict:
+    n = 300 if fast else N_REQ
+    # validation sweep on the paper's own hardware constants, then the
+    # TPU-v5e target (slower per-chip HBM -> the 2048-token tail binds
+    # earlier, flattening the 3-4 instance points; see EXPERIMENTS.md)
+    a100 = sweep("A100-validation", n, A100)
+    v5e = sweep("v5e-target", n, None)
+    return {"a100": a100, "v5e": v5e}
+
+
+if __name__ == "__main__":
+    main()

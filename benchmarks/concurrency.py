@@ -1,0 +1,112 @@
+"""Table 1 reproduction: WebUI closed-loop concurrency sweep.
+
+N simulated chat sessions each hold one in-flight request at a time
+(send -> wait for full response -> immediately send the next).  Throughput
+(output tok/s and completed req/s) is measured inside a 60 s and a 120 s
+window, for Llama-8B / Gemma-27B / Llama-70B, concurrency 50..700.
+
+Paper claims: near-linear scaling 50 -> 500 with diminishing returns at
+700; 60 s windows consistently beat 120 s.  Known deltas (EXPERIMENTS.md):
+our DES saturates at the result-worker cap by conc~300 (the paper's growth
+to 700 is consistent with autoscaled extra instances mid-sweep), and the
+60s>120s inversion needs backend degradation we do not model.
+"""
+from __future__ import annotations
+
+import random
+
+from benchmarks.common import (GEMMA27B, LLAMA8B, LLAMA70B, csv_line,
+                               first_system, print_table, warm_up)
+from repro.data.workload import sharegpt_lengths
+
+CONCURRENCY = [50, 100, 300, 500, 700]
+WINDOWS = [60.0, 120.0]
+
+# result_cpu=0.12: the per-instance Globus result-worker serialization --
+# the paper's Table 1 saturates at ~11-15 req/s for ALL model sizes, the
+# signature of a model-independent pipeline cap (same knob as Fig. 4).
+MODELS = {
+    LLAMA8B.name: (LLAMA8B, dict(chips_per_instance=4, max_slots=64,
+                                 mfu=0.5, storage_bw=2e9, result_cpu=0.12,
+                                 nodes_per_instance=1)),
+    GEMMA27B.name: (GEMMA27B, dict(chips_per_instance=8, max_slots=64,
+                                   mfu=0.5, storage_bw=2e9, result_cpu=0.12,
+                                   nodes_per_instance=1)),
+    LLAMA70B.name: (LLAMA70B, dict(chips_per_instance=8, max_slots=64,
+                                   mfu=0.5, storage_bw=2e9, result_cpu=0.12,
+                                   nodes_per_instance=1)),
+}
+MAX_INSTANCES = 1           # one shared instance per model (WebUI deploy)
+THINK_S = 3.0               # UI render + user turn gap between messages
+
+
+def run(model_key: str, sessions: int, window: float) -> dict:
+    cfg, dep_kw = MODELS[model_key]
+    sysd = first_system(cfg, max_instances=MAX_INSTANCES, dep_kw=dep_kw,
+                        relay_workers=4, relay_cpu=0.02, workers=256)
+    warm_up(sysd, cfg.name, instances=MAX_INSTANCES)
+    token = sysd.token_for("webui")
+    rng = random.Random(1234 + sessions)
+    completions: list[dict] = []
+    counter = [0]
+    start = sysd.loop.now()                   # warm-up already advanced time
+
+    def start_session(sid: int):
+        def send():
+            (p, o), = sharegpt_lengths(rng, 1)
+            counter[0] += 1
+            fut = sysd.gateway.submit(token, {
+                "request_id": f"s{sid}-{counter[0]}", "model": cfg.name,
+                "prompt_tokens": p, "max_tokens": o,
+                "temperature": 1.0,           # chat: no response-cache hits
+            })
+            t0 = sysd.loop.now()
+
+            def done(f):
+                if f.error is None:
+                    completions.append({
+                        "arrival": t0, "finish": sysd.loop.now(),
+                        "output_tokens": f.result()["output_tokens"]})
+                if sysd.loop.now() - start < window:
+                    sysd.loop.call_after(THINK_S, send)   # closed loop
+
+            fut.add_done_callback(done)
+
+        send()
+
+    for s in range(sessions):
+        start_session(s)
+    sysd.loop.run_until(start + window + 1e-6)
+    inside = [c for c in completions if c["finish"] - start <= window]
+    toks = sum(c["output_tokens"] for c in inside)
+    return {"tok_s": toks / window, "req_s": len(inside) / window,
+            "completed": len(inside)}
+
+
+def main(fast: bool = False) -> list[dict]:
+    conc = [50, 300, 700] if fast else CONCURRENCY
+    models = [LLAMA8B.name, LLAMA70B.name] if fast else list(MODELS)
+    rows, out = [], []
+    for mk in models:
+        for c in conc:
+            cells = {}
+            for w in WINDOWS:
+                r = run(mk, c, w)
+                cells[w] = r
+                out.append({"model": mk, "conc": c, "window": w, **r})
+                csv_line(f"concurrency/{mk}/c{c}/w{int(w)}", 0.0,
+                         f"tok_s={r['tok_s']:.0f};req_s={r['req_s']:.2f}")
+            rows.append([mk, c,
+                         f"{cells[60.0]['tok_s']:.0f}",
+                         f"{cells[60.0]['req_s']:.2f}",
+                         f"{cells[120.0]['tok_s']:.0f}",
+                         f"{cells[120.0]['req_s']:.2f}"])
+    print_table("Table 1 — WebUI concurrency sweep",
+                ["model", "conc", "60s tok/s", "60s req/s", "120s tok/s",
+                 "120s req/s"],
+                rows, widths=[14, 5, 9, 9, 10, 10])
+    return out
+
+
+if __name__ == "__main__":
+    main()

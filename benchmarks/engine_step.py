@@ -1,0 +1,73 @@
+"""Real-engine microbenchmark (CPU, reduced configs): wall-clock per
+continuous-batching engine step for the slots vs paged KV backends, and
+prefill/decode token throughput.  This is the substrate the DES calibrates
+against; on TPU the same engine runs the full-size models.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, print_table
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.request import InferenceRequest, SamplingParams
+
+ARCHS = ["llama3.2-3b", "phi3.5-moe-42b-a6.6b", "mamba2-130m"]
+
+
+def bench(arch: str, backend: str, *, slots: int = 8, n_req: int = 16,
+          prompt_len: int = 32, gen: int = 16) -> dict:
+    cfg = reduced(REGISTRY[arch])
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def load(eng):
+        for i in range(n_req):
+            toks = rng.integers(2, cfg.vocab_size,
+                                size=prompt_len).tolist()
+            eng.add_request(InferenceRequest(
+                model=arch, prompt_tokens=toks, request_id=f"r{i}",
+                sampling=SamplingParams(max_tokens=gen, temperature=0.0)))
+
+    ecfg = EngineConfig(max_slots=slots, max_seq_len=prompt_len + gen + 8,
+                        backend=backend, page_size=16)
+    eng = ContinuousBatchingEngine(model, params, ecfg)
+    load(eng)
+    eng.step()                      # warmup (jit compile)
+    t0 = time.perf_counter()
+    outs = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    steps = eng.stats["steps"] - 1
+    toks = eng.stats["decode_tokens"] + eng.stats["prefill_tokens"]
+    return {"arch": arch, "backend": backend, "steps": steps,
+            "s_per_step": dt / max(steps, 1), "tok_per_s": toks / dt,
+            "finished": len(outs) + eng.stats["finished"]}
+
+
+def main(fast: bool = False) -> list[dict]:
+    archs = ARCHS[:2] if fast else ARCHS
+    rows, out = [], []
+    for arch in archs:
+        backends = ["slots"] if REGISTRY[arch].family in ("ssm", "hybrid") \
+            else ["slots", "paged"]
+        for be in backends:
+            r = bench(arch, be)
+            rows.append([arch, be, r["steps"],
+                         f"{r['s_per_step']*1e3:.1f}",
+                         f"{r['tok_per_s']:.0f}"])
+            out.append(r)
+            csv_line(f"engine_step/{arch}/{be}", r["s_per_step"] * 1e6,
+                     f"tok_s={r['tok_per_s']:.0f}")
+    print_table("Engine microbench (reduced configs, CPU)",
+                ["arch", "backend", "steps", "ms/step", "tok/s"],
+                rows, widths=[22, 7, 6, 8, 8])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 5 reproduction: FIRST (Llama-8B, TP=4) vs an external commercial API
+(GPT-4o-mini class) under infinite request rate.
+
+Paper claims: FIRST 25.1 req/s / 3283 tok/s / 16.3 s median; OpenAI API
+6.7 req/s / 1199 tok/s / 2.0 s median -- the common trade-off: self-hosted
+HPC inference wins on throughput, the managed API wins on single-request
+latency (and is rate-limited service-side).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (DEP_8B, ExternalAPIModel, LLAMA8B, csv_line,
+                               first_system, make_workload, print_table,
+                               warm_up)
+from repro.core.clock import EventLoop, VirtualClock
+from repro.core.testbed import drive_workload
+
+N_REQ = 1000
+
+
+def main(fast: bool = False) -> dict:
+    n = 300 if fast else N_REQ
+    sysd = first_system(LLAMA8B, dep_kw=DEP_8B)
+    warm_up(sysd, LLAMA8B.name)
+    wl = make_workload(n, rate=float("inf"), seed=23)
+    f = drive_workload(sysd, wl, LLAMA8B.name)
+
+    ext = ExternalAPIModel(EventLoop(VirtualClock()),
+                           latency=2.0, rate_limit=6.7)
+    e = ext.run(make_workload(n, rate=float("inf"), seed=23))
+
+    rows = [
+        ["FIRST (Llama-8B)", f"{f['req_per_s']:.1f}",
+         f"{f['output_tok_per_s']:.0f}", f"{f['median_e2e_s']:.1f}"],
+        ["External API", f"{e['req_per_s']:.1f}",
+         f"{e['output_tok_per_s']:.0f}", f"{e['median_e2e_s']:.1f}"],
+    ]
+    print_table("Fig.5 — FIRST vs external API (infinite rate)",
+                ["scenario", "req/s", "tok/s", "median e2e s"],
+                rows, widths=[18, 7, 7, 12])
+    print(f"\ncheck: FIRST req/s {f['req_per_s']:.1f} > API "
+          f"{e['req_per_s']:.1f} (paper 25.1 vs 6.7); API median "
+          f"{e['median_e2e_s']:.1f}s < FIRST {f['median_e2e_s']:.1f}s "
+          f"(paper 2.0 vs 16.3)")
+    csv_line("external_api/first", f["median_e2e_s"] * 1e6,
+             f"req_s={f['req_per_s']:.1f};tok_s={f['output_tok_per_s']:.0f}")
+    csv_line("external_api/api", e["median_e2e_s"] * 1e6,
+             f"req_s={e['req_per_s']:.1f};tok_s={e['output_tok_per_s']:.0f}")
+    return {"first": f, "external": e}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh)
+from the dry-run records in results/dryrun/*.json.
+
+  compute_s    = dot_flops / PEAK_FLOPS          (per-chip, post-SPMD HLO)
+  memory_s     = (traffic - convert) / HBM_BW    (TPU-projected: CPU-backend
+                                                  bf16->f32 convert copies
+                                                  excluded, see hlo_analysis)
+  collective_s = collective_bytes / LINK_BW      (per-chip ICI bytes)
+
+All inputs are PER-CHIP: the dry-run parses the post-SPMD per-device module
+and multiplies while-loop bodies by trip counts (XLA's cost_analysis counts
+them once).  MODEL_FLOPS uses the 6ND/2ND convention (attention flops
+excluded), so ratio > 1 means attention-heavy, < 1 means padding/remat/
+redundant compute.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_table
+from repro.configs import REGISTRY, SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link
+HBM_PER_CHIP = 16 << 30  # v5e: 16 GiB
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    cfg = REGISTRY[arch]
+    sh = SHAPES[shape_name]
+    n = cfg.num_active_params
+    if sh.kind == "train":
+        return 6.0 * n * sh.global_batch * sh.seq_len / devices
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len / devices
+    return 2.0 * n * sh.global_batch / devices          # decode: one token
+
+
+def terms(rec: dict) -> dict:
+    flops = rec.get("dot_flops", 0.0)
+    traffic = rec.get("traffic_bytes", 0.0) - rec.get("convert_bytes", 0.0)
+    coll = rec.get("collective_bytes", 0.0)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = traffic / HBM_BW
+    coll_s = coll / LINK_BW
+    bound = max((compute_s, "compute"), (memory_s, "memory"),
+                (coll_s, "collective"))[1]
+    step_s = max(compute_s, memory_s, coll_s)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "bound": bound, "step_s": step_s,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # roofline fraction: useful model flops per second vs peak
+        "roofline_frac": (mf / step_s) / PEAK_FLOPS if step_s else 0.0,
+    }
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(fast: bool = False, out_dir: str = "results/dryrun") -> list[dict]:
+    out = _table(out_dir, "baseline (paper-faithful)")
+    if glob.glob("results/dryrun_opt/*.json"):
+        _table("results/dryrun_opt", "optimized (EXPERIMENTS.md §Perf)")
+    return out
+
+
+def _table(out_dir: str, label: str) -> list[dict]:
+    recs = [r for r in load(out_dir) if r.get("ok")]
+    fails = [r for r in load(out_dir) if not r.get("ok")]
+    rows = []
+    out = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = terms(r)
+        hbm = (r.get("argument_size_in_bytes", 0)
+               + r.get("temp_size_in_bytes", 0)
+               + r.get("output_size_in_bytes", 0)
+               - r.get("alias_size_in_bytes", 0))
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{t['compute_s']*1e3:.2f}", f"{t['memory_s']*1e3:.2f}",
+            f"{t['collective_s']*1e3:.2f}", t["bound"],
+            f"{t['useful_ratio']:.2f}", f"{t['roofline_frac']*100:.1f}%",
+            f"{hbm/2**30:.1f}",
+        ])
+        out.append({**r, **t})
+    print_table(
+        f"§Roofline [{label}] — per (arch x shape x mesh), per-chip terms",
+        ["arch", "shape", "mesh", "compute ms", "memory ms", "coll ms",
+         "bound", "6ND/HLO", "roofline", "GiB/chip"],
+        rows, widths=[21, 11, 6, 10, 9, 8, 10, 7, 8, 8])
+    if fails:
+        print(f"\nFAILED cells: "
+              f"{[(r['arch'], r['shape'], r['mesh']) for r in fails]}")
+    over = [r for r in out
+            if (r.get("argument_size_in_bytes", 0)
+                + r.get("temp_size_in_bytes", 0)
+                - r.get("alias_size_in_bytes", 0)) > HBM_PER_CHIP]
+    print(f"\n{len(out)} cells OK; {len(fails)} failed; "
+          f"{len(over)} cells exceed 16 GiB/chip (flagged for FSDP/remat)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark orchestrator: one harness per paper table/figure.
+
+  rate_sweep    Fig. 3  FIRST vs vLLM-Direct across request rates
+  autoscale     Fig. 4  1->4 instance scaling under saturation
+  external_api  Fig. 5  FIRST (8B) vs rate-limited external API
+  concurrency   Tbl. 1  WebUI closed-loop session sweep
+  batch_mode    §5.3.1  online vs dedicated offline batch job
+  engine_step   (real)  CPU wall-clock of the JAX engine, reduced configs
+  roofline      §Roofline  terms from results/dryrun/*.json
+
+``python -m benchmarks.run [--fast] [--only NAME]``.  Machine-readable
+lines are prefixed ``CSV,name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (autoscale, batch_mode, concurrency, engine_step,
+                        external_api, rate_sweep, roofline)
+
+SUITES = {
+    "rate_sweep": rate_sweep.main,
+    "autoscale": autoscale.main,
+    "external_api": external_api.main,
+    "concurrency": concurrency.main,
+    "batch_mode": batch_mode.main,
+    "engine_step": engine_step.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced request counts / fewer cells")
+    ap.add_argument("--only", default=None, choices=[*SUITES, None])
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(SUITES)
+    failures = []
+    for name in names:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            SUITES[name](fast=args.fast)
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception:                       # noqa: BLE001
+            failures.append(name)
+            print(f"[{name}] FAILED:\n{traceback.format_exc()}")
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+    print("\nall benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Federated serving (paper §4.5): two clusters, one agnostic API.
+
+Demonstrates the priority-based endpoint selection (active instance >
+free nodes > configured order), auto-scaling under burst load, and
+fail-over when a whole cluster drops out.
+
+Run:  PYTHONPATH=src python examples/federated_serving.py
+"""
+from repro.core.gateway import GatewayConfig
+from repro.core.testbed import (LLAMA70B, build_system, default_deployment,
+                                drive_workload, warm_up)
+from repro.data.workload import make_workload
+
+MODEL = LLAMA70B.name
+
+system = build_system(
+    {
+        "sophia": {MODEL: default_deployment(
+            LLAMA70B, max_instances=2, storage_bw=40e9, scale_cooldown=5.0)},
+        "polaris": {MODEL: default_deployment(
+            LLAMA70B, max_instances=2, storage_bw=40e9, scale_cooldown=5.0)},
+    },
+    gateway_config=GatewayConfig(workers=128),
+    startup_delay=5.0,
+)
+
+# 1) cold federation: no instance anywhere -> rule 2 picks by free nodes
+ep = system.router.select_endpoint(MODEL)
+print(f"cold selection -> {ep} (rule: {system.router.decisions[-1][2]})")
+
+# 2) warm sophia; rule 1 now prefers the active instance
+warm_up(system, MODEL)
+ep = system.router.select_endpoint(MODEL)
+print(f"warm selection -> {ep} (rule: {system.router.decisions[-1][2]})")
+
+# 3) burst load: auto-scaler adds a second sophia instance
+wl = make_workload(400, rate=float("inf"), seed=1)
+s = drive_workload(system, wl, MODEL)
+inst = system.endpoints["sophia-ep"].instances[MODEL]
+print(f"burst of 400: {s['req_per_s']:.1f} req/s, "
+      f"{s['output_tok_per_s']:.0f} tok/s, sophia instances={len(inst)}")
+
+# 4) sophia outage -> health monitor reroutes to polaris transparently
+system.health.mark_down("sophia-ep")
+system.loop.run_until(system.loop.now() + 15.0)
+token = system.token_for("alice")
+fut = system.gateway.submit(token, {"model": MODEL, "prompt_tokens": 64,
+                                    "max_tokens": 32})
+system.loop.run_until_idle()
+print(f"after sophia outage: served by {fut.result()['endpoint']} "
+      f"(rule: {system.router.decisions[-1][2]})")
+
+# 5) /jobs view across the federation
+print("federation /jobs:", system.gateway.jobs_status())

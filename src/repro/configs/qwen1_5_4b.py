@@ -1,0 +1,18 @@
+"""qwen1.5-4b — dense MHA (kv=20) with QKV bias and a very large vocab.
+40L d2560 20H d_ff 6912 vocab 151936. [hf:Qwen/Qwen1.5-0.5B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=128,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    source="hf:Qwen/Qwen1.5-0.5B; hf",
+)

@@ -1,0 +1,33 @@
+"""FIRST control plane — the paper's primary contribution: gateway,
+FaaS compute layer, scheduling (hot nodes, auto-scaling, batch mode),
+federation, and fault tolerance, all driven by one discrete-event loop."""
+from repro.core.clock import EventLoop, Future, RealClock, VirtualClock
+from repro.core.auth import (AccessPolicy, AuthError, AuthService,
+                             CachingAuthClient, Identity)
+from repro.core.metrics import MetricsLog, RequestRecord
+from repro.core.scheduler import ClusterScheduler, Job, JobState
+from repro.core.instances import (InstanceState, ModelInstance, SimEngine,
+                                  SimRequest)
+from repro.core.autoscale import AutoScalePolicy, AutoScaler
+from repro.core.compute import (ComputeClient, ComputeEndpoint, ComputeError,
+                                ModelDeployment)
+from repro.core.federation import FederationError, FederationRouter
+from repro.core.gateway import (GatewayConfig, GatewayError, InferenceGateway,
+                                RateLimiter, ResponseCache, WorkerPool)
+from repro.core.batch import BatchJob, BatchService, BatchState
+from repro.core.faults import FailureInjector, HealthMonitor
+
+__all__ = [
+    "EventLoop", "Future", "RealClock", "VirtualClock",
+    "AccessPolicy", "AuthError", "AuthService", "CachingAuthClient", "Identity",
+    "MetricsLog", "RequestRecord",
+    "ClusterScheduler", "Job", "JobState",
+    "InstanceState", "ModelInstance", "SimEngine", "SimRequest",
+    "AutoScalePolicy", "AutoScaler",
+    "ComputeClient", "ComputeEndpoint", "ComputeError", "ModelDeployment",
+    "FederationError", "FederationRouter",
+    "GatewayConfig", "GatewayError", "InferenceGateway", "RateLimiter",
+    "ResponseCache", "WorkerPool",
+    "BatchJob", "BatchService", "BatchState",
+    "FailureInjector", "HealthMonitor",
+]

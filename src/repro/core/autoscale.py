@@ -1,0 +1,45 @@
+"""Auto-scaling policy (paper §3.2.2 / Fig. 4): launch additional instances of
+a model when existing ones are saturated; scale-in happens via hot-node idle
+timeouts on the instances themselves."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class AutoScalePolicy:
+    max_instances: int = 1            # admin cap: max parallel jobs per model
+    queue_threshold: int = 4          # queued reqs per instance that triggers scale-up
+    cooldown: float = 30.0            # min seconds between scale-ups per model
+
+
+class AutoScaler:
+    def __init__(self, loop, policy: AutoScalePolicy | None = None):
+        self.loop = loop
+        self.policy = policy or AutoScalePolicy()
+        self._last_scale: dict[str, float] = {}
+        self.scale_events: list[tuple[float, str, int]] = []
+
+    def should_scale_up(self, model: str, instances: list, cluster_free_nodes,
+                        nodes_per_instance: int) -> bool:
+        pol = self.policy
+        alive = [i for i in instances if i.alive]
+        if not alive or len(alive) >= pol.max_instances:
+            return False
+        if cluster_free_nodes < nodes_per_instance:
+            return False
+        now = self.loop.now()
+        if now - self._last_scale.get(model, -1e18) < pol.cooldown:
+            return False
+        hot = [i for i in alive if i.state.value == "running"]
+        if not hot:
+            return False  # still cold-starting the first one
+        queued = sum(i.engine.queue_depth for i in hot) + \
+            sum(len(i._pending) for i in alive)
+        saturated = all(i.engine.saturated() for i in hot)
+        trigger = queued >= pol.queue_threshold * len(hot) or saturated
+        return trigger
+
+    def record_scale(self, model: str, n_instances: int):
+        self._last_scale[model] = self.loop.now()
+        self.scale_events.append((self.loop.now(), model, n_instances))

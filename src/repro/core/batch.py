@@ -1,0 +1,102 @@
+"""Batch mode (paper §4.4): a batch job runs as a DEDICATED cluster job that
+loads the model solely for that task and processes the whole input file
+offline — no shared online server, cold start amortized over the batch."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+
+from repro.core.clock import Future
+from repro.core.instances import ModelInstance, SimRequest
+
+_batch_ids = itertools.count(1)
+
+
+class BatchState(str, Enum):
+    VALIDATING = "validating"
+    QUEUED = "queued"
+    IN_PROGRESS = "in_progress"
+    COMPLETED = "completed"
+    FAILED = "failed"
+
+
+@dataclass
+class BatchJob:
+    batch_id: str
+    model: str
+    total: int
+    state: BatchState = BatchState.VALIDATING
+    completed: int = 0
+    output_tokens: int = 0
+    submit_time: float = 0.0
+    start_time: float = 0.0
+    finish_time: float = 0.0
+    future: Future = field(default_factory=Future)
+
+    def status(self) -> dict:
+        return {"batch_id": self.batch_id, "state": self.state.value,
+                "completed": self.completed, "total": self.total,
+                "output_tokens": self.output_tokens}
+
+
+class BatchService:
+    """The /v1/batches endpoint backend."""
+
+    def __init__(self, loop, router, endpoints, offline_slots: int = 256):
+        self.loop = loop
+        self.router = router
+        self.endpoints = endpoints
+        self.offline_slots = offline_slots
+        self.jobs: dict[str, BatchJob] = {}
+
+    def submit_batch(self, model: str, requests: list[dict],
+                     endpoint_id: str | None = None) -> BatchJob:
+        """requests: JSONL-like dicts with request_id/prompt_tokens/max_tokens."""
+        bid = f"batch-{next(_batch_ids)}"
+        job = BatchJob(batch_id=bid, model=model, total=len(requests),
+                       submit_time=self.loop.now())
+        self.jobs[bid] = job
+        if not requests:
+            job.state = BatchState.FAILED
+            job.future.set_error(ValueError("empty batch"))
+            return job
+        ep_id = endpoint_id or self.router.select_endpoint(model)
+        ep = self.endpoints[ep_id]
+        dep = ep.deployments[model]
+        job.state = BatchState.QUEUED
+
+        # Dedicated instance: no idle timeout (released explicitly at the end),
+        # offline-sized batch slots, loads the model solely for this job.
+        inst = ModelInstance(
+            self.loop, model, dep.cost, ep.scheduler,
+            num_nodes=dep.nodes_per_instance, max_slots=self.offline_slots,
+            idle_timeout=None)
+
+        def on_done(result):
+            job.completed += 1
+            job.output_tokens += result["output_tokens"]
+            if job.state == BatchState.QUEUED:
+                job.state = BatchState.IN_PROGRESS
+            if job.completed >= job.total:
+                job.state = BatchState.COMPLETED
+                job.finish_time = self.loop.now()
+                inst.release()
+                job.future.set_result(job.status())
+
+        def on_first(t):
+            if not job.start_time:
+                job.start_time = t
+                job.state = BatchState.IN_PROGRESS
+
+        for r in requests:
+            sreq = SimRequest(request_id=r["request_id"],
+                              prompt_tokens=int(r["prompt_tokens"]),
+                              max_tokens=int(r["max_tokens"]))
+            inst.submit(sreq, on_first, on_done)
+        return job
+
+    def status(self, batch_id: str) -> dict:
+        job = self.jobs.get(batch_id)
+        return job.status() if job else {"batch_id": batch_id,
+                                         "state": "not_found"}

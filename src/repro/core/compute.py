@@ -1,0 +1,312 @@
+"""Globus-Compute analogue: a FaaS layer between the gateway and clusters.
+
+* ``ComputeEndpoint`` runs at a cluster: it executes ONLY pre-registered
+  functions (paper §3.2.2 security), acquires nodes through the cluster's
+  scheduler, manages model instances (cold start, hot nodes, auto-scaling,
+  restart-on-failure) and distributes tasks across instances.
+* ``ComputeClient`` is the cloud service: it relays tasks to endpoints and
+  results back, with a network hop each way, a connection cache
+  (paper Optimization 2), and futures instead of polling (Optimization 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.autoscale import AutoScaler, AutoScalePolicy
+from repro.core.clock import Future
+from repro.core.instances import InstanceState, ModelInstance, SimRequest
+from repro.serving.costmodel import InstanceCost
+
+
+class ComputeError(Exception):
+    pass
+
+
+@dataclass
+class ModelDeployment:
+    """Admin configuration of one model on one endpoint."""
+    model: str
+    cost: InstanceCost
+    nodes_per_instance: int = 1
+    max_slots: int = 48                    # max parallel tasks within a node
+    idle_timeout: float = 7200.0           # paper: release after 2 h idle
+    autoscale: AutoScalePolicy = field(default_factory=AutoScalePolicy)
+    walltime: float | None = None
+    result_cpu: float = 0.0                # per-instance result serialization
+
+
+class ComputeEndpoint:
+    def __init__(self, loop, endpoint_id: str, scheduler,
+                 deployments: dict[str, ModelDeployment]):
+        self.loop = loop
+        self.endpoint_id = endpoint_id
+        self.scheduler = scheduler
+        self.deployments = deployments
+        self.instances: dict[str, list[ModelInstance]] = \
+            {m: [] for m in deployments}
+        self._functions: dict[str, object] = {}
+        self._inflight: dict[str, tuple] = {}   # request_id -> (model, sreq, fut)
+        self._autoscalers = {m: AutoScaler(loop, d.autoscale)
+                             for m, d in deployments.items()}
+        self.stats = {"tasks": 0, "restarts": 0, "requeued": 0}
+        self.register_function("generate", self._fn_generate)
+        self.register_function("embed", self._fn_embed)
+        self.autoscale_interval = 5.0
+        self._autoscale_tick()
+
+    # -- security: pre-registered functions only ---------------------------------
+    def register_function(self, name: str, fn):
+        self._functions[name] = fn
+
+    def execute(self, fn_name: str, payload: dict) -> Future:
+        fn = self._functions.get(fn_name)
+        if fn is None:
+            fut = Future()
+            fut.set_error(ComputeError(
+                f"function {fn_name!r} is not registered on {self.endpoint_id}"))
+            return fut
+        self.stats["tasks"] += 1
+        return fn(payload)
+
+    # -- status (for /jobs and federation) -----------------------------------------
+    def model_states(self, model: str) -> list[str]:
+        return [i.state.value for i in self.instances.get(model, [])
+                if i.alive]
+
+    def hosts(self, model: str) -> bool:
+        return model in self.deployments
+
+    def load_for(self, model: str) -> int:
+        return sum(i.load for i in self.instances.get(model, []) if i.alive)
+
+    # -- handlers --------------------------------------------------------------------
+    def _fn_generate(self, payload: dict) -> Future:
+        fut = Future()
+        model = payload["model"]
+        if model not in self.deployments:
+            fut.set_error(ComputeError(
+                f"model {model!r} not deployed on {self.endpoint_id}"))
+            return fut
+        sreq = SimRequest(request_id=payload["request_id"],
+                          prompt_tokens=int(payload["prompt_tokens"]),
+                          max_tokens=int(payload["max_tokens"]),
+                          user=payload.get("user", "anonymous"))
+        self._inflight[sreq.request_id] = (model, sreq, fut)
+        self._dispatch(model, sreq, fut)
+        return fut
+
+    def _fn_embed(self, payload: dict) -> Future:
+        # embeddings are one-step tasks: model as generate with 1 output token
+        payload = dict(payload)
+        payload["max_tokens"] = 1
+        return self._fn_generate(payload)
+
+    # -- instance management ------------------------------------------------------
+    def _autoscale_tick(self):
+        """Periodic demand check: scaling must also react while requests sit
+        queued on saturated/loading instances (not only at dispatch time)."""
+        for model in self.deployments:
+            alive = self._alive_instances(model)
+            if not alive:
+                continue
+            scaler = self._autoscalers[model]
+            dep = self.deployments[model]
+            if scaler.should_scale_up(model, alive,
+                                      self.scheduler.available_nodes(),
+                                      dep.nodes_per_instance):
+                self._spawn_instance(model)
+                scaler.record_scale(model, len(self._alive_instances(model)))
+            self._balance_queues(model)
+        self.loop.call_after(self.autoscale_interval, self._autoscale_tick,
+                             daemon=True)
+
+    def _on_instance_hot(self, inst: ModelInstance):
+        self._balance_queues(inst.model_name)
+
+    def _balance_queues(self, model: str):
+        """Work stealing across HOT instances: queued work never sits on one
+        saturated engine while another has spare capacity. (Work is never
+        parked on cold instances — that would stall it for the whole cold
+        start; cold instances pull work here once they turn hot.)"""
+        hot = [i for i in self._alive_instances(model)
+               if i.state == InstanceState.HOT]
+        if len(hot) < 2 or not any(i.engine.queue_depth for i in hot):
+            return
+        entries = []
+        for i in hot:
+            entries.extend(i.engine.queue)
+            i.engine.queue.clear()
+        for e in entries:               # round-robin by current effective load
+            target = min(hot, key=lambda i: i.engine.load)
+            target.engine.submit(*e)
+
+    def _alive_instances(self, model: str) -> list[ModelInstance]:
+        return [i for i in self.instances[model] if i.alive]
+
+    def _spawn_instance(self, model: str) -> ModelInstance:
+        dep = self.deployments[model]
+        inst = ModelInstance(
+            self.loop, model, dep.cost, self.scheduler,
+            num_nodes=dep.nodes_per_instance, max_slots=dep.max_slots,
+            idle_timeout=dep.idle_timeout, walltime=dep.walltime,
+            result_cpu=dep.result_cpu,
+            on_released=self._on_instance_gone,
+            on_failed=self._on_instance_failed,
+            on_hot=self._on_instance_hot)
+        self.instances[model].append(inst)
+        return inst
+
+    def _dispatch(self, model: str, sreq: SimRequest, fut: Future):
+        alive = self._alive_instances(model)
+        if not alive:
+            inst = self._spawn_instance(model)
+        else:
+            # least-loaded HOT instance; cold instances receive work only by
+            # stealing once hot (or if nothing is hot yet)
+            hot = [i for i in alive if i.state == InstanceState.HOT]
+            pool = hot or alive
+            inst = min(pool, key=lambda i: i.load)
+            scaler = self._autoscalers[model]
+            dep = self.deployments[model]
+            if scaler.should_scale_up(model, alive,
+                                      self.scheduler.available_nodes(),
+                                      dep.nodes_per_instance):
+                self._spawn_instance(model)
+                scaler.record_scale(model, len(self._alive_instances(model)))
+
+        first_holder = {}
+
+        def on_first(t):
+            first_holder["t"] = t
+
+        def on_done(result):
+            self._inflight.pop(sreq.request_id, None)
+            result = dict(result)
+            result["first_token_time"] = first_holder.get("t", result["finish_time"])
+            result["endpoint"] = self.endpoint_id
+            fut.set_result(result)
+
+        inst.submit(sreq, on_first, on_done)
+
+    # -- fault tolerance ------------------------------------------------------------
+    def _on_instance_gone(self, inst: ModelInstance, inflight):
+        self.instances[inst.model_name] = \
+            [i for i in self.instances[inst.model_name] if i is not inst]
+        self._requeue(inst.model_name, inflight)
+
+    def _on_instance_failed(self, inst: ModelInstance, inflight):
+        """Process-management restart (paper §3.2.2 fault tolerance): drop the
+        failed instance and resubmit its in-flight requests; inference tasks
+        are idempotent so re-execution is safe."""
+        self.stats["restarts"] += 1
+        self._on_instance_gone(inst, inflight)
+
+    def _requeue(self, model: str, inflight):
+        for sreq in inflight:
+            entry = self._inflight.get(sreq.request_id)
+            if entry is None:
+                continue
+            self.stats["requeued"] += 1
+            _, sreq, fut = entry
+            self.loop.call_after(0.0, self._dispatch, model, sreq, fut)
+
+
+class _Relay:
+    """Serialized relay capacity of the cloud FaaS service: each task consumes
+    ``cpu`` seconds on one of ``workers`` relay workers (both directions).
+    Models the paper's §5.3.2 observation that overall scaling 'is currently
+    limited by the ability of Globus Compute to scale and route requests'."""
+
+    def __init__(self, loop, workers: int, cpu: float):
+        self.loop = loop
+        self.workers = workers
+        self.cpu = cpu
+        self.busy = 0
+        self.queue: list = []
+
+    def submit(self, fn):
+        self.queue.append(fn)
+        self._pump()
+
+    def _pump(self):
+        while self.busy < self.workers and self.queue:
+            fn = self.queue.pop(0)
+            self.busy += 1
+
+            def _run(fn=fn):
+                self.busy -= 1
+                fn()
+                self._pump()
+
+            self.loop.call_after(self.cpu, _run)
+
+
+class ComputeClient:
+    """The cloud FaaS service: gateway -> (hop) -> endpoint -> (hop) -> gateway."""
+
+    def __init__(self, loop, dispatch_latency: float = 0.15,
+                 result_latency: float = 0.15,
+                 connection_setup: float = 1.5,
+                 connection_cache: bool = True,
+                 relay_workers: int | None = None,
+                 relay_cpu: float = 0.02):
+        self.loop = loop
+        self.dispatch_latency = dispatch_latency
+        self.result_latency = result_latency
+        self.connection_setup = connection_setup
+        self.connection_cache = connection_cache
+        self.relay = (_Relay(loop, relay_workers, relay_cpu)
+                      if relay_workers else None)
+        self._endpoints: dict[str, ComputeEndpoint] = {}
+        self._connected: set[str] = set()
+        self.tasks_in_cloud = 0
+        self.max_tasks_in_cloud = 0
+
+    def register_endpoint(self, endpoint: ComputeEndpoint):
+        self._endpoints[endpoint.endpoint_id] = endpoint
+
+    @property
+    def endpoints(self) -> dict[str, ComputeEndpoint]:
+        return self._endpoints
+
+    def submit(self, endpoint_id: str, fn_name: str, payload: dict) -> Future:
+        fut = Future()
+        ep = self._endpoints.get(endpoint_id)
+        if ep is None:
+            fut.set_error(ComputeError(f"unknown endpoint {endpoint_id!r}"))
+            return fut
+        hop = self.dispatch_latency
+        if endpoint_id not in self._connected or not self.connection_cache:
+            hop += self.connection_setup       # Optimization 2: cache this
+            if self.connection_cache:
+                self._connected.add(endpoint_id)
+        self.tasks_in_cloud += 1
+        self.max_tasks_in_cloud = max(self.max_tasks_in_cloud,
+                                      self.tasks_in_cloud)
+
+        def _deliver():
+            inner = ep.execute(fn_name, payload)
+
+            def _back(f):
+                def _resolve():
+                    self.tasks_in_cloud -= 1
+                    inner.chain(fut)
+
+                def _hop_back():
+                    self.loop.call_after(self.result_latency, _resolve)
+
+                if self.relay is not None:
+                    self.relay.submit(_hop_back)     # result leg also relays
+                else:
+                    _hop_back()
+
+            inner.add_done_callback(_back)
+
+        def _hop_out():
+            self.loop.call_after(hop, _deliver)
+
+        if self.relay is not None:
+            self.relay.submit(_hop_out)
+        else:
+            _hop_out()
+        return fut

@@ -1,0 +1,86 @@
+"""Fault tolerance: failure injection (nodes, instances, endpoints) and the
+health monitor that feeds endpoint liveness into the federation router.
+
+Instance/process restart + in-flight requeue lives in ComputeEndpoint
+(idempotent inference tasks make re-execution safe); this module provides the
+chaos and the detection."""
+from __future__ import annotations
+
+import random
+
+
+class FailureInjector:
+    def __init__(self, loop, seed: int = 0):
+        self.loop = loop
+        self.rng = random.Random(seed)
+        self.injected: list[tuple[float, str]] = []
+
+    # -- targeted ---------------------------------------------------------------
+    def fail_node_at(self, scheduler, node_id: int, t: float,
+                     restore_after: float | None = None):
+        def _fail():
+            self.injected.append((self.loop.now(), f"node:{scheduler.name}/{node_id}"))
+            scheduler.fail_node(node_id)
+            if restore_after is not None:
+                self.loop.call_after(restore_after, scheduler.restore_node,
+                                     node_id)
+        self.loop.call_at(t, _fail)
+
+    def fail_instance_at(self, endpoint, model: str, t: float,
+                         which: int = 0):
+        def _fail():
+            alive = [i for i in endpoint.instances.get(model, []) if i.alive]
+            if which < len(alive):
+                self.injected.append(
+                    (self.loop.now(), f"instance:{alive[which].instance_id}"))
+                alive[which].fail()
+        self.loop.call_at(t, _fail)
+
+    def endpoint_outage(self, router, endpoint_id: str, t: float,
+                        duration: float):
+        def _down():
+            self.injected.append((self.loop.now(), f"endpoint:{endpoint_id}"))
+            router.set_healthy(endpoint_id, False)
+            self.loop.call_after(duration, router.set_healthy, endpoint_id,
+                                 True)
+        self.loop.call_at(t, _down)
+
+    # -- stochastic (MTBF-style, for scale studies) -------------------------------
+    def random_node_failures(self, scheduler, rate_per_node_hour: float,
+                             horizon: float, restore_after: float = 600.0):
+        """Poisson failures: at 1000+ nodes even small per-node rates mean
+        failures every few minutes — the control plane must absorb them."""
+        lam = rate_per_node_hour * scheduler.num_nodes / 3600.0
+        t = 0.0
+        while True:
+            t += self.rng.expovariate(lam) if lam > 0 else horizon
+            if t >= horizon:
+                break
+            node = self.rng.randrange(scheduler.num_nodes)
+            self.fail_node_at(scheduler, node, t, restore_after=restore_after)
+
+
+class HealthMonitor:
+    """Heartbeat poller: marks endpoints unhealthy in the router when their
+    scheduler stops responding (simulated via mark_down) and spawns
+    replacement capacity checks."""
+
+    def __init__(self, loop, router, interval: float = 15.0):
+        self.loop = loop
+        self.router = router
+        self.interval = interval
+        self._down: set[str] = set()
+        self.checks = 0
+        self._tick()
+
+    def mark_down(self, endpoint_id: str):
+        self._down.add(endpoint_id)
+
+    def mark_up(self, endpoint_id: str):
+        self._down.discard(endpoint_id)
+
+    def _tick(self):
+        self.checks += 1
+        for ep_id in list(self.router.endpoints):
+            self.router.set_healthy(ep_id, ep_id not in self._down)
+        self.loop.call_after(self.interval, self._tick, daemon=True)

@@ -1,0 +1,73 @@
+"""Federation layer: the §4.5 priority-based endpoint-selection algorithm.
+
+  1. prefer an endpoint where the model is already running or queued/starting
+     (low latency: hot instances exist);
+  2. else an endpoint whose cluster has enough free nodes to start one;
+  3. else the FIRST endpoint configured for the model (registry order).
+
+Endpoint health (faults.py) filters dead endpoints out before the scan.
+"""
+from __future__ import annotations
+
+from repro.core.compute import ComputeEndpoint
+
+
+class FederationError(Exception):
+    pass
+
+
+class FederationRouter:
+    def __init__(self, endpoints: dict[str, ComputeEndpoint],
+                 registry: dict[str, list[str]]):
+        """registry: model -> endpoint ids in priority (configuration) order."""
+        self.endpoints = endpoints
+        self.registry = registry
+        self._healthy: dict[str, bool] = {e: True for e in endpoints}
+        self.decisions: list[tuple[str, str, str]] = []   # (model, ep, rule)
+
+    # -- health feed (from HealthMonitor) ----------------------------------------
+    def set_healthy(self, endpoint_id: str, healthy: bool):
+        self._healthy[endpoint_id] = healthy
+
+    def _candidates(self, model: str) -> list[str]:
+        eps = [e for e in self.registry.get(model, ())
+               if self._healthy.get(e, False)
+               and self.endpoints[e].hosts(model)]
+        if not eps:
+            raise FederationError(f"no healthy endpoint hosts {model!r}")
+        return eps
+
+    # -- the §4.5 algorithm ---------------------------------------------------------
+    def select_endpoint(self, model: str, exclude=()) -> str:
+        eps = self._candidates(model)
+        if exclude:
+            eps = [e for e in eps if e not in exclude] or eps
+        # rule 1: model already running or queued somewhere
+        for e in eps:
+            states = self.endpoints[e].model_states(model)
+            if any(s in ("running", "starting", "queued") for s in states):
+                self.decisions.append((model, e, "active-instance"))
+                return e
+        # rule 2: a cluster with available nodes
+        for e in eps:
+            ep = self.endpoints[e]
+            need = ep.deployments[model].nodes_per_instance
+            if ep.scheduler.available_nodes() >= need:
+                self.decisions.append((model, e, "free-nodes"))
+                return e
+        # rule 3: first configured endpoint
+        self.decisions.append((model, eps[0], "configured-order"))
+        return eps[0]
+
+    # -- /jobs view across the federation -----------------------------------------
+    def jobs_status(self) -> dict:
+        out = {}
+        for model, eps in self.registry.items():
+            entries = []
+            for e in eps:
+                if e in self.endpoints:
+                    for s in self.endpoints[e].model_states(model):
+                        entries.append({"endpoint": e, "state": s})
+            out[model] = entries or [{"endpoint": eps[0] if eps else "?",
+                                      "state": "cold"}]
+        return out

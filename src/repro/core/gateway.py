@@ -1,0 +1,304 @@
+"""The Inference Gateway: async OpenAI-compatible front end (paper §3.1).
+
+Responsibilities reproduced from the paper: identity validation (with the
+Optimization-2 introspection cache), request validation, per-user rate
+limiting, response caching, conversion of API requests into compute tasks,
+activity logging, and the /jobs status endpoint.
+
+The worker pool models the Gunicorn/Uvicorn capacity. Three paper
+optimizations are config toggles so benchmarks can ablate them:
+  * Optimization 1 — ``poll_interval=0`` uses futures; ``>0`` polls task
+    status on a timer (adds up to one interval of latency per request).
+  * Optimization 2 — ``auth_cache`` on the CachingAuthClient +
+    ``connection_cache`` on the ComputeClient.
+  * Optimization 3 — ``blocking_workers=False`` (async Django-Ninja style:
+    workers release after dispatch) vs ``True`` (sync Django-REST style:
+    a worker is held for the request's whole lifetime; the paper's original
+    deployment processed only nine requests at a time).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.auth import AccessPolicy, AuthError, CachingAuthClient, Identity
+from repro.core.clock import Future
+from repro.core.metrics import MetricsLog
+
+VALID_ENDPOINTS = ("chat/completions", "completions", "embeddings")
+
+
+class GatewayError(Exception):
+    pass
+
+
+@dataclass
+class GatewayConfig:
+    workers: int = 64                  # gunicorn workers x threads
+    request_cpu_time: float = 0.002    # per-request gateway handling cost (s)
+    blocking_workers: bool = False     # Optimization 3 toggle (True = sync)
+    poll_interval: float = 0.0         # Optimization 1 toggle (>0 = polling)
+    rate_limit_per_user: float = float("inf")   # req/s token bucket
+    rate_burst: float = 100.0
+    response_cache_size: int = 4096
+    max_queue: int = 1_000_000
+    # straggler mitigation (off by default): if a dispatched request has not
+    # completed after this many seconds, hedge a duplicate to a DIFFERENT
+    # endpoint; first completion wins (inference is idempotent)
+    hedge_after: float | None = None
+
+
+class RateLimiter:
+    """Per-user token bucket."""
+
+    def __init__(self, loop, rate: float, burst: float):
+        self.loop = loop
+        self.rate = rate
+        self.burst = burst
+        self._state: dict[str, tuple[float, float]] = {}   # user -> (tokens, t)
+
+    def allow(self, user: str) -> bool:
+        if self.rate == float("inf"):
+            return True
+        now = self.loop.now()
+        tokens, t = self._state.get(user, (self.burst, now))
+        tokens = min(self.burst, tokens + (now - t) * self.rate)
+        if tokens < 1.0:
+            self._state[user] = (tokens, now)
+            return False
+        self._state[user] = (tokens - 1.0, now)
+        return True
+
+
+class ResponseCache:
+    """LRU cache for deterministic (temperature=0) repeated requests."""
+
+    def __init__(self, size: int):
+        self.size = size
+        self._d: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(req: dict):
+        if req.get("temperature", 0.0) != 0.0:
+            return None
+        return (req["model"], req.get("prompt_hash", req.get("prompt_tokens")),
+                req.get("max_tokens"))
+
+    def get(self, key):
+        if key is None:
+            return None
+        v = self._d.get(key)
+        if v is not None:
+            self.hits += 1
+            self._d.pop(key)
+            self._d[key] = v          # move to back
+        else:
+            self.misses += 1
+        return v
+
+    def put(self, key, value):
+        if key is None:
+            return
+        if len(self._d) >= self.size:
+            self._d.pop(next(iter(self._d)))
+        self._d[key] = value
+
+
+class WorkerPool:
+    """M/D/c model of the API server's worker capacity."""
+
+    def __init__(self, loop, workers: int, service_time: float,
+                 max_queue: int = 1_000_000):
+        self.loop = loop
+        self.workers = workers
+        self.service_time = service_time
+        self.max_queue = max_queue
+        self.busy = 0
+        self.queue: deque = deque()
+        self.rejected = 0
+        self.max_depth = 0
+
+    def submit(self, fn) -> bool:
+        """fn(release) runs when a worker is free; fn MUST eventually call
+        release() to return the worker."""
+        if len(self.queue) >= self.max_queue:
+            self.rejected += 1
+            return False
+        self.queue.append(fn)
+        self.max_depth = max(self.max_depth, len(self.queue))
+        self._pump()
+        return True
+
+    def _pump(self):
+        while self.busy < self.workers and self.queue:
+            fn = self.queue.popleft()
+            self.busy += 1
+
+            def _run(fn=fn):
+                done = {"v": False}
+
+                def release():
+                    if not done["v"]:
+                        done["v"] = True
+                        self.busy -= 1
+                        self._pump()
+
+                fn(release)
+
+            # the worker spends service_time of CPU before the handler logic
+            self.loop.call_after(self.service_time, _run)
+
+
+class InferenceGateway:
+    def __init__(self, loop, auth: CachingAuthClient, router, compute,
+                 policy: AccessPolicy | None = None,
+                 config: GatewayConfig | None = None,
+                 metrics: MetricsLog | None = None):
+        self.loop = loop
+        self.auth = auth
+        self.router = router
+        self.compute = compute
+        self.policy = policy or AccessPolicy()
+        self.config = config or GatewayConfig()
+        self.metrics = metrics or MetricsLog()
+        self.pool = WorkerPool(loop, self.config.workers,
+                               self.config.request_cpu_time,
+                               self.config.max_queue)
+        self.rate = RateLimiter(loop, self.config.rate_limit_per_user,
+                                self.config.rate_burst)
+        self.cache = ResponseCache(self.config.response_cache_size)
+        self._ids = itertools.count(1)
+        self.hedges = 0
+
+    # -- public API -------------------------------------------------------------
+    def submit(self, token: str, request: dict) -> Future:
+        """request: {model, prompt_tokens, max_tokens, api (optional),
+        user hint ignored — identity comes from the token}."""
+        fut = Future()
+        rid = request.get("request_id") or f"gw-{next(self._ids)}"
+        request = dict(request, request_id=rid)
+        arrival = self.loop.now()
+
+        api = request.get("api", "chat/completions")
+        if api not in VALID_ENDPOINTS:
+            fut.set_error(GatewayError(f"unknown endpoint {api!r}"))
+            return fut
+        if not self._validate(request):
+            fut.set_error(GatewayError("invalid request payload"))
+            return fut
+
+        def handler(release):
+            def finish_ok(result, cached=False):
+                self.metrics.on_finish(rid, self.loop.now(),
+                                       result.get("output_tokens", 0),
+                                       cached=cached)
+                if self.config.blocking_workers:
+                    release()
+                fut.set_result(result)
+
+            def finish_err(err):
+                self.metrics.on_finish(rid, self.loop.now(), ok=False,
+                                       error=str(err))
+                release()
+                fut.set_error(err)
+
+            def after_auth(ident):
+                if isinstance(ident, AuthError):
+                    return finish_err(ident)
+                model = request["model"]
+                self.metrics.on_arrival(rid, ident.user, model, arrival,
+                                        request.get("prompt_tokens", 0))
+                if not self.policy.allowed(ident, model):
+                    return finish_err(GatewayError(
+                        f"user {ident.user} lacks access to {model}"))
+                if not self.rate.allow(ident.user):
+                    return finish_err(GatewayError("rate limited"))
+                ck = self.cache.key(request)
+                hit = self.cache.get(ck)
+                if hit is not None:
+                    return finish_ok(dict(hit), cached=True)
+                payload = {"request_id": rid, "model": model,
+                           "user": ident.user,
+                           "prompt_tokens": request["prompt_tokens"],
+                           "max_tokens": request["max_tokens"]}
+                fn = "embed" if api == "embeddings" else "generate"
+                state = {"done": False}
+
+                def dispatch(exclude=()):
+                    try:
+                        ep = self.router.select_endpoint(model,
+                                                         exclude=exclude)
+                    except Exception as e:
+                        if not exclude:
+                            finish_err(e)
+                        return None
+                    self.metrics.on_dispatch(rid, ep, self.loop.now())
+                    pl = dict(payload) if exclude else payload
+                    if exclude:     # hedge copies get distinct task ids
+                        pl["request_id"] = f"{rid}~hedge"
+                    task = self.compute.submit(ep, fn, pl)
+
+                    def on_task(f):
+                        if state["done"]:
+                            return              # a racer already finished
+                        state["done"] = True
+                        if f.error is not None:
+                            return finish_err(f.error)
+                        res = f.result()
+                        self.metrics.on_first_token(
+                            rid, res.get("first_token_time",
+                                         self.loop.now()))
+                        self.cache.put(ck, res)
+                        finish_ok(res)
+
+                    if self.config.poll_interval > 0:
+                        self._poll(task, on_task)   # pre-Optimization-1 mode
+                    else:
+                        task.add_done_callback(on_task)
+                    return ep
+
+                first_ep = dispatch()
+                # Optimization 3: async workers release after dispatch
+                if not self.config.blocking_workers:
+                    release()
+                if first_ep is not None and self.config.hedge_after:
+                    def maybe_hedge():
+                        if not state["done"]:
+                            self.hedges += 1
+                            dispatch(exclude=(first_ep,))
+
+                    self.loop.call_after(self.config.hedge_after,
+                                         maybe_hedge, daemon=True)
+
+            self.auth.validate(token, after_auth)
+
+        if not self.pool.submit(handler):
+            fut.set_error(GatewayError("gateway queue full"))
+        return fut
+
+    def jobs_status(self) -> dict:
+        """The /jobs endpoint (paper §4.3)."""
+        return self.router.jobs_status()
+
+    # -- helpers ---------------------------------------------------------------
+    @staticmethod
+    def _validate(request: dict) -> bool:
+        try:
+            return (request["model"]
+                    and int(request["prompt_tokens"]) >= 0
+                    and int(request["max_tokens"]) >= 1)
+        except (KeyError, TypeError, ValueError):
+            return False
+
+    def _poll(self, task: Future, cb):
+        """Pre-Optimization-1 result retrieval: check task status every
+        ``poll_interval`` seconds."""
+        def tick():
+            if task.done():
+                cb(task)
+            else:
+                self.loop.call_after(self.config.poll_interval, tick)
+        self.loop.call_after(self.config.poll_interval, tick)

@@ -1,0 +1,277 @@
+"""Model instances: cold-start pipeline, hot-node idle release, and the
+discrete-event continuous-batching engine model used for simulated (large)
+models. Real tiny models plug in through the same interface via
+``repro.serving.engine`` adapters (examples/).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+
+from repro.serving.costmodel import InstanceCost
+
+_inst_ids = itertools.count(1)
+
+
+@dataclass
+class SimRequest:
+    """Control-plane view of a request: token counts only."""
+    request_id: str
+    prompt_tokens: int
+    max_tokens: int
+    user: str = "anonymous"
+
+
+class InstanceState(str, Enum):
+    PENDING = "queued"       # batch job waiting for nodes
+    LOADING = "starting"     # nodes acquired, weights loading
+    HOT = "running"          # serving
+    RELEASED = "released"
+    FAILED = "failed"
+
+
+class SimEngine:
+    """DES model of a continuous-batching engine: per engine-step, every
+    running sequence gains one token; newly admitted sequences add their
+    prefill time to the step they join. Mirrors the real engine's
+    iteration-level scheduling."""
+
+    def __init__(self, loop, cost: InstanceCost, max_slots: int = 48,
+                 on_idle=None, on_busy=None):
+        self.loop = loop
+        self.cost = cost
+        self.max_slots = max_slots
+        self.on_idle = on_idle
+        self.on_busy = on_busy
+        self.queue: list[tuple[SimRequest, object, object]] = []
+        self.running: list[dict] = []
+        self._step_ev = None
+        self.total_output_tokens = 0
+        self.total_finished = 0
+        self.halted = False
+
+    # -- load signals ----------------------------------------------------------
+    @property
+    def load(self) -> int:
+        return len(self.queue) + len(self.running)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def saturated(self) -> bool:
+        return len(self.running) >= self.max_slots and bool(self.queue)
+
+    # -- ops -----------------------------------------------------------------------
+    def submit(self, sreq: SimRequest, on_first_token, on_done):
+        if self.halted:
+            raise RuntimeError("engine halted")
+        self.queue.append((sreq, on_first_token, on_done))
+        if self.on_busy:
+            self.on_busy()
+        self._kick()
+
+    def halt(self) -> list[SimRequest]:
+        """Stop serving (failure/release); returns in-flight requests for
+        requeue."""
+        self.halted = True
+        if self._step_ev:
+            self.loop.cancel(self._step_ev)
+            self._step_ev = None
+        inflight = [r["req"] for r in self.running] + \
+            [q[0] for q in self.queue]
+        self.running.clear()
+        self.queue.clear()
+        return inflight
+
+    # -- internals ------------------------------------------------------------
+    def _kick(self):
+        if self._step_ev is None and not self.halted:
+            self._schedule_step()
+
+    def _schedule_step(self):
+        prefill_cost = 0.0
+        while self.queue and len(self.running) < self.max_slots:
+            sreq, on_first, on_done = self.queue.pop(0)
+            prefill_cost += self.cost.prefill_time(sreq.prompt_tokens)
+            self.running.append({"req": sreq, "produced": 0,
+                                 "on_first": on_first, "on_done": on_done})
+        if not self.running:
+            self._step_ev = None
+            if self.on_idle:
+                self.on_idle()
+            return
+        batch = len(self.running)
+        ctx = sum(r["req"].prompt_tokens + r["produced"]
+                  for r in self.running) / batch
+        dt = self.cost.decode_step_time(batch, ctx=max(int(ctx), 1)) \
+            + prefill_cost
+        self._step_ev = self.loop.call_after(dt, self._finish_step)
+
+    def _finish_step(self):
+        self._step_ev = None
+        if self.halted:
+            return
+        now = self.loop.now()
+        still = []
+        for r in self.running:
+            r["produced"] += 1
+            self.total_output_tokens += 1
+            if r["produced"] == 1 and r["on_first"]:
+                r["on_first"](now)
+            if r["produced"] >= r["req"].max_tokens:
+                self.total_finished += 1
+                if r["on_done"]:
+                    r["on_done"]({"request_id": r["req"].request_id,
+                                  "output_tokens": r["produced"],
+                                  "finish_time": now})
+            else:
+                still.append(r)
+        self.running = still
+        self._schedule_step()
+
+
+class ModelInstance:
+    """One serving job: scheduler job -> weight load -> hot engine."""
+
+    def __init__(self, loop, model_name: str, cost: InstanceCost,
+                 scheduler, *, num_nodes: int = 1, max_slots: int = 48,
+                 idle_timeout: float = 7200.0, on_released=None,
+                 on_failed=None, on_hot=None, walltime: float | None = None,
+                 result_cpu: float = 0.0):
+        self.loop = loop
+        self.model_name = model_name
+        self.cost = cost
+        self.scheduler = scheduler
+        self.idle_timeout = idle_timeout
+        # per-instance Globus-worker result serialization (packaging +
+        # upload happen on ONE endpoint worker process per instance)
+        self.result_cpu = result_cpu
+        self._result_busy = 0
+        self._result_q: list = []
+        self.instance_id = f"{model_name}#{next(_inst_ids)}"
+        self.state = InstanceState.PENDING
+        self.on_released = on_released
+        self.on_failed = on_failed
+        self.on_hot = on_hot
+        self._pending: list[tuple[SimRequest, object, object]] = []
+        self._idle_ev = None
+        self.engine = SimEngine(loop, cost, max_slots=max_slots,
+                                on_idle=self._went_idle,
+                                on_busy=self._went_busy)
+        self.hot_since = None
+        self.created = loop.now()
+        self.job = scheduler.submit(num_nodes, on_start=self._nodes_ready,
+                                    on_end=self._job_ended,
+                                    walltime=walltime)
+
+    # -- lifecycle ------------------------------------------------------------
+    def _nodes_ready(self, job):
+        if self.state != InstanceState.PENDING:
+            return
+        self.state = InstanceState.LOADING
+        self.loop.call_after(self.cost.load_time(), self._loaded)
+
+    def _loaded(self):
+        if self.state != InstanceState.LOADING:
+            return
+        self.state = InstanceState.HOT
+        self.hot_since = self.loop.now()
+        for sreq, on_first, on_done in self._pending:
+            self.engine.submit(sreq, on_first, on_done)
+        self._pending.clear()
+        if self.on_hot:
+            self.on_hot(self)
+        if self.engine.load == 0:
+            self._went_idle()
+
+    def _job_ended(self, job):
+        if self.state in (InstanceState.RELEASED, InstanceState.FAILED):
+            return
+        failed = job.state.value == "failed"
+        self.fail() if failed else self.release()
+
+    # -- serving -----------------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        return self.state in (InstanceState.PENDING, InstanceState.LOADING,
+                              InstanceState.HOT)
+
+    @property
+    def load(self) -> int:
+        return len(self._pending) + self.engine.load
+
+    def submit(self, sreq: SimRequest, on_first_token, on_done):
+        assert self.alive, f"submit to {self.state} instance"
+        self._cancel_idle()
+        if self.result_cpu > 0:
+            on_done = self._serialized(on_done)
+        if self.state == InstanceState.HOT:
+            self.engine.submit(sreq, on_first_token, on_done)
+        else:
+            self._pending.append((sreq, on_first_token, on_done))
+
+    def _serialized(self, on_done):
+        """Charge ``result_cpu`` per completion on the instance's single
+        endpoint-worker thread before the result leaves the node."""
+        def wrapped(result):
+            self._result_q.append((on_done, result))
+            self._pump_results()
+        return wrapped
+
+    def _pump_results(self):
+        if self._result_busy or not self._result_q:
+            return
+        self._result_busy = 1
+        on_done, result = self._result_q.pop(0)
+
+        def _fire():
+            self._result_busy = 0
+            on_done(result)
+            self._pump_results()
+
+        self.loop.call_after(self.result_cpu, _fire)
+
+    # -- hot-node management (paper §3.2.2) ----------------------------------------
+    def _went_idle(self):
+        if self.state == InstanceState.HOT and self.idle_timeout is not None:
+            self._cancel_idle()
+            # daemon: housekeeping must not keep the event loop "busy"
+            self._idle_ev = self.loop.call_after(self.idle_timeout,
+                                                 self._idle_release,
+                                                 daemon=True)
+
+    def _went_busy(self):
+        self._cancel_idle()
+
+    def _cancel_idle(self):
+        if self._idle_ev is not None:
+            self.loop.cancel(self._idle_ev)
+            self._idle_ev = None
+
+    def _idle_release(self):
+        if self.state == InstanceState.HOT and self.engine.load == 0:
+            self.release()
+
+    # -- teardown ------------------------------------------------------------------
+    def release(self):
+        if not self.alive:
+            return
+        self.state = InstanceState.RELEASED
+        self._cancel_idle()
+        inflight = self.engine.halt() + [p[0] for p in self._pending]
+        self._pending.clear()
+        self.scheduler.release(self.job)
+        if self.on_released:
+            self.on_released(self, inflight)
+
+    def fail(self):
+        if not self.alive:
+            return
+        self.state = InstanceState.FAILED
+        self._cancel_idle()
+        inflight = self.engine.halt() + [p[0] for p in self._pending]
+        self._pending.clear()
+        if self.on_failed:
+            self.on_failed(self, inflight)

@@ -1,0 +1,95 @@
+"""Request metrics log + summary statistics (paper §5.1 metrics)."""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+
+@dataclass
+class RequestRecord:
+    request_id: str
+    user: str = ""
+    model: str = ""
+    endpoint: str = ""
+    arrival: float = 0.0
+    dispatched: float = 0.0
+    first_token: float = 0.0
+    finish: float = 0.0
+    prompt_tokens: int = 0
+    output_tokens: int = 0
+    ok: bool = True
+    error: str = ""
+    cached: bool = False
+
+    @property
+    def e2e(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+
+class MetricsLog:
+    """The gateway's PostgreSQL-activity-log analogue + live dashboard stats."""
+
+    def __init__(self):
+        self.records: list[RequestRecord] = []
+        self._open: dict[str, RequestRecord] = {}
+
+    # -- lifecycle hooks ------------------------------------------------------
+    def on_arrival(self, request_id, user, model, t, prompt_tokens=0):
+        r = RequestRecord(request_id=request_id, user=user, model=model,
+                          arrival=t, prompt_tokens=prompt_tokens)
+        self._open[request_id] = r
+        return r
+
+    def on_dispatch(self, request_id, endpoint, t):
+        r = self._open.get(request_id)
+        if r:
+            r.dispatched = t
+            r.endpoint = endpoint
+
+    def on_first_token(self, request_id, t):
+        r = self._open.get(request_id)
+        if r and not r.first_token:
+            r.first_token = t
+
+    def on_finish(self, request_id, t, output_tokens=0, ok=True, error="",
+                  cached=False):
+        r = self._open.pop(request_id, None)
+        if r is None:
+            return
+        r.finish = t
+        r.output_tokens = output_tokens
+        r.ok = ok
+        r.error = error
+        r.cached = cached
+        self.records.append(r)
+
+    # -- summaries --------------------------------------------------------------
+    def summary(self, t0: float | None = None, t1: float | None = None) -> dict:
+        recs = [r for r in self.records if r.ok]
+        if t0 is not None:
+            recs = [r for r in recs if r.finish >= t0]
+        if t1 is not None:
+            recs = [r for r in recs if r.finish <= t1]
+        if not recs:
+            return {"completed": 0}
+        start = t0 if t0 is not None else min(r.arrival for r in recs)
+        end = t1 if t1 is not None else max(r.finish for r in recs)
+        dur = max(end - start, 1e-9)
+        toks = sum(r.output_tokens for r in recs)
+        return {
+            "completed": len(recs),
+            "failed": sum(1 for r in self.records if not r.ok),
+            "duration_s": dur,
+            "req_per_s": len(recs) / dur,
+            "output_tok_per_s": toks / dur,
+            "median_e2e_s": statistics.median(r.e2e for r in recs),
+            "mean_e2e_s": statistics.fmean(r.e2e for r in recs),
+            "p90_e2e_s": sorted(r.e2e for r in recs)[int(0.9 * (len(recs) - 1))],
+            "median_ttft_s": statistics.median(
+                r.ttft for r in recs if r.first_token),
+            "output_tokens": toks,
+        }

@@ -1,0 +1,73 @@
+"""Activation-sharding hints: opt-in `with_sharding_constraint` insertion
+points inside model code.
+
+Default is OFF (None policy): single-device tests and the real CPU engine
+never touch jax sharding machinery.  The dry-run (and a TPU launcher) wraps
+lowering in ``use_hints(ShardingHints(...))`` to enable specific reshards.
+
+Why this exists: archs whose head count is not divisible by the model axis
+(qwen 20H, llama3.2 24H, yi/llava 56H on a 16-way axis) degrade head
+sharding to REPLICATION — every model shard recomputes the full attention.
+``attn_dp`` reshards the attention inputs so the BATCH covers
+(data × model) and each chip does 1/256th of the attention work, at the
+cost of two activation all-to-alls per layer (measured win in
+EXPERIMENTS.md §Perf: the all-to-all bytes are ~100× smaller than the
+replicated-compute waste).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShardingHints:
+    # axes that shard the batch dim of attention inputs (q/k/v) during
+    # full-sequence attention; None disables the reshard
+    attn_dp: tuple | None = None
+    # axes the output is constrained back to (the model's default DP axes)
+    batch_axes: tuple | None = None
+    # mesh axis that keeps the MoE expert dim sharded through dispatch ->
+    # GEMM -> combine, so only the (B,S,D) partial sums cross shards
+    moe_ep: str | None = None
+    # the plain data-parallel axes of the mesh (for explicit reshards)
+    dp: tuple | None = None
+    # blockwise cross-entropy: compute the LM loss in vocab chunks of this
+    # size, never materializing the full (tokens, V) logits (the dominant
+    # memory/collective term for small-model/large-vocab training)
+    ce_chunk: int | None = None
+
+
+def constrain(x, spec_axes):
+    """with_sharding_constraint with an explicit per-dim axes tuple."""
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    return lax.with_sharding_constraint(x, P(*spec_axes))
+
+
+_POLICY: ShardingHints | None = None
+
+
+def current() -> ShardingHints | None:
+    return _POLICY
+
+
+@contextmanager
+def use_hints(policy: ShardingHints):
+    global _POLICY
+    prev = _POLICY
+    _POLICY = policy
+    try:
+        yield policy
+    finally:
+        _POLICY = prev
+
+
+def constrain_batch(x, axes):
+    """with_sharding_constraint(x, P(axes, None...)) if axes else x."""
+    if axes is None:
+        return x
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    return lax.with_sharding_constraint(
+        x, P(axes, *(None,) * (x.ndim - 1)))

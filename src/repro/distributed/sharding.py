@@ -1,0 +1,165 @@
+"""Sharding rules: PartitionSpecs for params, optimizer state, batches, and
+caches on the production mesh (DESIGN.md §5).
+
+Layout summary
+  mesh axes     single-pod (data=16, model=16); multi-pod (pod=2, data=16, model=16)
+  TP ("model")  attention q/k/v/o columns-rows, MLP hidden, MoE experts,
+                vocab/embedding
+  DP (pod,data) batch dimension (training + serving)
+  FSDP ("data") second weight dim during TRAINING (ZeRO-3-style: weights,
+                grads, and Adam moments all sharded over data; XLA inserts the
+                per-layer all-gather / reduce-scatter inside the layer scan).
+                Serving keeps weights TP-only unless the model cannot fit
+                (dbrx-132b), where FSDP stays on.
+  KV caches     batch over DP; kv-heads over "model" when divisible, else
+                head_dim over "model" (the contraction all-reduces over
+                model — MQA/GQA-friendly, see DESIGN.md).
+
+Every rule degrades to None when a dim is not divisible by the axis size
+(GSPMD would pad; we prefer explicit replication and let the roofline's
+MODEL_FLOPS/HLO ratio expose any waste we keep).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+_REPLICATED_NAMES = {
+    "norm", "norm1", "norm2", "final_norm", "A_log", "D", "dt_bias",
+    "conv_b", "conv_w", "router", "len",
+}
+
+SERVE_FSDP_BYTES = 8 << 30      # params/chip above this forces FSDP at serve
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    bpp = 2 if cfg.param_dtype == "bfloat16" else 4
+    return cfg.num_params * bpp
+
+
+def needs_serve_fsdp(cfg: ModelConfig, model_shards: int = 16) -> bool:
+    return param_bytes(cfg) / model_shards > SERVE_FSDP_BYTES
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    cfg: ModelConfig
+    train: bool = True
+
+    # -- helpers -----------------------------------------------------------------
+    def _ax(self, axis, size):
+        if axis is None:
+            return None
+        n = int(np.prod([self.mesh.shape[a] for a in
+                         (axis if isinstance(axis, tuple) else (axis,))]))
+        return axis if size % n == 0 else None
+
+    @property
+    def _fsdp(self):
+        if self.train:
+            return "data"
+        return "data" if needs_serve_fsdp(self.cfg,
+                                          self.mesh.shape["model"]) else None
+
+    @property
+    def _dp(self):
+        return dp_axes(self.mesh)
+
+    # -- params --------------------------------------------------------------------
+    def _param_spec(self, path, shape) -> P:
+        name = None
+        for k in reversed(path):
+            key = getattr(k, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        nd = len(shape)
+        lead = (None,) * (nd - 2)
+        f, m = self._fsdp, "model"
+        if name in _REPLICATED_NAMES or nd <= 1:
+            return P()
+        if name == "embed":
+            return P(self._ax(m, shape[0]), self._ax(f, shape[1]))
+        if name == "lm_head":
+            return P(self._ax(f, shape[0]), self._ax(m, shape[1]))
+        if name in ("wq", "wk", "wv", "w1", "w3", "in_proj"):
+            if nd == 4:      # MoE expert stack (L, E, D, F): experts over
+                # model, FSDP on F (column-split): contracting D stays
+                # shard-local, so no giant partial-sum all-reduce (§Perf,
+                # dbrx prefill: 28 GB/layer -> (B,E,cap,D) once)
+                return P(None, self._ax(m, shape[1]), None,
+                         self._ax(f, shape[3]))
+            return P(*lead, self._ax(f, shape[-2]), self._ax(m, shape[-1]))
+        if name in ("wo", "w2", "out_proj"):
+            if nd == 4:      # MoE w2 (L, E, F, D): FSDP on F (row-split),
+                # paired with w1/w3 so h flows shard-local through the MLP
+                return P(None, self._ax(m, shape[1]),
+                         self._ax(f, shape[2]), None)
+            return P(*lead, self._ax(m, shape[-2]), self._ax(f, shape[-1]))
+        if name in ("bq", "bk", "bv"):
+            # stacked-per-layer biases are (L, dim): only the LAST dim is TP
+            return P(*((None,) * (nd - 1)), self._ax(m, shape[-1]))
+        return P()           # conservative default: replicate
+
+    def param_specs(self, params_shapes):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, leaf: self._param_spec(p, leaf.shape), params_shapes)
+
+    def opt_specs(self, opt_shapes, params_shapes):
+        """Adam m/v mirror the (train) param layout; step is replicated."""
+        pspecs = self.param_specs(params_shapes)
+        return {"m": pspecs, "v": pspecs, "step": P()}
+
+    # -- batches ----------------------------------------------------------------------
+    def _batched(self, shape) -> P:
+        b = self._ax(self._dp, shape[0])
+        return P(b, *(None,) * (len(shape) - 1))
+
+    def batch_specs(self, batch_shapes):
+        return jax.tree.map(lambda leaf: self._batched(leaf.shape),
+                            batch_shapes)
+
+    # -- caches -----------------------------------------------------------------------
+    def _cache_spec(self, path, shape) -> P:
+        name = None
+        for k in reversed(path):
+            key = getattr(k, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        if name == "len":
+            return P(self._ax(self._dp, shape[0]))
+        b = self._ax(self._dp, shape[1])
+        if name in ("k", "v"):
+            # (L|G, B, KH, S, hd): batch over DP, SEQUENCE over model —
+            # flash-decoding-style split: each model shard attends over its
+            # S-chunk and GSPMD combines with small all-reduces (max/sum of
+            # the online softmax + the (B,H,hd) output). Uniform across GQA/
+            # MQA/MHA head counts, unlike head sharding (DESIGN.md §5).
+            # kv-heads-major layout: seq is dim 3.
+            return P(None, b, None, self._ax("model", shape[3]), None)
+        if name == "ssm":      # (L, B, H, Phead, N)
+            return P(None, b, self._ax("model", shape[2]), None, None)
+        if name == "conv":     # (L, B, K-1, Ch)
+            return P(None, b, None, self._ax("model", shape[3]))
+        return P(*(None,) * len(shape))
+
+    def cache_specs(self, cache_shapes):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, leaf: self._cache_spec(p, leaf.shape), cache_shapes)
+
+    # -- materialization -----------------------------------------------------------------
+    def named(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for the flash-attention Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block", "k_block",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_block=256,
+                    k_block=512, interpret=False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H % KH == 0.
+    Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    q_block = min(q_block, max(16, Sq))
+    k_block = min(k_block, max(16, Sk))
+
+    pq = (-Sq) % q_block
+    pk = (-Sk) % k_block
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+
+    # (B, S, H, D) -> (B*KH, G, S, D) / (B*KH, S, D)
+    qr = qp.reshape(B, Sq + pq, KH, G, D).transpose(0, 2, 3, 1, 4)
+    qr = qr.reshape(B * KH, G, Sq + pq, D)
+    kr = kp.transpose(0, 2, 1, 3).reshape(B * KH, Sk + pk, D)
+    vr = vp.transpose(0, 2, 1, 3).reshape(B * KH, Sk + pk, D)
+
+    out = flash_attention_fwd(qr, kr, vr, causal=causal, window=window,
+                              q_block=q_block, k_block=k_block, seq_k=Sk,
+                              interpret=interpret)
+    out = out.reshape(B, KH, G, Sq + pq, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq + pq, H, D)[:, :Sq]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (full softmax, GQA, causal/window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_len=None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KH, D). Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, Sq, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # align ends (decode-style)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    if kv_len is not None:
+        mask = mask & (kpos < kv_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

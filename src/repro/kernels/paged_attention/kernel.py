@@ -1,0 +1,102 @@
+"""PagedAttention decode Pallas TPU kernel.
+
+TPU adaptation of vLLM's PagedAttention (DESIGN.md §2): the per-sequence block
+table lives in scalar-prefetch (SMEM) and *drives the DMA schedule* — the
+BlockSpec index_map dereferences ``block_tables[b, pi]`` so each grid step
+streams exactly one KV page HBM->VMEM. Pages are large (multiples of 128
+tokens) so tiles are MXU/VPU aligned, and an online-softmax accumulator in
+VMEM scratch merges pages (flash-decoding style).
+
+Grid: (B, KH, pages_per_seq) — pages innermost for the accumulator carry.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page_size, num_pages, scale):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = lens_ref[b]
+    page_start = pi * page_size
+    live = page_start < ctx
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)                # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)                # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, page)
+        pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < ctx, s, NEG_INF)
+        m_prev = m_scr[...]                                   # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(pi == num_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
+                        interpret=False):
+    """q: (B, KH, G, D); k_pages/v_pages: (NP, page, KH, D);
+    block_tables: (B, PPS) int32; context_lens: (B,) int32.
+    Returns (B, KH, G, D)."""
+    B, KH, G, D = q.shape
+    NP, page, _, _ = k_pages.shape
+    PPS = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_paged_kernel, page_size=page,
+                               num_pages=PPS, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, PPS),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, pi, tables, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, pi, tables, lens: (tables[b, pi], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, pi, tables, lens: (tables[b, pi], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, pi, tables, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q, k_pages, v_pages)

@@ -1,0 +1,31 @@
+"""Public jit'd wrapper for the paged-attention decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
+                    interpret=False):
+    """Decode attention over a paged KV cache.
+
+    q: (B, H, D) one query token per sequence;
+    k_pages / v_pages: (NP, page_size, KH, D) the global page pool;
+    block_tables: (B, pages_per_seq) int32 page ids (pad with 0 beyond len);
+    context_lens: (B,) int32 valid token counts.
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    KH = k_pages.shape[2]
+    G = H // KH
+    qr = q.reshape(B, KH, G, D)
+    out = paged_attention_fwd(qr, k_pages, v_pages,
+                              block_tables.astype(jnp.int32),
+                              context_lens.astype(jnp.int32),
+                              interpret=interpret)
+    return out.reshape(B, H, D)

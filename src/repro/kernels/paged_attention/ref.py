@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for paged decode attention: gather pages into a contiguous
+cache, then masked softmax attention for a single query token."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_kv(pages, block_tables):
+    """pages: (NP, page, KH, D); block_tables: (B, PPS) -> (B, PPS*page, KH, D)."""
+    g = pages[block_tables]                   # (B, PPS, page, KH, D)
+    B, PPS, page, KH, D = g.shape
+    return g.reshape(B, PPS * page, KH, D)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """q: (B, H, D); pages: (NP, page, KH, D); returns (B, H, D)."""
+    B, H, D = q.shape
+    KH = k_pages.shape[2]
+    G = H // KH
+    k = gather_kv(k_pages, block_tables)      # (B, S, KH, D)
+    v = gather_kv(v_pages, block_tables)
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] < context_lens[:, None]      # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the SSD Pallas kernel (model-layout shapes)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, a, B, C, *, chunk=256, interpret=False):
+    """Same contract as models.mamba2.ssd_chunked (h0=0):
+    x: (b, s, h, p); a: (b, s, h); B, C: (b, s, n) shared across heads.
+    Returns (y (b, s, h, p), final_state (b, h, p, n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    pad = (-s) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S = s + pad
+
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, S, p)
+    ar = a.transpose(0, 2, 1).reshape(b * h, S, 1)
+    Br = jnp.broadcast_to(B[:, None], (b, h, S, n)).reshape(b * h, S, n)
+    Cr = jnp.broadcast_to(C[:, None], (b, h, S, n)).reshape(b * h, S, n)
+
+    y, st = ssd_fwd(xr, ar, Br, Cr, chunk=Q, interpret=interpret)
+    y = y.reshape(b, h, S, p).transpose(0, 2, 1, 3)[:, :s]
+    return y.astype(x.dtype), st.reshape(b, h, p, n)

@@ -1,0 +1,5 @@
+"""Oracle for the SSD kernel: the chunked-einsum formulation from
+``repro.models.mamba2`` (itself validated against the step recurrence)."""
+from repro.models.mamba2 import segsum, ssd_chunked, ssd_decode_step
+
+__all__ = ["segsum", "ssd_chunked", "ssd_decode_step"]

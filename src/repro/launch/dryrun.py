@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder host devices to
+# build the production mesh. Smoke tests / benches never import this module.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+
+from repro.configs import REGISTRY, SHAPES, cells_for, get_config   # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig             # noqa: E402
+from repro.distributed.sharding import ShardingRules                # noqa: E402
+from repro.launch.mesh import make_production_mesh                  # noqa: E402
+from repro.models import make_model                                 # noqa: E402
+from repro.training.optimizer import AdamWConfig, adamw_init        # noqa: E402
+from repro.training.train import make_train_step                    # noqa: E402
+
+from repro.launch.hlo_analysis import COLLECTIVE_OPS, analyze   # noqa: E402
+from repro.distributed.hints import ShardingHints, use_hints        # noqa: E402
+
+
+def make_hints(opts: set[str], multi_pod: bool) -> ShardingHints | None:
+    """--opt flags -> activation-sharding hints (EXPERIMENTS.md §Perf)."""
+    attn = "attn_dp" in opts or "attn_dp_noout" in opts
+    moe = "moe_ep" in opts
+    ce = "ce_chunk" in opts
+    if not attn and not moe and not ce:
+        return None
+    dp = ("pod", "data") if multi_pod else ("data",)
+    out_axes = None if "attn_dp_noout" in opts else dp
+    return ShardingHints(attn_dp=dp + ("model",) if attn else None,
+                         batch_axes=out_axes,
+                         moe_ep="model" if moe else None,
+                         dp=dp,
+                         ce_chunk=16384 if ce else None)
+
+
+def train_microbatches(cfg: ModelConfig) -> int:
+    n = cfg.num_params
+    if n > 20e9:
+        return 16
+    if n > 2e9:
+        return 8
+    return 4
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               microbatches: int | None = None, remat: bool = True,
+               extra: dict | None = None):
+    """Returns (fn, args_sds, in_shardings, out_shardings, info)."""
+    model = make_model(cfg)
+    rules = ShardingRules(mesh, cfg, train=(shape.kind == "train"))
+    B, S = shape.global_batch, shape.seq_len
+    rng = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(model.init_params, rng)
+    pspecs = rules.param_specs(params_sds)
+    info = {"microbatches": None}
+
+    def batch_sds():
+        b = {}
+        if cfg.input_kind == "embeds":
+            b["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16)
+        else:
+            b["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            b["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return b
+
+    if shape.kind == "train":
+        n_micro = microbatches or train_microbatches(cfg)
+        info["microbatches"] = n_micro
+        step = make_train_step(model, AdamWConfig(), num_microbatches=n_micro,
+                               remat=remat)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        ospecs = rules.opt_specs(opt_sds, params_sds)
+        bsds = batch_sds()
+        bspecs = rules.batch_specs(bsds)
+        args = (params_sds, opt_sds, bsds)
+        in_sh = (rules.named(pspecs), rules.named(ospecs),
+                 rules.named(bspecs))
+        out_sh = (rules.named(pspecs), rules.named(ospecs), None)
+        fn = step
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        bsds = batch_sds()
+        bspecs = rules.batch_specs(bsds)
+
+        def fn(params, batch):
+            return model.prefill(params, batch, max_len=S)
+
+        args = (params_sds, bsds)
+        in_sh = (rules.named(pspecs), rules.named(bspecs))
+        out_logits, out_cache = jax.eval_shape(fn, params_sds, bsds)
+        if out_cache is None:
+            out_sh = None
+        else:
+            cspecs = rules.cache_specs(out_cache)
+            out_sh = (None, rules.named(cspecs))
+        donate = ()
+    else:  # decode
+        tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(B, S, jnp.bfloat16))
+        cspecs = rules.cache_specs(cache_sds)
+
+        def fn(params, tokens, cache):
+            return model.decode_step(params, tokens, cache)
+
+        args = (params_sds, tok_sds, cache_sds)
+        in_sh = (rules.named(pspecs),
+                 rules.named(rules.batch_specs(tok_sds)),
+                 rules.named(cspecs))
+        out_sh = (None, rules.named(cspecs))
+        donate = (2,)
+    return fn, args, in_sh, out_sh, donate, info
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, *, microbatches=None,
+             remat=True, save_hlo=False, opts: set | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "ok": False,
+           "devices": 512 if multi_pod else 256,
+           "opts": sorted(opts) if opts else []}
+    t0 = time.time()
+    opts = opts or set()
+    hints = make_hints(opts, multi_pod)
+    from contextlib import nullcontext
+    hints_ctx = use_hints(hints) if hints else nullcontext()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # single-pod mesh uses the first 256 of the 512 host devices
+        fn, args, in_sh, out_sh, donate, info = build_cell(
+            cfg, shape, mesh, microbatches=microbatches, remat=remat)
+        rec.update(info)
+        with mesh, hints_ctx:
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        cost = compiled.cost_analysis() or {}
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+        hlo = compiled.as_text()
+        rec.update(analyze(hlo))
+        rec["ok"] = True
+        if save_hlo and out_dir:
+            with open(os.path.join(
+                    out_dir, f"{mesh_name}_{arch}_{shape_name}.hlo"),
+                    "w") as f:
+                f.write(hlo)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+              f"flops {rec['flops']:.3e}, "
+              f"coll {rec['collective_bytes']:.3e}B)")
+        if mem is not None:
+            print(f"[dryrun]   memory: args={rec.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"out={rec.get('output_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{mesh_name}_{arch}_{shape_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable (arch x shape) cell")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma-separated optimizations, e.g. attn_dp")
+    args = ap.parse_args()
+    opts = {o for o in args.opt.split(",") if o}
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for name, cfg in sorted(REGISTRY.items()):
+            for sh in cells_for(cfg):
+                cells.append((name, sh.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, sh in cells:
+        for mp in meshes:
+            rec = run_cell(arch, sh, mp, args.out,
+                           microbatches=args.microbatches,
+                           remat=not args.no_remat, save_hlo=args.save_hlo,
+                           opts=opts)
+            failures += 0 if rec["ok"] else 1
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

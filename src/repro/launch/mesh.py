@@ -1,0 +1,17 @@
+"""Production mesh construction. A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by distribution tests, not the dry-run."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,79 @@
+"""End-to-end serving driver: ``python -m repro.launch.serve --arch <id>``.
+
+Brings up the real continuous-batching engine for the selected architecture
+and drives a ShareGPT-like request stream through it, reporting the paper's
+§5.1 metrics.  On this CPU container the reduced config is the default;
+``--full`` uses the full config (TPU-sized — expect it to be slow/OOM off
+target hardware, it exists so the same entry point works on a real pod).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import REGISTRY, get_config, list_archs, reduced
+from repro.data.workload import make_workload, token_ids_for
+from repro.models import make_model
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.request import InferenceRequest, SamplingParams
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="FIRST serving driver")
+    ap.add_argument("--arch", default="llama3.2-3b", choices=list_archs())
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (TPU target); default reduced")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=float("inf"))
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--backend", default="paged",
+                    choices=["slots", "paged"])
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-seq-len", type=int, default=160)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else reduced(REGISTRY[args.arch])
+    if cfg.family in ("ssm", "hybrid") and args.backend == "paged":
+        print(f"[serve] {cfg.family} arch: paged KV does not apply, "
+              "using slots backend")
+        args.backend = "slots"
+    if cfg.family == "audio":
+        raise SystemExit("hubert-xlarge is encoder-only: use the embedding "
+                         "service (repro.serving.embedding), not generate")
+
+    print(f"[serve] arch={args.arch} ({'full' if args.full else 'reduced'}) "
+          f"backend={args.backend} slots={args.slots}")
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    engine = ContinuousBatchingEngine(model, params, EngineConfig(
+        max_slots=args.slots, max_seq_len=args.max_seq_len,
+        backend=args.backend, page_size=16))
+
+    wl = make_workload(args.requests, rate=args.rate, seed=args.seed,
+                       lo=4, hi=max(8, args.max_seq_len - args.max_tokens - 8))
+    t0 = time.monotonic()
+    for w in wl:
+        engine.add_request(InferenceRequest(
+            model=cfg.name,
+            prompt_tokens=token_ids_for(w, cfg.vocab_size)[:args.max_seq_len
+                                                           - args.max_tokens
+                                                           - 4],
+            request_id=w.request_id,
+            sampling=SamplingParams(
+                max_tokens=min(w.max_tokens, args.max_tokens),
+                temperature=0.0)))
+    outs = engine.run_to_completion()
+    dt = time.monotonic() - t0
+    toks = sum(o.num_output_tokens for o in outs)
+    e2e = sorted(o.metrics.e2e_latency for o in outs if o.metrics)
+    print(f"[serve] {len(outs)} requests, {toks} output tokens in {dt:.1f}s")
+    print(f"[serve] req/s={len(outs)/dt:.2f} tok/s={toks/dt:.1f} "
+          f"median_e2e={e2e[len(e2e)//2]:.2f}s steps={engine.stats['steps']}")
+
+
+if __name__ == "__main__":
+    main()

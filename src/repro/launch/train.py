@@ -1,0 +1,80 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+
+Runs the remat'd scan-over-layers train step with grad accumulation, the
+synthetic token pipeline, and periodic checkpointing (restart-safe: rerun
+with the same --ckpt-dir to resume).  Reduced configs by default; on a TPU
+pod the same step function is what repro.launch.dryrun lowers with
+in/out shardings from repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from repro.configs import REGISTRY, list_archs, reduced
+from repro.data.tokens import TokenDataset
+from repro.distributed.checkpoint import (latest_checkpoint, load_checkpoint,
+                                          save_checkpoint)
+from repro.models import make_model
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="FIRST training driver")
+    ap.add_argument("--arch", default="llama3.2-3b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(REGISTRY[args.arch])
+    model = make_model(cfg)
+    data = TokenDataset(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                        global_batch=args.batch, seed=args.seed)
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(lr=args.lr),
+                                      num_microbatches=args.microbatches))
+
+    start = 0
+    params = opt_state = None
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        latest = latest_checkpoint(args.ckpt_dir)
+        if latest:
+            state, meta = load_checkpoint(latest)
+            params, opt_state = state["params"], state["opt"]
+            data.restore(meta["data"])
+            start = meta["step"]
+            print(f"[train] resumed from {latest} at step {start}")
+    if params is None:
+        params = model.init_params(jax.random.PRNGKey(args.seed))
+        opt_state = adamw_init(params)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = data.next_batch()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d}  loss "
+                  f"{float(metrics['loss']):.4f}  {time.time()-t0:6.1f}s")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            path = os.path.join(args.ckpt_dir, f"ckpt_{step+1:06d}")
+            save_checkpoint(path, {"params": params, "opt": opt_state},
+                            step=step + 1,
+                            metadata={"step": step + 1,
+                                      "data": data.state()})
+            print(f"[train] checkpoint -> {path}")
+    print(f"[train] done: {args.steps - start} steps in "
+          f"{time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import LM, make_model
+
+__all__ = ["LM", "make_model"]

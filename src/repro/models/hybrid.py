@@ -1,0 +1,200 @@
+"""SSM-only (Mamba2) and hybrid (Zamba2-style) stacks.
+
+Hybrid = Mamba2 backbone + ONE shared attention+MLP block whose parameters are
+reused at every application (after every ``attn_every`` mamba layers) — the
+Zamba parameter-sharing trick. ``attn_every == 0`` gives the pure SSM stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (
+    attention_layer, dense_init, init_attention, init_mlp, mlp_layer, rms_norm,
+)
+from repro.models.transformer import _scatter_new_kv
+from repro.models.mamba2 import init_mamba, mamba_layer
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_params(key, cfg):
+    dtype = _dtype(cfg)
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "mamba": init_mamba(k1, cfg, dtype)}
+
+    params = {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "layers": jax.vmap(one)(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_size), dtype=dtype),
+    }
+    if cfg.attn_every:
+        k1, k2 = jax.random.split(ks)
+        params["shared"] = {
+            "norm1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attention(k1, cfg, dtype),
+            "norm2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.num_layers, dtype),
+        }
+    return params
+
+
+def _group_params(params, cfg):
+    """Reshape stacked mamba layers (L, ...) -> (G, per, ...) for scan-of-scan."""
+    per = cfg.attn_every if cfg.attn_every else cfg.num_layers
+    G = cfg.num_layers // per
+    grouped = jax.tree.map(lambda a: a.reshape(G, per, *a.shape[1:]),
+                           params["layers"])
+    return grouped, G, per
+
+
+def _mamba_sublayer(x, lp, cfg, state=None):
+    y, new_state = mamba_layer(rms_norm(x, lp["norm"], cfg.norm_eps),
+                               lp["mamba"], cfg, state=state)
+    return x + y, new_state
+
+
+def _shared_block(x, sp, cfg, positions, *, cache=None, cache_index=None,
+                  window=0, return_kv=False):
+    a, kv = attention_layer(rms_norm(x, sp["norm1"], cfg.norm_eps), sp["attn"],
+                            cfg, positions=positions, cache=cache,
+                            cache_index=cache_index, window=window,
+                            return_kv=return_kv)
+    x = x + a
+    return x + mlp_layer(rms_norm(x, sp["norm2"], cfg.norm_eps), sp["mlp"]), kv
+
+
+def forward(params, x, cfg, *, remat=True, window=0):
+    """Train/encoder forward. x: (B,S,D). Returns (hidden, aux=0)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    grouped, G, per = _group_params(params, cfg)
+    sp = params.get("shared")
+
+    def inner(h, lp):
+        h2, _ = _mamba_sublayer(h, lp, cfg)
+        return h2, None
+
+    inner_fn = jax.checkpoint(inner, prevent_cse=False) if remat else inner
+
+    def outer(h, glp):
+        h, _ = lax.scan(inner_fn, h, glp)
+        if sp is not None:
+            h, _ = _shared_block(h, sp, cfg, positions, window=window)
+        return h, None
+
+    x, _ = lax.scan(outer, x, grouped)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.float32(0.0)
+
+
+def prefill(params, x, cfg, *, max_len=None, window=0):
+    """Returns (hidden (B,S,D), cache)."""
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    grouped, G, per = _group_params(params, cfg)
+    sp = params.get("shared")
+
+    def inner(h, lp):
+        h2, st = _mamba_sublayer(h, lp, cfg)
+        return h2, st
+
+    def outer(h, glp):
+        h, states = lax.scan(inner, h, glp)
+        kv = None
+        if sp is not None:
+            h, kv = _shared_block(h, sp, cfg, positions, window=window,
+                                  return_kv=True)
+        return h, (states, kv)
+
+    x, (states, kvs) = lax.scan(outer, x, grouped)
+    # states leaves have shape (G, per, B, ...) -> (L, B, ...)
+    states = jax.tree.map(lambda a: a.reshape(cfg.num_layers, *a.shape[2:]),
+                          states)
+    cache = {"ssm": states["ssm"], "conv": states["conv"],
+             "len": jnp.full((B,), S, jnp.int32)}
+    if sp is not None:
+        k, v = kvs
+        # kv-heads-major (G,B,KH,S,hd), see transformer.init_cache
+        k = k.transpose(0, 1, 3, 2, 4)
+        v = v.transpose(0, 1, 3, 2, 4)
+        if max_len > S:
+            pad = ((0, 0), (0, 0), (0, 0), (0, max_len - S), (0, 0))
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+        cache["k"], cache["v"] = k, v
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), cache
+
+
+def decode_step(params, x, cfg, cache, *, window=0):
+    """x: (B,1,D). Returns (hidden (B,1,D), new cache)."""
+    B = x.shape[0]
+    positions = cache["len"][:, None]
+    grouped, G, per = _group_params(params, cfg)
+    sp = params.get("shared")
+    gstates = {
+        "ssm": cache["ssm"].reshape(G, per, *cache["ssm"].shape[1:]),
+        "conv": cache["conv"].reshape(G, per, *cache["conv"].shape[1:]),
+    }
+
+    def inner(h, xs):
+        lp, st = xs
+        h2, st2 = _mamba_sublayer(h, lp, cfg, state=st)
+        return h2, st2
+
+    def outer(h, xs):
+        glp, gst, kc, vc = xs
+        h, st2 = lax.scan(inner, h, (glp, gst))
+        nkv = (kc, vc)
+        if sp is not None:
+            # returns the new kv VECTORS; scattered into the stacked cache
+            # once after the scan (see transformer.decode_step)
+            h, nkv = _shared_block(h, sp, cfg, positions,
+                                   cache={"k": kc, "v": vc},
+                                   cache_index=cache["len"], window=window)
+        return h, (st2, nkv)
+
+    if sp is not None:
+        xs = (grouped, gstates, cache["k"], cache["v"])
+    else:
+        dummy = jnp.zeros((G, 1)), jnp.zeros((G, 1))
+        xs = (grouped, gstates, *dummy)
+    x, (st2, (ks, vs)) = lax.scan(outer, x, xs)
+    new_cache = {
+        "ssm": st2["ssm"].reshape(cfg.num_layers, *st2["ssm"].shape[2:]),
+        "conv": st2["conv"].reshape(cfg.num_layers, *st2["conv"].shape[2:]),
+        "len": cache["len"] + 1,
+    }
+    if sp is not None:
+        new_cache["k"] = _scatter_new_kv(cache["k"], ks, cache["len"])
+        new_cache["v"] = _scatter_new_kv(cache["v"], vs, cache["len"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def init_cache(cfg, batch, max_len, dtype):
+    L = cfg.num_layers
+    H, P, N = cfg.ssm_heads, cfg.ssm.head_dim, cfg.ssm.d_state
+    Ch = cfg.d_inner + 2 * N
+    cache = {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.ssm.conv_kernel - 1, Ch), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.attn_every:
+        G = cfg.num_layers // cfg.attn_every
+        # kv-heads-major (B,KH,S,hd) — see transformer.init_cache
+        cache["k"] = jnp.zeros((G, batch, cfg.num_kv_heads, max_len,
+                                cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((G, batch, cfg.num_kv_heads, max_len,
+                                cfg.head_dim), dtype)
+    return cache

@@ -1,0 +1,308 @@
+"""Shared neural building blocks: norms, RoPE, chunked (flash-style) attention,
+SwiGLU MLP, and parameter initializers.
+
+All layers are pure functions over explicit parameter pytrees (nested dicts), so
+they jit/scan/shard cleanly. Activations are computed in the dtype of the inputs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (interleaved pairs: (2i, 2i+1) rotate together, so sharding the head
+# dim keeps rotation pairs shard-local — see DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D) ; positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs           # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention (flash-style online softmax in pure JAX)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      kv_len=None, q_chunk=512, k_chunk=1024):
+    """Memory-bounded attention with online softmax.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H % KH == 0 (GQA).
+    ``q_offset``: absolute position of q[0] (for decode / chunked prefill).
+    ``kv_len``: (B,) or scalar number of valid kv positions (padded cache).
+    ``window``: sliding-window size (0 = unlimited).
+
+    Scans sequentially over q chunks and, inside, over k chunks, carrying the
+    online-softmax state (m, l, acc). Peak live score block: B*H*q_chunk*k_chunk.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    # pad to multiples
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    pq = nq * q_chunk - Sq
+    pk = nk * k_chunk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+
+    qr = q.reshape(B, nq, q_chunk, KH, G, D)
+    kr = k.reshape(B, nk, k_chunk, KH, D)
+    vr = v.reshape(B, nk, k_chunk, KH, D)
+
+    if kv_len is None:
+        kv_len_arr = jnp.full((B,), Sk, dtype=jnp.int32)
+    else:
+        kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+
+    def q_step(_, qi):
+        qblk = qr[:, qi]                                     # (B, qc, KH, G, D)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)  # (qc,)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kblk = kr[:, ki]                                 # (B, kc, KH, D)
+            vblk = vr[:, ki]
+            kpos = ki * k_chunk + jnp.arange(k_chunk)        # (kc,)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            ok = kpos[None, :] < kv_len_arr[:, None]          # (B, kc) valid positions
+            blockmask = ok[:, None, :]                        # (B, 1(q), kc)
+            if causal:
+                cm = kpos[None, :] <= qpos[:, None]           # (qc, kc)
+                blockmask = blockmask & cm[None, :, :]
+            if window:
+                wm = (qpos[:, None] - kpos[None, :]) < window
+                blockmask = blockmask & wm[None, :, :]
+            s = jnp.where(blockmask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(k_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B, KH, G, qc, D)
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, jnp.arange(nq))          # (nq, B, KH, G, qc, D)
+    out = jnp.moveaxis(outs, 0, 1)                            # (B, nq, KH, G, qc, D)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, *, cur_len, window=0):
+    """Single-token attention against a padded KV cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, KH, D); cur_len: (B,) valid lengths
+    (the new token's kv must already be written at cur_len-1).
+    """
+    B, _, H, D = q.shape
+    _, Smax, KH, _ = k_cache.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)
+    mask = pos[None, :] < cur_len[:, None]                    # (B, Smax)
+    if window:
+        mask = mask & (cur_len[:, None] - 1 - pos[None, :] < window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_appended(q, k_cache, v_cache, k_new, v_new, *,
+                              prev_len, window=0):
+    """Single-token attention over (existing cache) + (new token's kv),
+    WITHOUT requiring the new kv to be written into the cache first.
+
+    Keeping the attention read path independent of the cache update means
+    the update stays a pure in-dtype scatter: the baseline formulation
+    (write-then-attend) made XLA round-trip the ENTIRE stacked cache
+    through f32 once per layer (§Perf iteration log, yi-34b decode).
+
+    q: (B,1,H,D); caches: (B,KH,Smax,D) — kv-heads-major layout so the
+    contraction needs NO transpose copies (§Perf iteration 3);
+    k_new/v_new: (B,KH,D); prev_len: (B,) valid positions BEFORE this token.
+    """
+    B, _, H, D = q.shape
+    _, KH, Smax, _ = k_cache.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)
+    mask = pos[None, :] < prev_len[:, None]                   # history only
+    if window:
+        mask = mask & (prev_len[:, None] - pos[None, :] < window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    s_new = jnp.einsum("bhgd,bhd->bhg", qr, k_new,
+                       preferred_element_type=jnp.float32) * scale
+    m = jnp.maximum(s.max(axis=-1), s_new)                    # (B,KH,G)
+    p = jnp.exp(s - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    denom = p.sum(axis=-1) + p_new
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out + p_new[..., None] * v_new[:, :, None, :].astype(jnp.float32)
+    out = out / denom[..., None]
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + rope + attend), with optional KV cache
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kvd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kvd), dtype=dtype),
+        "wo": dense_init(ks[3], (qd, d), scale=1.0 / math.sqrt(qd * 2 * cfg.num_layers),
+                         dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def project_qkv(x, p, cfg, positions):
+    """QKV projections + RoPE. x: (B, S, D) ->
+    q (B,S,H,hd), k (B,S,KH,hd), v (B,S,KH,hd)."""
+    B, S, _ = x.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    if cfg.causal or not cfg.is_encoder:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer(x, p, cfg, *, positions, cache=None, cache_index=None,
+                    window=0, return_kv=False):
+    """x: (B, S, D). If cache is given (decode): cache = dict(k, v) padded
+    buffers (B, Smax, KH, hd); cache_index: (B,) current lengths BEFORE this
+    token. Returns (out, new_cache); with ``return_kv`` (prefill) the second
+    element is the rope'd (k, v) pair instead."""
+    B, S, _ = x.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = project_qkv(x, p, cfg, positions)
+
+    if cache is None:
+        from repro.distributed import hints as _hints
+        hp = _hints.current()
+        if hp is not None and hp.attn_dp is not None:
+            # reshard batch over (data x model) for the attention compute:
+            # avoids replicating attention across model shards when the
+            # head count is not divisible by the model axis (§Perf)
+            q = _hints.constrain_batch(q, hp.attn_dp)
+            k = _hints.constrain_batch(k, hp.attn_dp)
+            v = _hints.constrain_batch(v, hp.attn_dp)
+        out = chunked_attention(q, k, v, causal=cfg.causal, window=window)
+        if hp is not None and hp.attn_dp is not None:
+            out = _hints.constrain_batch(out, hp.batch_axes)
+        new_cache = (k, v) if return_kv else None
+    else:
+        # decode: S == 1.  Attend over (history cache) + (new kv) directly
+        # and return the new kv VECTORS — the caller scatters them into the
+        # stacked cache ONCE, outside the layer scan.  Updating the cache
+        # inside the scan made XLA round-trip the entire stacked cache
+        # through f32 per layer (EXPERIMENTS.md §Perf, yi-34b decode).
+        kc, vc = cache["k"], cache["v"]
+        idx = cache_index  # (B,)
+        out = decode_attention_appended(q, kc, vc, k[:, 0], v[:, 0],
+                                        prev_len=idx, window=window)
+        new_cache = (k[:, 0], v[:, 0])          # (B, KH, hd) each
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, num_layers, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w3": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w2": dense_init(ks[2], (d_ff, d_model),
+                         scale=1.0 / math.sqrt(d_ff * 2 * num_layers), dtype=dtype),
+    }
+
+
+def mlp_layer(x, p):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]

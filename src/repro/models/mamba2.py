@@ -1,0 +1,197 @@
+"""Mamba2 mixer with SSD (state-space duality) chunked scan [arXiv:2405.21060].
+
+The chunked SSD computation here is the pure-jnp oracle; the Pallas kernel in
+``repro.kernels.ssd`` implements the same math tiled for VMEM.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# SSD core (also the kernel oracle — kernels/ssd/ref.py re-exports this)
+# ---------------------------------------------------------------------------
+
+def segsum(a):
+    """a: (..., Q) log-decay increments -> (..., Q, Q) lower-tri segment sums:
+    out[i, j] = sum_{t in (j, i]} a[t] for i >= j, -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk, h0=None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)   inputs (already multiplied by dt)
+    a: (b, s, h)      log decay = A * dt  (<= 0)
+    B: (b, s, n)      input projection (single group, shared across heads)
+    C: (b, s, n)      output projection
+    h0: (b, h, p, n)  optional initial state
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    s_orig = s
+    if s % Q:
+        # pad with zero inputs and zero log-decay: padded steps leave the
+        # state unchanged and contribute nothing, so outputs/final state are
+        # exact for the first s_orig positions.
+        pad = Q - s % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // Q
+
+    xr = x.reshape(b, nc, Q, h, p)
+    Br = B.reshape(b, nc, Q, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, Q, n).astype(jnp.float32)
+    ar = a.reshape(b, nc, Q, h).transpose(0, 3, 1, 2).astype(jnp.float32)  # (b,h,nc,Q)
+    a_cs = jnp.cumsum(ar, axis=-1)                                         # (b,h,nc,Q)
+
+    # intra-chunk (quadratic within a chunk)
+    L = jnp.exp(segsum(ar))                                   # (b,h,nc,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)            # (b,nc,Q,Q)
+    y_diag = jnp.einsum("bcqk,bhcqk,bckhp->bcqhp", scores, L,
+                        xr.astype(jnp.float32))
+
+    # chunk final states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)             # (b,h,nc,Q)
+    states = jnp.einsum("bckn,bhck,bckhp->bchpn", Br, decay_states,
+                        xr.astype(jnp.float32))               # (b,nc,h,p,n)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    states = jnp.concatenate([h0[:, None].astype(jnp.float32), states], axis=1)
+    a_sum = a_cs[..., -1]                                     # (b,h,nc)
+    a_sum = jnp.pad(a_sum, ((0, 0), (0, 0), (1, 0)))          # (b,h,nc+1)
+    decay_chunk = jnp.exp(segsum(a_sum))                      # (b,h,nc+1,nc+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states = new_states[:, :-1]                          # state entering chunk
+    final_state = new_states[:, -1]                           # (b,h,p,n)
+
+    state_decay = jnp.exp(a_cs)                               # (b,h,nc,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cr, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, a, B, C, h_prev):
+    """Single-token SSD state update.
+
+    x: (b, h, p) (already * dt); a: (b, h); B, C: (b, n); h_prev: (b, h, p, n).
+    Returns (y (b, h, p), h_new)."""
+    decay = jnp.exp(a.astype(jnp.float32))[..., None, None]
+    h_new = h_prev * decay + jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32),
+                                        B.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), h_new)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer layer
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm.d_state
+    h = cfg.ssm_heads
+    ck = cfg.ssm.conv_kernel
+    ks = jax.random.split(key, 4)
+    # dt bias init: softplus(dt_bias) uniform-ish in [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype=dtype),
+        "conv_w": dense_init(ks[1], (ck, di + 2 * n), scale=1.0 / math.sqrt(ck),
+                             dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d),
+                               scale=1.0 / math.sqrt(di * 2 * cfg.num_layers),
+                               dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv. xBC: (B, S, Ch); w: (K, Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba_layer(x, p, cfg, *, state=None):
+    """x: (B, S, D). If state is given (decode, S==1):
+    state = {"conv": (B, K-1, Ch), "ssm": (B, H, P, N)} -> returns new state.
+    Otherwise returns the final state (for prefill -> decode handoff)."""
+    B, S, D = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads
+    P = cfg.ssm.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    A = -jnp.exp(p["A_log"])                                  # (h,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+
+    if state is None:
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xh = xBC[..., :di].reshape(B, S, h, P)
+        Bp = xBC[..., di:di + n]
+        Cp = xBC[..., di + n:]
+        y, final = ssd_chunked(xh * dt[..., None].astype(xh.dtype),
+                               dt * A[None, None, :], Bp, Cp, cfg.ssm.chunk)
+        y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+        # pre-activation conv inputs for decode handoff (zero-left-pad when the
+        # prompt is shorter than the conv receptive field — matches causal pad)
+        K1 = cfg.ssm.conv_kernel - 1
+        _, xBC_raw, _ = _split_proj(zxbcdt, cfg)
+        tail = xBC_raw[:, max(0, S - K1):, :]
+        if S < K1:
+            tail = jnp.pad(tail, ((0, 0), (K1 - S, 0), (0, 0)))
+        new_state = {"conv": tail, "ssm": final}
+    else:
+        K = cfg.ssm.conv_kernel
+        window = jnp.concatenate([state["conv"], xBC], axis=1)  # (B, K, Ch)
+        conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        xBC1 = jax.nn.silu(conv_out)[:, None, :]               # (B,1,Ch)
+        xh = xBC1[..., :di].reshape(B, h, P)
+        Bp = xBC1[:, 0, di:di + n]
+        Cp = xBC1[:, 0, di + n:]
+        dt1 = dt[:, 0]                                         # (B,h)
+        y, ssm_new = ssd_decode_step(xh * dt1[..., None].astype(xh.dtype),
+                                     dt1 * A[None, :], Bp, Cp, state["ssm"])
+        y = (y + p["D"][None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+             ).astype(x.dtype)[:, None]                        # (B,1,h,P)
+        y = y.reshape(B, 1, h, P)
+        new_state = {"conv": window[:, 1:, :], "ssm": ssm_new}
+
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state

@@ -1,0 +1,187 @@
+"""Unified model facade: init / train_loss / prefill / decode_step / init_cache.
+
+Dispatches on config family:
+  dense | moe | vlm | audio -> transformer stack
+  ssm | hybrid              -> mamba2 / zamba2 stack
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as hybrid_mod
+from repro.models import transformer as tf_mod
+
+MOE_AUX_COEF = 0.01
+# context length beyond which hybrid archs switch their (shared) attention to
+# a sliding window (DESIGN.md §4 long-context adaptation)
+FULL_ATTN_MAX_CTX = 32_768
+
+
+def _backend(cfg: ModelConfig):
+    return hybrid_mod if cfg.family in ("ssm", "hybrid") else tf_mod
+
+
+def _window_for(cfg: ModelConfig, ctx_len: int) -> int:
+    if cfg.family == "hybrid" and ctx_len > FULL_ATTN_MAX_CTX:
+        return cfg.sliding_window_long
+    return 0
+
+
+class LM:
+    """Pure-functional model wrapper (all methods are jit-safe)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def init_params(self, rng):
+        return _backend(self.cfg).init_params(rng, self.cfg)
+
+    def param_shapes(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init_params, rng)
+
+    # -- inputs ------------------------------------------------------------
+    def embed_inputs(self, params, batch):
+        """batch has 'tokens' (B,S) int32 or 'embeds' (B,S,D)."""
+        if "embeds" in batch:
+            return batch["embeds"].astype(params["embed"].dtype)
+        return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def logits(self, params, hidden):
+        head = params.get("lm_head", None)
+        if head is None:
+            head = params["embed"].T
+        return (hidden @ head).astype(jnp.float32)
+
+    # -- training ----------------------------------------------------------
+    def train_loss(self, params, batch, *, remat=True):
+        """batch: {'tokens'|'embeds', 'labels' (B,S) int32}. Returns
+        (loss, metrics)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        S = x.shape[1]
+        window = _window_for(cfg, S)
+        if cfg.family in ("ssm", "hybrid"):
+            hidden, aux = hybrid_mod.forward(params, x, cfg, remat=remat,
+                                             window=window)
+        else:
+            hidden, aux = tf_mod.forward(params, x, cfg, remat=remat,
+                                         window=window)
+        labels = batch["labels"]
+        from repro.distributed import hints as _hints
+        hp = _hints.current()
+        chunk = hp.ce_chunk if hp is not None else None
+        if chunk and cfg.vocab_size > chunk:
+            ce = _chunked_ce(params, hidden, labels, cfg, chunk, self)
+        else:
+            logits = self.logits(params, hidden)           # (B,S,V) f32
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, labels[..., None],
+                                     axis=-1)[..., 0]
+            ce = (logz - ll).mean()
+        loss = ce + MOE_AUX_COEF * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, batch, *, max_len=None, last_index=None,
+                moe_mode="grouped"):
+        """Returns (last-token logits (B,V), cache). ``last_index`` selects
+        which position's logits to return (for right-padded prompts);
+        defaults to the final position."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        S = x.shape[1]
+        window = _window_for(cfg, max_len or S)
+        if cfg.is_encoder:
+            hidden, _ = tf_mod.forward(params, x, cfg, remat=False,
+                                       window=window)
+            return self.logits(params, hidden), None
+        kw = {"moe_mode": moe_mode} if cfg.family == "moe" else {}
+        hidden, cache = _backend(cfg).prefill(params, x, cfg,
+                                              max_len=max_len, window=window,
+                                              **kw)
+        if last_index is None:
+            last = hidden[:, -1]
+        else:
+            last = hidden[:, last_index]
+        return self.logits(params, last), cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: (B,) int32. Returns (logits (B,V), new cache)."""
+        cfg = self.cfg
+        ctx = _cache_ctx_len(cfg, cache)
+        window = _window_for(cfg, ctx)
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        hidden, cache = _backend(cfg).decode_step(params, x, cfg, cache,
+                                                  window=window)
+        return self.logits(params, hidden[:, 0]), cache
+
+    def init_cache(self, batch, max_len, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.param_dtype)
+        return _backend(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def _cache_ctx_len(cfg, cache):
+    # kv caches are (L|G, B, KH, S, hd): seq is dim 3
+    if cfg.family in ("ssm", "hybrid"):
+        if "k" in cache:
+            return cache["k"].shape[3]
+        return 0
+    return cache["k"].shape[3]
+
+
+def make_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def _chunked_ce(params, hidden, labels, cfg, chunk, model):
+    """Blockwise cross-entropy: scan over vocab chunks carrying the online
+    logsumexp state, never materializing the full (B,S,V) logits.  For
+    small-model / large-vocab training the full-logit tensor (and its
+    gradient all-gathers) dominates the roofline (EXPERIMENTS.md §Perf:
+    mamba2-130m train is 53 GB/layer-step of lm-head collectives)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    d, V = head.shape
+    nc = -(-V // chunk)
+    pad = nc * chunk - V
+    if pad:
+        head = jnp.pad(head, ((0, 0), (0, pad)),
+                       constant_values=0.0)
+
+    B, S, _ = hidden.shape
+    NEG = jnp.float32(-1e30)
+
+    def body(carry, i):
+        m, s, ll = carry
+        w = lax.dynamic_slice(head, (0, i * chunk), (d, chunk))
+        lg = (hidden @ w).astype(jnp.float32)              # (B,S,chunk)
+        if pad:
+            valid = (i * chunk + jnp.arange(chunk)) < V
+            lg = jnp.where(valid[None, None, :], lg, NEG)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        loc = labels - i * chunk
+        in_ch = (loc >= 0) & (loc < chunk)
+        picked = jnp.take_along_axis(
+            lg, jnp.clip(loc, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        ll = ll + jnp.where(in_ch, picked, 0.0)
+        return (m_new, s, ll), None
+
+    m0 = jnp.full((B, S), NEG, jnp.float32)
+    s0 = jnp.zeros((B, S), jnp.float32)
+    ll0 = jnp.zeros((B, S), jnp.float32)
+    (m, s, ll), _ = lax.scan(body, (m0, s0, ll0), jnp.arange(nc))
+    logz = m + jnp.log(jnp.maximum(s, 1e-30))
+    return (logz - ll).mean()

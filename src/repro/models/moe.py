@@ -1,0 +1,124 @@
+"""Top-k token-choice MoE with grouped, capacity-limited gather dispatch.
+
+Two execution modes (DESIGN.md §5):
+
+* ``grouped`` (train / prefill): tokens are grouped per sequence; each expert
+  gathers its top-``capacity`` tokens *within each group* by gate priority
+  (GShard-style capacity with priority dropping, but gather/scatter based — no
+  one-hot dispatch einsum, so HLO FLOPs stay ~= useful expert FLOPs). The
+  expert (E) dimension of the batched GEMMs shards over the ``model`` mesh
+  axis (EP); the group (G) dimension shards over ``data``.
+* ``dense`` (decode): token count per step is tiny, the step is weight-read
+  bound, and routing drops are unacceptable mid-generation — every expert
+  computes every token and results are combined by gates. Zero drops; the
+  extra FLOPs are irrelevant next to the HBM weight reads.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    E = cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), scale=0.02, dtype=jnp.float32),
+        "w1": dense_init(ks[1], (E, d, f), dtype=dtype),
+        "w3": dense_init(ks[2], (E, d, f), dtype=dtype),
+        "w2": dense_init(ks[3], (E, f, d),
+                         scale=1.0 / math.sqrt(f * 2 * cfg.num_layers), dtype=dtype),
+    }
+
+
+def _routing(x, p, cfg):
+    """Returns (gate_full (B,S,E), gates (B,S,k), idx (B,S,k), aux)."""
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    logits = (x.astype(jnp.float32) @ p["router"])            # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, k)                          # (B,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # (B,S,k,E)
+    gate_full = (onehot * gates[..., None]).sum(axis=2)       # (B,S,E)
+    # Switch-style load-balance loss
+    frac_tokens = (onehot.sum(axis=2) > 0).astype(jnp.float32).mean(axis=(0, 1))
+    mean_probs = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return gate_full, gates, idx, aux
+
+
+def moe_ffn(x, p, cfg, mode="grouped", combine="gather"):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss).
+
+    ``combine``: how expert outputs return to token order.
+      * "gather" (default): each token gathers its top-k experts' outputs
+        via the inverse dispatch permutation.  Gathers partition cleanly
+        under GSPMD: only the gathered (B,S,k,D) crosses expert shards.
+      * "scatter": the classic scatter-add combine.  The partitioner
+        expands a scatter whose updates are expert-sharded into per-expert
+        masked all-reduces of the FULL (B,S,D) output — 32 all-reduces/layer
+        for dbrx (§Perf) — kept as the paper-faithful baseline.
+    """
+    B, S, D = x.shape
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    gate_full, gates, idx, aux = _routing(x, p, cfg)
+
+    if mode == "dense" or S * k < 4 * E:
+        # decode / tiny-token path: no drops, combine by gates
+        h1 = jnp.einsum("bsd,edf->bsef", x, p["w1"])
+        h3 = jnp.einsum("bsd,edf->bsef", x, p["w3"])
+        y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(h1) * h3, p["w2"])
+        out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32),
+                         gate_full).astype(x.dtype)
+        return out, aux
+
+    cf = cfg.moe.capacity_factor
+    cap = int(math.ceil(cf * S * k / E))
+    cap = min(S, -(-cap // 4) * 4)                            # pad to multiple of 4
+    gate_es = gate_full.transpose(0, 2, 1)                    # (B,E,S)
+    topc_gate, topc_idx = lax.top_k(gate_es, cap)             # (B,E,cap)
+    x_e = jnp.take_along_axis(
+        x[:, None, :, :],                                     # (B,1,S,D)
+        topc_idx[..., None], axis=2)                          # (B,E,cap,D)
+
+    h1 = jnp.einsum("becd,edf->becf", x_e, p["w1"])
+    h3 = jnp.einsum("becd,edf->becf", x_e, p["w3"])
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(h1) * h3, p["w2"])
+
+    if combine == "gather":
+        # inverse permutation: pos[b,s,e] = slot of token s in expert e's
+        # capacity buffer, or ``cap`` (-> zero-padded row) if dropped
+        bb = jnp.arange(B)[:, None, None]
+        ee = jnp.arange(E)[None, :, None]
+        cc = jnp.broadcast_to(jnp.arange(cap)[None, None, :], (B, E, cap))
+        pos = jnp.full((B, S, E), cap, jnp.int32)
+        pos = pos.at[bb, topc_idx, ee].set(cc, mode="drop")
+        slot = jnp.take_along_axis(pos, idx, axis=2)          # (B,S,k)
+        y = y.astype(x.dtype)                                 # combine in bf16
+        from repro.distributed import hints as _hints
+        hp = _hints.current()
+        if hp is not None and hp.moe_ep:
+            # gathering across the expert-sharded dim would otherwise lower
+            # to per-expert masked all-reduces of the full (B,S,k,D) result
+            # (68 GB/layer, phi3.5 §Perf): replicate experts FIRST (one
+            # explicit all-gather of y) and gather shard-locally
+            y = _hints.constrain(y, ((hp.dp or ("data",)), None, None, None))
+        y_pad = jnp.pad(y, ((0, 0), (0, 0), (0, 1), (0, 0)))  # slot==cap -> 0
+        bb2 = jnp.arange(B)[:, None, None]
+        yk = y_pad[bb2, idx, slot]                            # (B,S,k,D)
+        out = jnp.einsum("bskd,bsk->bsd", yk, gates,
+                         preferred_element_type=jnp.float32)
+        return out.astype(x.dtype), aux
+
+    y = y.astype(jnp.float32) * topc_gate[..., None]          # zero where gate==0
+    out = jnp.zeros((B, S, D), jnp.float32)
+    bidx = jnp.arange(B)[:, None]
+    out = out.at[bidx, topc_idx.reshape(B, E * cap)].add(
+        y.reshape(B, E * cap, D), mode="drop")
+    return out.astype(x.dtype), aux

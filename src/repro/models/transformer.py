@@ -1,0 +1,164 @@
+"""Dense / MoE / VLM / audio-encoder transformer stack.
+
+Layers are homogeneous and stacked (leading L axis) so the whole stack runs
+under ``lax.scan`` with per-layer remat — this keeps HLO size O(1) in depth,
+which matters for the 512-device dry-run compiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (
+    attention_layer, chunked_attention, decode_attention, dense_init,
+    init_attention, init_mlp, mlp_layer, rms_norm, rope,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_block(key, cfg):
+    dtype = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.num_layers, dtype)
+    return p
+
+
+def init_params(key, cfg):
+    dtype = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab_size),
+                                       dtype=dtype)
+    return params
+
+
+def _block(x, lp, cfg, positions, *, cache=None, cache_index=None, window=0,
+           moe_mode="grouped", return_kv=False):
+    """One transformer block. Returns (x, new_cache_or_kv, aux)."""
+    h, kv = attention_layer(
+        rms_norm(x, lp["norm1"], cfg.norm_eps), lp["attn"], cfg,
+        positions=positions, cache=cache, cache_index=cache_index,
+        window=window, return_kv=return_kv)
+    x = x + h
+    g = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe:
+        f, aux = moe_ffn(g, lp["moe"], cfg, mode=moe_mode)
+    else:
+        f, aux = mlp_layer(g, lp["mlp"]), jnp.float32(0.0)
+    return x + f, kv, aux
+
+
+def forward(params, x, cfg, *, remat=True, moe_mode="grouped", window=0):
+    """Full-sequence forward (train / encoder). x: (B,S,D) embeddings.
+    Returns (hidden (B,S,D), aux_loss)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, _, aux_l = _block(h, lp, cfg, positions, window=window,
+                              moe_mode=moe_mode)
+        return (h2, aux + aux_l), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def prefill(params, x, cfg, *, max_len=None, window=0, moe_mode="grouped"):
+    """Forward that also materializes the KV cache for decode.
+    Returns (hidden (B,S,D), cache dict). Serving paths pass
+    ``moe_mode='dense'`` (no capacity drops — generation must not depend on
+    batch composition); the throughput-oriented dry-run keeps 'grouped'."""
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(h, lp):
+        h2, (k, v), _ = _block(h, lp, cfg, positions, window=window,
+                               moe_mode=moe_mode, return_kv=True)
+        # store kv-heads-major (B,KH,S,hd): decode contractions then need
+        # no transpose copies of the cache (§Perf iteration 3)
+        return h2, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"])
+    if max_len > S:
+        pad = ((0, 0), (0, 0), (0, 0), (0, max_len - S), (0, 0))
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    cache = {"k": ks, "v": vs,
+             "len": jnp.full((B,), S, jnp.int32)}
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), cache
+
+
+def decode_step(params, x, cfg, cache, *, window=0):
+    """x: (B,1,D) embedding of the new token. Returns (hidden (B,1,D), cache).
+
+    The layer scan only emits each layer's new kv vectors; the stacked cache
+    is updated with ONE batched scatter afterwards (per-layer in-scan cache
+    updates cost a full-cache round trip per layer — §Perf)."""
+    B = x.shape[0]
+    positions = cache["len"][:, None]
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h2, (kn, vn), _ = _block(h, lp, cfg, positions,
+                                 cache={"k": kc, "v": vc},
+                                 cache_index=cache["len"],
+                                 window=window, moe_mode="dense")
+        return h2, (kn, vn)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    kc = _scatter_new_kv(cache["k"], ks, cache["len"])
+    vc = _scatter_new_kv(cache["v"], vs, cache["len"])
+    new_cache = {"k": kc, "v": vc, "len": cache["len"] + 1}
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def _scatter_new_kv(cache, new, lens):
+    """Write new kv vectors into the stacked cache in ONE scatter.
+
+    cache: (L, B, KH, S, hd); new: (L, B, KH, hd); lens: (B,) positions.
+    Flattening (B, KH) makes the two advanced-index dims ADJACENT, which
+    keeps the scatter in place (non-adjacent advanced indices make XLA's
+    scatter expander materialize transposed copies of the whole cache —
+    §Perf iteration log, yi-34b decode)."""
+    L, B, KH, S, hd = cache.shape
+    flat = cache.reshape(L, B * KH, S, hd)
+    rows = jnp.arange(B * KH)
+    seqi = jnp.repeat(lens, KH)
+    upd = new.astype(cache.dtype).reshape(L, B * KH, hd)
+    flat = flat.at[:, rows, seqi].set(upd)
+    return flat.reshape(L, B, KH, S, hd)
+
+
+def init_cache(cfg, batch, max_len, dtype):
+    L, KH, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    # kv-heads-major (B,KH,S,hd): matches the decode contraction layout
+    return {
+        "k": jnp.zeros((L, batch, KH, max_len, hd), dtype),
+        "v": jnp.zeros((L, batch, KH, max_len, hd), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,261 @@
+"""Engine cache backends.
+
+SlotBackend  — contiguous per-slot KV/state cache, works for every family
+               (attention, SSM, hybrid). The cache pytree has batch axis
+               ``max_slots``; prefill fills one slot, decode steps all slots.
+PagedBackend — vLLM-style paged KV pool with block tables, for attention
+               families; decode attention goes through the paged-attention
+               path (pure-jnp page gather on CPU, Pallas kernel on TPU via
+               ``use_kernel=True``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import LM
+from repro.models.layers import rms_norm, project_qkv, mlp_layer
+from repro.models.moe import moe_ffn
+from repro.models.transformer import _block
+from repro.serving.kv_cache import PagedKVCache
+from repro.kernels.paged_attention.ops import paged_attention as paged_attn_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class SlotBackend:
+    """Contiguous cache with ``max_slots`` sequences of up to ``max_len``."""
+
+    def __init__(self, model: LM, params, *, max_slots: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(max_slots, max_len)
+        self.free_slots = list(range(max_slots - 1, -1, -1))
+        self.slot_of: dict[str, int] = {}
+
+        def _insert(cache, slot_cache, slot):
+            def ins(big, small):
+                ax = 0 if big.ndim == 1 else 1
+                idx = [slice(None)] * big.ndim
+                idx[ax] = slot
+                return big.at[tuple(idx)].set(
+                    jnp.squeeze(small, ax) if small.ndim == big.ndim else small)
+            return jax.tree.map(ins, cache, slot_cache)
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+        self._prefill = {}  # bucket -> jitted fn
+        self._decode = jax.jit(
+            lambda p, toks, cache: self.model.decode_step(p, toks, cache),
+            donate_argnums=(2,))
+
+    # -- capacity -------------------------------------------------------------
+    def can_admit(self, n_prompt: int) -> bool:
+        return bool(self.free_slots) and n_prompt < self.max_len
+
+    # -- ops --------------------------------------------------------------------
+    def prefill(self, seq_id: str, prompt: list[int]):
+        """Returns last-token logits (V,)."""
+        slot = self.free_slots.pop()
+        self.slot_of[seq_id] = slot
+        S = len(prompt)
+        # SSM/hybrid state is polluted by right-padding, so those use exact
+        # lengths (one compile per distinct length); attention families use
+        # power-of-two buckets with a masked last_index.
+        if self.cfg.family in ("ssm", "hybrid"):
+            bucket = S
+        else:
+            bucket = min(_bucket(S), self.max_len)
+        if bucket not in self._prefill:
+            def fn(params, toks, true_len):
+                logits, cache = self.model.prefill(
+                    params, {"tokens": toks}, max_len=self.max_len,
+                    last_index=true_len - 1, moe_mode="dense")
+                cache["len"] = jnp.full_like(cache["len"], true_len)
+                return logits, cache
+            self._prefill[bucket] = jax.jit(fn)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :S] = prompt
+        logits, slot_cache = self._prefill[bucket](
+            self.params, jnp.asarray(toks), S)
+        self.cache = self._insert(self.cache, slot_cache, slot)
+        return np.asarray(logits)[0]
+
+    def decode_batch(self, tokens_by_slot: np.ndarray):
+        """tokens_by_slot: (max_slots,) int32. Returns logits (max_slots, V)."""
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens_by_slot),
+                                          self.cache)
+        return np.asarray(logits)
+
+    def free(self, seq_id: str):
+        slot = self.slot_of.pop(seq_id)
+        self.free_slots.append(slot)
+
+    def slot(self, seq_id: str) -> int:
+        return self.slot_of[seq_id]
+
+
+class PagedBackend:
+    """Paged KV cache backend for attention-family models."""
+
+    def __init__(self, model: LM, params, *, max_slots: int, max_len: int,
+                 page_size: int = 128, num_pages: int | None = None,
+                 use_kernel: bool = False):
+        cfg = model.cfg
+        assert cfg.family in ("dense", "moe", "vlm"), \
+            "paged backend supports attention families"
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_seq = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = max_slots * self.pages_per_seq + 1  # +1: trash page 0
+        self.kv = PagedKVCache(num_pages, page_size)
+        L, KH, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        dtype = jnp.dtype(cfg.param_dtype)
+        self.pools = {
+            "k": jnp.zeros((L, num_pages, page_size, KH, hd), dtype),
+            "v": jnp.zeros((L, num_pages, page_size, KH, hd), dtype),
+        }
+        self.use_kernel = use_kernel
+        self.free_slots = list(range(max_slots - 1, -1, -1))
+        self.slot_of: dict[str, int] = {}
+        self.seq_of: dict[int, str] = {}
+        self._prefill = {}
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # -- capacity -------------------------------------------------------------
+    def can_admit(self, n_prompt: int) -> bool:
+        return (bool(self.free_slots)
+                and self.kv.can_allocate(n_prompt + 1)
+                and n_prompt < self.max_len)
+
+    # -- jitted bodies ----------------------------------------------------------
+    def _attend(self, q, kp, vp, tables, lens):
+        if self.use_kernel:
+            return paged_attn_kernel(q, kp, vp, tables, lens, interpret=True)
+        return paged_attention_ref(q, kp, vp, tables, lens)
+
+    def _prefill_impl(self, params, toks, pools, table, true_len, *, n_pages):
+        """toks: (1, S_bucket); table: (n_pages,) page ids for this seq."""
+        cfg = self.cfg
+        model = self.model
+        S = toks.shape[1]
+        x = model.embed_inputs(params, {"tokens": toks})
+        positions = jnp.arange(S)[None, :]
+
+        def body(h, xs):
+            lp, kp, vp = xs
+            h2, (k, v), _ = _block(h, lp, cfg, positions, moe_mode="dense",
+                                   return_kv=True)
+            kpg = k[0].reshape(n_pages, self.page_size, *k.shape[2:])
+            vpg = v[0].reshape(n_pages, self.page_size, *v.shape[2:])
+            kp = kp.at[table].set(kpg.astype(kp.dtype))
+            vp = vp.at[table].set(vpg.astype(vp.dtype))
+            return h2, (kp, vp)
+
+        h, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
+                                         pools["v"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        idx = jnp.maximum(true_len - 1, 0)
+        logits = model.logits(params, h[:, idx])
+        return logits[0], {"k": nk, "v": nv}
+
+    def _decode_impl(self, params, pools, tokens, tables, lens):
+        """tokens: (B,); tables: (B, PPS); lens: (B,) current lengths.
+        The page for position ``lens`` must already exist (ensure_slot)."""
+        cfg = self.cfg
+        model = self.model
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        positions = lens[:, None]
+        page_slot = lens // self.page_size                     # (B,)
+        page_idx = jnp.take_along_axis(tables, page_slot[:, None], 1)[:, 0]
+        off = lens % self.page_size
+
+        def body(h, xs):
+            lp, kp, vp = xs
+            xa = rms_norm(h, lp["norm1"], cfg.norm_eps)
+            q, k, v = project_qkv(xa, lp["attn"], cfg, positions)
+            kp = kp.at[page_idx, off].set(k[:, 0].astype(kp.dtype))
+            vp = vp.at[page_idx, off].set(v[:, 0].astype(vp.dtype))
+            a = self._attend(q[:, 0], kp, vp, tables, lens + 1)  # (B,H,hd)
+            h = h + (a.reshape(B, 1, -1) @ lp["attn"]["wo"])
+            g = rms_norm(h, lp["norm2"], cfg.norm_eps)
+            if cfg.moe:
+                f, _ = moe_ffn(g, lp["moe"], cfg, mode="dense")
+            else:
+                f = mlp_layer(g, lp["mlp"])
+            return h + f, (kp, vp)
+
+        h, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
+                                         pools["v"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = model.logits(params, h[:, 0])
+        return logits, {"k": nk, "v": nv}
+
+    # -- public ops ---------------------------------------------------------------
+    def prefill(self, seq_id: str, prompt: list[int]):
+        slot = self.free_slots.pop()
+        self.slot_of[seq_id] = slot
+        self.seq_of[slot] = seq_id
+        S = len(prompt)
+        bucket = min(_bucket(max(S, self.page_size)), self.max_len)
+        bucket = -(-bucket // self.page_size) * self.page_size
+        n_pages = bucket // self.page_size
+        pages = self.kv.allocate(seq_id, S)
+        # padded tail of the bucket writes land in trash page 0 (copy — do
+        # not mutate the sequence's own table)
+        write_table = list(pages) + [0] * (n_pages - len(pages))
+        write_table = write_table[:n_pages]
+        if bucket not in self._prefill:
+            self._prefill[bucket] = jax.jit(
+                partial(self._prefill_impl, n_pages=n_pages),
+                donate_argnums=(2,))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :S] = prompt
+        logits, self.pools = self._prefill[bucket](
+            self.params, jnp.asarray(toks), self.pools,
+            jnp.asarray(np.array(write_table, np.int32)), S)
+        return np.asarray(logits)
+
+    def decode_batch(self, tokens_by_slot: np.ndarray):
+        """tokens_by_slot: (max_slots,). Inactive slots write to trash page 0."""
+        for sid in self.slot_of:
+            self.kv.ensure_slot(sid)
+        tables = np.zeros((self.max_slots, self.pages_per_seq), np.int32)
+        lens = np.zeros((self.max_slots,), np.int32)
+        for slot, sid in self.seq_of.items():
+            tables[slot] = self.kv.table_array([sid], self.pages_per_seq)[0]
+            lens[slot] = self.kv.length(sid)
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(tokens_by_slot),
+            jnp.asarray(tables), jnp.asarray(lens))
+        for sid in self.slot_of:
+            self.kv.advance(sid)
+        return np.asarray(logits)
+
+    def free(self, seq_id: str):
+        slot = self.slot_of.pop(seq_id)
+        self.seq_of.pop(slot, None)
+        self.free_slots.append(slot)
+        self.kv.free(seq_id)
+
+    def slot(self, seq_id: str) -> int:
+        return self.slot_of[seq_id]

@@ -1,0 +1,65 @@
+"""Roofline-based service-time model for simulated large-model instances.
+
+The CPU container cannot run a 70B model, but the discrete-event benchmarks
+need realistic per-step service times. We derive them from the same roofline
+terms reported in EXPERIMENTS.md §Roofline, for the TPU v5e target:
+
+  compute  = FLOPs / (chips * 197e12 * eff)
+  memory   = bytes / (chips * 819e9)
+  step     = max(compute, memory) + fixed overhead
+
+Calibration knob ``mfu``/``eff`` defaults to 0.5 for prefill (compute-bound)
+and 1.0 for memory streaming (decode is HBM-bound).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+STEP_OVERHEAD = 2e-3         # dispatch/collective latency floor per step
+
+
+@dataclass
+class InstanceCost:
+    """Per-phase timing for one model instance on ``chips`` chips.
+
+    ``peak_flops``/``hbm_bw`` default to the TPU-v5e target; pass A100
+    constants (312e12 bf16, 1555e9) to validate the DES against the paper's
+    own hardware."""
+    cfg: ModelConfig
+    chips: int = 8
+    mfu: float = 0.5
+    bytes_per_param: float = 2.0
+    storage_bw: float = 2e9     # weight-load bandwidth (bytes/s per instance)
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    step_overhead: float = STEP_OVERHEAD   # scheduler/sampling/dispatch floor
+
+    # -- model load (cold start component) -------------------------------------
+    def load_time(self) -> float:
+        """Weight load from cluster storage into device memory."""
+        return self.cfg.num_params * self.bytes_per_param / self.storage_bw
+
+    # -- prefill ---------------------------------------------------------------
+    def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
+        flops = 2.0 * self.cfg.num_active_params * prompt_tokens * batch
+        t_c = flops / (self.chips * self.peak_flops * self.mfu)
+        return max(t_c, self.step_overhead)
+
+    # -- decode ------------------------------------------------------------------
+    def decode_step_time(self, batch: int, ctx: int = 1024) -> float:
+        cfg = self.cfg
+        w_bytes = cfg.num_active_params * self.bytes_per_param
+        kv_per_tok = (cfg.attn_layer_count() * 2 * cfg.kv_dim
+                      * self.bytes_per_param)
+        kv_bytes = kv_per_tok * ctx * batch
+        t_mem = (w_bytes + kv_bytes) / (self.chips * self.hbm_bw)
+        flops = 2.0 * cfg.num_active_params * batch
+        t_c = flops / (self.chips * self.peak_flops * self.mfu)
+        return max(t_mem, t_c) + self.step_overhead
+
+    def decode_tok_per_s(self, batch: int, ctx: int = 1024) -> float:
+        return batch / self.decode_step_time(batch, ctx)

@@ -1,0 +1,39 @@
+"""Embedding engine for encoder-only models (the Infinity-backend analogue:
+paper §3.3 serves NV-Embed-v2 next to the LLMs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+from repro.models.transformer import forward as tf_forward
+
+
+class EmbeddingEngine:
+    def __init__(self, model: LM, params, max_batch: int = 16,
+                 max_len: int = 512):
+        assert model.cfg.is_encoder
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._fwd = {}
+
+    def embed(self, embeds_batch: np.ndarray, lengths: np.ndarray):
+        """embeds_batch: (B, S, D) precomputed frontend features;
+        lengths: (B,). Returns mean-pooled embeddings (B, D)."""
+        B, S, _ = embeds_batch.shape
+        key = (B, S)
+        if key not in self._fwd:
+            def fn(params, x, lens):
+                h, _ = tf_forward(params, x.astype(params["embed"].dtype),
+                                  self.model.cfg, remat=False)
+                mask = (jnp.arange(x.shape[1])[None, :] < lens[:, None])
+                mask = mask[..., None].astype(h.dtype)
+                pooled = (h * mask).sum(1) / jnp.maximum(mask.sum(1), 1)
+                return pooled / jnp.linalg.norm(pooled, axis=-1, keepdims=True)
+            self._fwd[key] = jax.jit(fn)
+        return np.asarray(self._fwd[key](self.params,
+                                         jnp.asarray(embeds_batch),
+                                         jnp.asarray(lengths)))

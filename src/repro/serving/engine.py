@@ -1,0 +1,192 @@
+"""Continuous-batching inference engine (the vLLM-analogue, real JAX).
+
+One ``step()`` = admit waiting requests into free capacity (prefill each,
+sampling its first token), then run ONE batched decode step across all
+running sequences. This is vLLM-style iteration-level scheduling: new
+requests join the running batch between token steps, finished ones free
+their slots/pages immediately.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.models import LM
+from repro.serving.backends import PagedBackend, SlotBackend
+from repro.serving.request import (InferenceRequest, RequestMetrics,
+                                   RequestOutput)
+from repro.serving.sampler import sample_tokens
+
+
+class _RealClock:
+    def now(self) -> float:
+        return time.monotonic()
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_seq_len: int = 512
+    backend: str = "slots"            # slots | paged
+    page_size: int = 64
+    num_pages: int | None = None
+    use_kernel: bool = False
+    max_prefills_per_step: int = 4
+
+
+@dataclass
+class _Running:
+    req: InferenceRequest
+    metrics: RequestMetrics
+    output_tokens: list = field(default_factory=list)
+
+    @property
+    def last_token(self) -> int:
+        return self.output_tokens[-1]
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, model: LM, params, cfg: EngineConfig | None = None,
+                 clock=None):
+        self.model = model
+        self.cfg = cfg or EngineConfig()
+        self.clock = clock or _RealClock()
+        if self.cfg.backend == "paged":
+            self.backend = PagedBackend(
+                model, params, max_slots=self.cfg.max_slots,
+                max_len=self.cfg.max_seq_len, page_size=self.cfg.page_size,
+                num_pages=self.cfg.num_pages, use_kernel=self.cfg.use_kernel)
+        else:
+            self.backend = SlotBackend(
+                model, params, max_slots=self.cfg.max_slots,
+                max_len=self.cfg.max_seq_len)
+        self.waiting: deque[InferenceRequest] = deque()
+        self.running: dict[str, _Running] = {}
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0,
+                      "finished": 0, "aborted": 0}
+
+    # -- queue management -------------------------------------------------------
+    def add_request(self, req: InferenceRequest):
+        m = RequestMetrics(arrival_time=req.arrival_time or self.clock.now(),
+                           queued_time=self.clock.now())
+        req._metrics = m
+        self.waiting.append(req)
+
+    def abort(self, request_id: str) -> bool:
+        for i, r in enumerate(self.waiting):
+            if r.request_id == request_id:
+                del self.waiting[i]
+                self.stats["aborted"] += 1
+                return True
+        if request_id in self.running:
+            self.backend.free(request_id)
+            del self.running[request_id]
+            self.stats["aborted"] += 1
+            return True
+        return False
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def num_running(self) -> int:
+        return len(self.running)
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    def saturated(self) -> bool:
+        """No free capacity and a queue is forming (autoscaler signal)."""
+        return bool(self.waiting) and not self.backend.can_admit(
+            len(self.waiting[0].prompt_tokens))
+
+    # -- engine iteration ---------------------------------------------------------
+    def step(self) -> list[RequestOutput]:
+        self.stats["steps"] += 1
+        finished: list[RequestOutput] = []
+
+        # 1) admit waiting requests while capacity allows
+        admitted = 0
+        while (self.waiting and admitted < self.cfg.max_prefills_per_step
+               and self.backend.can_admit(len(self.waiting[0].prompt_tokens))):
+            req = self.waiting.popleft()
+            run = _Running(req=req, metrics=req._metrics)
+            logits = self.backend.prefill(req.request_id, req.prompt_tokens)
+            self.stats["prefill_tokens"] += len(req.prompt_tokens)
+            tok = self._sample_one(req, logits, step=0)
+            run.output_tokens.append(tok)
+            run.metrics.first_token_time = self.clock.now()
+            self.stats["decode_tokens"] += 1
+            self.running[req.request_id] = run
+            admitted += 1
+            f = self._maybe_finish(run)
+            if f:
+                finished.append(f)
+
+        # 2) one batched decode step over all running sequences
+        if self.running:
+            max_slots = self.cfg.max_slots
+            tokens = np.zeros((max_slots,), np.int32)
+            by_slot: dict[int, _Running] = {}
+            for rid, run in self.running.items():
+                s = self.backend.slot(rid)
+                tokens[s] = run.last_token
+                by_slot[s] = run
+            logits = self.backend.decode_batch(tokens)
+            temps = np.zeros((max_slots,), np.float32)
+            top_ps = np.ones((max_slots,), np.float32)
+            seeds = np.zeros((max_slots,), np.int32)
+            for s, run in by_slot.items():
+                sp = run.req.sampling
+                temps[s] = sp.temperature
+                top_ps[s] = sp.top_p
+                seeds[s] = (sp.seed * 1_000_003
+                            + len(run.output_tokens)) % (2 ** 31 - 1)
+            toks = np.asarray(sample_tokens(logits, temps, top_ps, seeds))
+            for s, run in by_slot.items():
+                run.output_tokens.append(int(toks[s]))
+                self.stats["decode_tokens"] += 1
+                f = self._maybe_finish(run)
+                if f:
+                    finished.append(f)
+        return finished
+
+    def run_to_completion(self) -> list[RequestOutput]:
+        outs = []
+        while self.has_work():
+            outs.extend(self.step())
+        return outs
+
+    # -- helpers ------------------------------------------------------------------
+    def _sample_one(self, req, logits, step) -> int:
+        sp = req.sampling
+        seed = (sp.seed * 1_000_003 + step) % (2 ** 31 - 1)
+        tok = sample_tokens(logits[None].astype(np.float32),
+                            np.array([sp.temperature], np.float32),
+                            np.array([sp.top_p], np.float32),
+                            np.array([seed], np.int32))
+        return int(np.asarray(tok)[0])
+
+    def _maybe_finish(self, run: _Running):
+        sp = run.req.sampling
+        reason = ""
+        if sp.stop_token is not None and run.last_token == sp.stop_token:
+            reason = "stop"
+        elif len(run.output_tokens) >= sp.max_tokens:
+            reason = "length"
+        elif len(run.output_tokens) + len(run.req.prompt_tokens) \
+                >= self.cfg.max_seq_len:
+            reason = "max_seq_len"
+        if not reason:
+            return None
+        run.metrics.finish_time = self.clock.now()
+        self.backend.free(run.req.request_id)
+        del self.running[run.req.request_id]
+        self.stats["finished"] += 1
+        return RequestOutput(request_id=run.req.request_id,
+                             output_tokens=run.output_tokens, finished=True,
+                             finish_reason=reason, metrics=run.metrics)

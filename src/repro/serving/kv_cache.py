@@ -1,0 +1,82 @@
+"""Paged KV cache manager (vLLM-style block tables, host-side bookkeeping).
+
+The page *pool* is device memory (jnp arrays, shaped (L, NP, page, KH, hd));
+this class owns the free list and per-sequence block tables. Token writes and
+attention reads happen inside the jitted engine step functions, which receive
+the pool plus padded block-table / length arrays built here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+class PagedKVCache:
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # page 0 is reserved as the trash page: inactive batch slots in the
+        # jitted decode step write there (masked reads make it harmless)
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._tables: dict[str, list[int]] = {}
+        self._lens: dict[str, int] = {}
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= self.free_pages
+
+    # -- lifecycle -----------------------------------------------------------
+    def allocate(self, seq_id: str, n_tokens: int) -> list[int]:
+        need = self.pages_needed(max(n_tokens, 1))
+        if need > self.free_pages:
+            raise OutOfPages(f"{seq_id}: need {need} pages, {self.free_pages} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[seq_id] = pages
+        self._lens[seq_id] = n_tokens
+        return pages
+
+    def ensure_slot(self, seq_id: str) -> None:
+        """Make sure a page exists for the NEXT token position (call before
+        the decode step writes at position ``len``)."""
+        n = self._lens[seq_id] + 1
+        if self.pages_needed(n) > len(self._tables[seq_id]):
+            if not self._free:
+                raise OutOfPages(f"{seq_id}: pool exhausted on append")
+            self._tables[seq_id].append(self._free.pop())
+
+    def advance(self, seq_id: str) -> None:
+        self._lens[seq_id] += 1
+
+    def append_token(self, seq_id: str) -> None:
+        """ensure_slot + advance (single-sequence convenience)."""
+        self.ensure_slot(seq_id)
+        self.advance(seq_id)
+
+    def free(self, seq_id: str) -> None:
+        self._free.extend(reversed(self._tables.pop(seq_id, [])))
+        self._lens.pop(seq_id, None)
+
+    def length(self, seq_id: str) -> int:
+        return self._lens[seq_id]
+
+    # -- device-facing views ---------------------------------------------------
+    def table_array(self, seq_ids: list[str], max_pages: int) -> np.ndarray:
+        """(B, max_pages) int32, padded with page 0 (masked by lens)."""
+        out = np.zeros((len(seq_ids), max_pages), np.int32)
+        for i, sid in enumerate(seq_ids):
+            t = self._tables.get(sid, [])
+            out[i, :len(t)] = t
+        return out
+
+    def lens_array(self, seq_ids: list[str]) -> np.ndarray:
+        return np.array([self._lens.get(s, 0) for s in seq_ids], np.int32)

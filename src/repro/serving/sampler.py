@@ -1,0 +1,30 @@
+"""Token sampling: greedy / temperature / top-p (nucleus)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def sample_tokens(logits, temperature, top_p, seeds):
+    """logits: (B, V) f32; temperature, top_p: (B,) f32; seeds: (B,) int32
+    (per-request seed folded with the step counter by the caller).
+    temperature == 0 -> greedy. Returns (B,) int32."""
+
+    def one(lg, temp, tp, seed):
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+
+        def sampled():
+            scaled = lg / jnp.maximum(temp, 1e-6)
+            sort_idx = jnp.argsort(-scaled)
+            sorted_logits = scaled[sort_idx]
+            probs = jax.nn.softmax(sorted_logits)
+            cum = jnp.cumsum(probs)
+            keep = cum - probs < tp               # first token always kept
+            masked = jnp.where(keep, sorted_logits, -jnp.inf)
+            choice = jax.random.categorical(jax.random.PRNGKey(seed), masked)
+            return sort_idx[choice].astype(jnp.int32)
+
+        return jax.lax.cond(temp <= 0.0, lambda: greedy, sampled)
+
+    return jax.vmap(one)(logits, temperature, top_p, seeds)

@@ -1,0 +1,61 @@
+"""Training step: remat'd scan-over-layers forward/backward with gradient
+accumulation over microbatches, then a fused AdamW update."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import LM
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``batch`` leaves have leading dim global_batch; it is split into
+    ``num_microbatches`` sequential accumulation steps."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.train_loss(params, mb, remat=remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        n = num_microbatches
+
+        if n == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = lax.scan(micro, (gz, jnp.float32(0.0)),
+                                            mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = {}
+
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+        out = {"loss": loss, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def init_training(model: LM, rng):
+    params = model.init_params(rng)
+    opt_state = adamw_init(params)
+    return params, opt_state

@@ -1,0 +1,8 @@
+import os
+
+# Tests run single-device; ONLY launch/dryrun.py sets the 512-device flag.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

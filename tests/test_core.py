@@ -1,0 +1,383 @@
+"""Control-plane behaviour tests: auth, scheduler, federation (§4.5),
+gateway optimizations (§5.3.1), auto-scaling (Fig. 4), hot nodes, batch mode
+(§4.4), and fault tolerance."""
+import math
+
+import pytest
+
+from repro.core import (AccessPolicy, AuthError, AuthService,
+                        CachingAuthClient, ClusterScheduler, EventLoop,
+                        GatewayConfig, JobState)
+from repro.core.testbed import (LLAMA8B, LLAMA70B, System, build_system,
+                                default_deployment, drive_workload, warm_up)
+from repro.data.workload import make_workload
+
+
+def _mk(deps=None, **kw):
+    return build_system(deps, **kw)
+
+
+# ---------------------------------------------------------------------------
+# auth
+# ---------------------------------------------------------------------------
+
+def test_auth_token_lifecycle_and_cache():
+    loop = EventLoop()
+    svc = AuthService(loop, introspection_latency=2.0)
+    svc.add_user("alice", groups=("users",))
+    tok = svc.issue_token("alice")
+    client = CachingAuthClient(loop, svc)
+    out = []
+    client.validate(tok, out.append)
+    loop.run_until_idle()
+    assert out[0].user == "alice"
+    assert loop.now() == pytest.approx(2.0)   # one introspection round trip
+    # cached second call: no added introspection
+    client.validate(tok, out.append)
+    loop.run_until_idle()
+    assert svc.introspections == 1 and client.hits == 1
+
+    bad = []
+    client.validate("bogus", bad.append)
+    loop.run_until_idle()
+    assert isinstance(bad[0], AuthError)
+
+
+def test_auth_coalesces_concurrent_bursts():
+    loop = EventLoop()
+    svc = AuthService(loop, introspection_latency=2.0, rate_limit_per_s=10)
+    svc.add_user("alice")
+    tok = svc.issue_token("alice")
+    client = CachingAuthClient(loop, svc)
+    out = []
+    for _ in range(500):                      # burst far above provider limit
+        client.validate(tok, out.append)
+    loop.run_until_idle()
+    assert svc.introspections == 1            # Optimization 2
+    assert all(getattr(o, "user", None) == "alice" for o in out)
+
+
+def test_rbac_policy():
+    pol = AccessPolicy(model_groups={"secret-model": "insiders"})
+    from repro.core.auth import Identity
+    assert not pol.allowed(Identity("bob", ("users",)), "secret-model")
+    assert pol.allowed(Identity("eve", ("insiders",)), "secret-model")
+    assert pol.allowed(Identity("bob", ("users",)), "open-model")
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_queue_and_release():
+    loop = EventLoop()
+    sched = ClusterScheduler(loop, "c", num_nodes=2, startup_delay=10.0)
+    started = []
+    j1 = sched.submit(2, on_start=lambda j: started.append(j.job_id))
+    j2 = sched.submit(1, on_start=lambda j: started.append(j.job_id))
+    loop.run_until_idle()
+    assert started == [j1.job_id]             # j2 waits: no free nodes
+    assert j2.state == JobState.QUEUED
+    sched.release(j1)
+    loop.run_until_idle()
+    assert started == [j1.job_id, j2.job_id]
+    assert j2.queue_wait > 0
+
+
+def test_scheduler_node_failure_kills_job():
+    loop = EventLoop()
+    sched = ClusterScheduler(loop, "c", num_nodes=2, startup_delay=1.0)
+    ended = []
+    j = sched.submit(2, on_start=lambda j: None,
+                     on_end=lambda j: ended.append(j.state))
+    loop.run_until_idle()
+    victim = j.nodes[0]
+    sched.fail_node(victim)
+    assert ended == [JobState.FAILED]
+    assert sched.available_nodes() == 1       # one node down, one returned
+    sched.restore_node(victim)
+    assert sched.available_nodes() == 2
+
+
+# ---------------------------------------------------------------------------
+# federation (§4.5 priority rules)
+# ---------------------------------------------------------------------------
+
+def _two_cluster_system(nodes_a=4, nodes_b=4):
+    deps = {
+        "sophia": {LLAMA70B.name: default_deployment(LLAMA70B)},
+        "polaris": {LLAMA70B.name: default_deployment(LLAMA70B)},
+    }
+    return build_system(deps, nodes_per_cluster=nodes_a)
+
+
+def test_federation_prefers_active_instance_then_free_nodes():
+    sysd = _two_cluster_system()
+    model = LLAMA70B.name
+    # cold: no active instances anywhere -> rule 2 picks first with free nodes
+    ep = sysd.router.select_endpoint(model)
+    assert ep == "sophia-ep"
+    assert sysd.router.decisions[-1][2] == "free-nodes"
+    # warm polaris: rule 1 must now pick polaris despite registry order
+    sysd.endpoints["polaris-ep"]._spawn_instance(model)
+    sysd.loop.run_until_idle()
+    ep = sysd.router.select_endpoint(model)
+    assert ep == "polaris-ep"
+    assert sysd.router.decisions[-1][2] == "active-instance"
+
+
+def test_federation_falls_back_to_configured_order():
+    sysd = _two_cluster_system()
+    model = LLAMA70B.name
+    for s in sysd.schedulers.values():        # exhaust all nodes
+        while s.available_nodes():
+            s.submit(1, on_start=lambda j: None)
+    sysd.loop.run_until_idle()
+    ep = sysd.router.select_endpoint(model)
+    assert ep == "sophia-ep"
+    assert sysd.router.decisions[-1][2] == "configured-order"
+
+
+def test_federation_skips_unhealthy_endpoint():
+    sysd = _two_cluster_system()
+    sysd.health.mark_down("sophia-ep")
+    sysd.loop.run_until(20.0)                 # health monitor tick
+    assert sysd.router.select_endpoint(LLAMA70B.name) == "polaris-ep"
+
+
+# ---------------------------------------------------------------------------
+# gateway behaviour + the three paper optimizations
+# ---------------------------------------------------------------------------
+
+def test_gateway_validates_and_rate_limits():
+    sysd = _mk(gateway_config=GatewayConfig(rate_limit_per_user=1.0,
+                                            rate_burst=2.0))
+    warm_up(sysd, LLAMA70B.name)
+    tok = sysd.token_for("alice")
+    futs = [sysd.gateway.submit(tok, {"model": LLAMA70B.name,
+                                      "prompt_tokens": 8, "max_tokens": 2})
+            for _ in range(5)]
+    bad = sysd.gateway.submit(tok, {"model": LLAMA70B.name,
+                                    "prompt_tokens": -1, "max_tokens": 0})
+    sysd.loop.run_until_idle()
+    errs = [f for f in futs if f.error is not None]
+    assert len(errs) == 3                     # burst of 2 + 1 regenerated token
+    assert bad.error is not None              # invalid payload rejected
+
+
+def test_gateway_response_cache():
+    sysd = _mk()
+    warm_up(sysd, LLAMA70B.name)
+    tok = sysd.token_for("alice")
+    req = {"model": LLAMA70B.name, "prompt_tokens": 64, "max_tokens": 16,
+           "prompt_hash": "same-prompt", "temperature": 0.0}
+    f1 = sysd.gateway.submit(tok, dict(req))
+    sysd.loop.run_until_idle()
+    t0 = sysd.loop.now()
+    f2 = sysd.gateway.submit(tok, dict(req))
+    sysd.loop.run_until_idle()
+    assert f1.result()["output_tokens"] == 16
+    assert f2.result()["output_tokens"] == 16
+    assert sysd.gateway.cache.hits == 1
+    assert sysd.loop.now() - t0 < 0.1         # served from cache, no backend
+
+
+def test_optimizations_each_cut_latency():
+    """Opt1 (futures vs polling), Opt2 (auth cache), Opt3 (async workers):
+    each toggle must strictly improve median latency under load."""
+    model = LLAMA70B.name
+    medians = {}
+    variants = {
+        "optimized": dict(gateway_config=GatewayConfig(), auth_cache=True),
+        "polling": dict(gateway_config=GatewayConfig(poll_interval=2.0),
+                        auth_cache=True),
+        "no_auth_cache": dict(gateway_config=GatewayConfig(),
+                              auth_cache=False, connection_cache=False),
+        "sync_workers": dict(gateway_config=GatewayConfig(
+            workers=9, blocking_workers=True), auth_cache=True),
+    }
+    for name, kw in variants.items():
+        sysd = _mk(**kw)
+        warm_up(sysd, model)
+        wl = make_workload(60, rate=4.0, seed=7)
+        s = drive_workload(sysd, wl, model)
+        medians[name] = s["median_e2e_s"]
+    assert medians["optimized"] < medians["polling"]
+    assert medians["optimized"] < medians["no_auth_cache"]
+    assert medians["optimized"] < medians["sync_workers"]
+
+
+# ---------------------------------------------------------------------------
+# auto-scaling + hot nodes
+# ---------------------------------------------------------------------------
+
+def test_autoscale_to_cap_and_throughput_gain():
+    model = LLAMA70B.name
+
+    def run(max_inst):
+        # fast storage + short cooldown so scaling completes within the run
+        deps = {"sophia": {model: default_deployment(
+            LLAMA70B, max_instances=max_inst, storage_bw=40e9,
+            scale_cooldown=8.0)}}
+        sysd = _mk(deps, startup_delay=5.0)
+        warm_up(sysd, model)
+        wl = make_workload(1000, rate=float("inf"), seed=3)
+        return sysd, drive_workload(sysd, wl, model)
+
+    sys1, s1 = run(1)
+    sys4, s4 = run(4)
+    ep = sys4.endpoints["sophia-ep"]
+    assert len(ep.instances[model]) == 4      # scaled to the cap
+    assert s4["output_tok_per_s"] > 1.5 * s1["output_tok_per_s"]
+    assert s4["median_e2e_s"] < s1["median_e2e_s"]
+
+
+def test_hot_node_idle_release():
+    model = LLAMA70B.name
+    deps = {"sophia": {model: default_deployment(LLAMA70B,
+                                                 idle_timeout=100.0)}}
+    sysd = _mk(deps)
+    warm_up(sysd, model)
+    ep = sysd.endpoints["sophia-ep"]
+    assert ep.model_states(model) == ["running"]
+    # second request while hot: no new job, reuses the instance
+    tok = sysd.token_for("alice")
+    f = sysd.gateway.submit(tok, {"model": model, "prompt_tokens": 16,
+                                  "max_tokens": 4})
+    sysd.loop.run_until_idle()
+    assert f.error is None
+    assert len(sysd.schedulers["sophia"].jobs) == 1
+    # idle past the timeout -> released, nodes returned
+    sysd.loop.run_until(sysd.loop.now() + 200.0)
+    assert ep.model_states(model) == []
+    assert sysd.schedulers["sophia"].available_nodes() == 24
+
+
+def test_cold_start_pipeline_states():
+    sysd = _mk()
+    model = LLAMA70B.name
+    tok = sysd.token_for("alice")
+    f = sysd.gateway.submit(tok, {"model": model, "prompt_tokens": 16,
+                                  "max_tokens": 4})
+    sysd.loop.run_until(25.0)                 # past startup, still loading
+    states = sysd.gateway.jobs_status()[model]
+    assert states[0]["state"] in ("queued", "starting")
+    sysd.loop.run_until_idle()
+    assert f.error is None
+    assert f.result()["output_tokens"] == 4
+
+
+# ---------------------------------------------------------------------------
+# batch mode (§4.4)
+# ---------------------------------------------------------------------------
+
+def test_batch_mode_dedicated_job_and_throughput():
+    sysd = _mk()
+    model = LLAMA70B.name
+    reqs = [{"request_id": f"b{i}", "prompt_tokens": 128, "max_tokens": 128}
+            for i in range(500)]
+    job = sysd.batch.submit_batch(model, reqs)
+    sysd.loop.run_until_idle()
+    st = sysd.batch.status(job.batch_id)
+    assert st["state"] == "completed"
+    assert st["completed"] == 500
+    assert st["output_tokens"] == 500 * 128
+    # dedicated instance released its job at completion
+    assert sysd.schedulers["sophia"].available_nodes() == 24
+    # amortized throughput beats the online engine's per-request path
+    dur = job.finish_time - job.submit_time
+    assert st["output_tokens"] / dur > 500
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_instance_failure_requeues_inflight():
+    sysd = _mk()
+    model = LLAMA70B.name
+    warm_up(sysd, model)
+    wl = make_workload(40, rate=float("inf"), seed=5)
+    ep = sysd.endpoints["sophia-ep"]
+    # fail mid-generation: shortly after prompts land on the engine
+    sysd.faults.fail_instance_at(ep, model, t=sysd.loop.now() + 3.0)
+    s = drive_workload(sysd, wl, model)
+    assert s["errors"] == 0                   # every request still completed
+    assert s["completed"] == 40
+    assert ep.stats["restarts"] == 1
+    assert ep.stats["requeued"] > 0
+
+
+def test_node_failure_recovers_via_new_job():
+    sysd = _mk()
+    model = LLAMA70B.name
+    warm_up(sysd, model)
+    sched = sysd.schedulers["sophia"]
+    job = next(j for j in sched.jobs.values()
+               if j.state == JobState.RUNNING)
+    wl = make_workload(30, rate=float("inf"), seed=6)
+    sysd.faults.fail_node_at(sched, job.nodes[0], t=sysd.loop.now() + 20.0,
+                             restore_after=300.0)
+    s = drive_workload(sysd, wl, model)
+    assert s["errors"] == 0 and s["completed"] == 30
+
+
+def test_endpoint_outage_fails_over_to_federated_cluster():
+    deps = {
+        "sophia": {LLAMA70B.name: default_deployment(LLAMA70B)},
+        "polaris": {LLAMA70B.name: default_deployment(LLAMA70B)},
+    }
+    sysd = _mk(deps)
+    warm_up(sysd, LLAMA70B.name)              # warm on sophia
+    sysd.health.mark_down("sophia-ep")
+    sysd.loop.run_until(sysd.loop.now() + 20.0)
+    ep = sysd.router.select_endpoint(LLAMA70B.name)
+    assert ep == "polaris-ep"
+    tok = sysd.token_for("alice")
+    f = sysd.gateway.submit(tok, {"model": LLAMA70B.name,
+                                  "prompt_tokens": 16, "max_tokens": 4})
+    sysd.loop.run_until_idle()
+    assert f.error is None
+    assert f.result()["endpoint"] == "polaris-ep"
+
+
+def test_hedged_request_beats_straggler():
+    """Straggler mitigation (DESIGN §8): a request stuck behind a saturated
+    instance is hedged to the other cluster after ``hedge_after`` seconds;
+    first completion wins and the duplicate is ignored."""
+    from repro.core.instances import SimRequest
+
+    def run(hedge_after):
+        deps = {
+            "sophia": {LLAMA70B.name: default_deployment(LLAMA70B)},
+            "polaris": {LLAMA70B.name: default_deployment(LLAMA70B)},
+        }
+        sysd = _mk(deps, gateway_config=GatewayConfig(
+            hedge_after=hedge_after))
+        warm_up(sysd, LLAMA70B.name)                  # sophia hot
+        # bring polaris hot too (otherwise the hedge pays a cold start)
+        pol = sysd.endpoints["polaris-ep"]
+        pol._spawn_instance(LLAMA70B.name)
+        sysd.loop.run_until(sysd.loop.now() + 120.0)
+        # saturate sophia's engine with a long backlog
+        soph = sysd.endpoints["sophia-ep"].instances[LLAMA70B.name][0]
+        for i in range(600):
+            soph.submit(SimRequest(f"bg{i}", 256, 256), None, lambda r: None)
+        t0 = sysd.loop.now()
+        hedges0 = sysd.gateway.hedges       # warm-up cold start may hedge too
+        done_at = {}
+        fut = sysd.gateway.submit(sysd.token_for("u"), {
+            "model": LLAMA70B.name, "prompt_tokens": 64, "max_tokens": 32})
+        fut.add_done_callback(
+            lambda f: done_at.__setitem__("t", sysd.loop.now()))
+        sysd.loop.run_until_idle()          # also drains the backlog
+        assert fut.error is None
+        return sysd, done_at["t"] - t0, fut.result(), \
+            sysd.gateway.hedges - hedges0
+
+    sys_h, t_hedged, res, n_hedges = run(hedge_after=10.0)
+    assert n_hedges == 1
+    assert res["endpoint"] == "polaris-ep"            # the hedge won
+    sys_n, t_plain, _, n0 = run(hedge_after=None)
+    assert n0 == 0
+    assert t_hedged < t_plain / 2                     # it actually helped

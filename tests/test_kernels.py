@@ -1,0 +1,160 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_chunked, ssd_decode_step
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, S, H, KH, D, causal, window
+    (2, 256, 8, 2, 64, True, 0),
+    (1, 512, 4, 4, 128, True, 0),
+    (2, 384, 8, 1, 64, False, 0),     # MQA, bidirectional (encoder)
+    (1, 512, 8, 2, 64, True, 128),    # sliding window
+    (2, 100, 4, 2, 32, True, 0),      # non-block-multiple seq
+    (1, 128, 56, 8, 128, True, 0),    # yi/llava head config
+    (1, 160, 20, 20, 64, True, 0),    # qwen MHA head config
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    B, S, H, KH, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_block=128, k_block=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    assert out.dtype == dtype
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **tol(dtype))
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 512, 8, 64))
+    k = jax.random.normal(ks[1], (2, 512, 4, 64))
+    v = jax.random.normal(ks[2], (2, 512, 4, 64))
+    outs = [flash_attention(q, k, v, q_block=qb, k_block=kb, interpret=True)
+            for qb, kb in [(64, 64), (128, 256), (256, 128), (512, 512)]]
+    for o in outs[1:]:
+        assert_allclose(np.asarray(outs[0]), np.asarray(o), rtol=1e-5,
+                        atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # B, H, KH, D, page, PPS, NP
+    (4, 8, 2, 64, 128, 4, 32),
+    (2, 4, 4, 128, 128, 8, 64),
+    (3, 8, 1, 64, 256, 2, 16),        # MQA
+    (2, 56, 8, 128, 128, 4, 16),      # yi head config
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention(case, dtype):
+    B, H, KH, D, page, PPS, NP = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (NP, page, KH, D), dtype)
+    vp = jax.random.normal(ks[2], (NP, page, KH, D), dtype)
+    tables = jax.random.randint(ks[3], (B, PPS), 0, NP)
+    lens = jax.random.randint(ks[4], (B,), 1, PPS * page + 1)
+    out = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, tables, lens)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **tol(dtype))
+
+
+def test_paged_attention_page_permutation_invariance():
+    """Physically permuting pages (and the table with them) must not change
+    the result — the indirection property PagedAttention relies on."""
+    B, H, KH, D, page, PPS, NP = 2, 8, 2, 64, 128, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NP, page, KH, D))
+    vp = jax.random.normal(ks[2], (NP, page, KH, D))
+    tables = jax.random.randint(ks[3], (B, PPS), 0, NP)
+    lens = jnp.array([page * PPS, page * 2 + 17])
+    out1 = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    perm = jax.random.permutation(ks[4], NP)
+    inv = jnp.argsort(perm)
+    out2 = paged_attention(q, kp[inv], vp[inv], perm[tables], lens,
+                           interpret=True)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # b, s, h, p, n, chunk
+    (2, 256, 4, 64, 64, 64),
+    (1, 512, 8, 32, 128, 128),
+    (2, 200, 3, 16, 32, 64),          # non-chunk-multiple seq
+    (1, 256, 24, 64, 128, 128),       # mamba2-130m layout
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd(case, dtype):
+    b, s, h, p, n, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    a = (-jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.1).astype(jnp.float32)
+    B = jax.random.normal(ks[2], (b, s, n), dtype)
+    C = jax.random.normal(ks[3], (b, s, n), dtype)
+    y, st = ssd(x, a, B, C, chunk=chunk, interpret=True)
+    yr, str_ = ssd_chunked(x, a, B, C, chunk)
+    rt = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+    assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), **rt)
+    assert_allclose(np.asarray(st), np.asarray(str_), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_step_recurrence():
+    """Chunked kernel == token-by-token recurrence (the SSD duality)."""
+    b, s, h, p, n = 1, 96, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    a = -jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.2
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    y, st = ssd(x, a, B, C, chunk=32, interpret=True)
+    hstate = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, hstate = ssd_decode_step(x[:, t], a[:, t], B[:, t], C[:, t], hstate)
+        ys.append(yt)
+    yr = jnp.stack(ys, axis=1)
+    assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3, atol=1e-3)
+    assert_allclose(np.asarray(st), np.asarray(hstate), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,170 @@
+"""Regression locks for the §Perf optimizations: the optimized code paths
+must stay numerically equivalent to their reference formulations, and the
+HLO analyzer must keep counting loop trips exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.models.layers import (decode_attention, decode_attention_appended)
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# MoE gather-combine == scatter-combine (the C3 §Perf change)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "phi3.5-moe-42b-a6.6b"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_moe_gather_combine_matches_scatter(arch, seed):
+    cfg = reduced(REGISTRY[arch])
+    p = init_moe(jax.random.PRNGKey(7), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (2, 96, cfg.d_model), jnp.float32)
+    out_g, aux_g = moe_ffn(x, p, cfg, combine="gather")
+    out_s, aux_s = moe_ffn(x, p, cfg, combine="scatter")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_s),
+                               atol=2e-5, rtol=1e-4)
+    assert float(abs(aux_g - aux_s)) < 1e-6
+
+
+def test_moe_gather_combine_grad_matches_scatter():
+    cfg = reduced(REGISTRY["dbrx-132b"])
+    p = init_moe(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 64, cfg.d_model),
+                          jnp.float32)
+
+    def loss(params, combine):
+        out, aux = moe_ffn(x, params, cfg, combine=combine)
+        return jnp.sum(out ** 2) + aux
+
+    gg = jax.grad(lambda p_: loss(p_, "gather"))(p)
+    gs = jax.grad(lambda p_: loss(p_, "scatter"))(p)
+    for k in gg:
+        np.testing.assert_allclose(np.asarray(gg[k]), np.asarray(gs[k]),
+                                   atol=5e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# appended decode attention == write-then-attend reference (A1/A2 change)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_decode_attention_appended_matches_reference(window):
+    B, Smax, H, KH, D = 3, 32, 8, 4, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    # history cache laid out kv-heads-major (B, KH, Smax, D)
+    kc = jnp.asarray(rng.normal(size=(B, KH, Smax, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, KH, Smax, D)), jnp.float32)
+    k_new = jnp.asarray(rng.normal(size=(B, KH, D)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(B, KH, D)), jnp.float32)
+    prev = jnp.asarray([5, 17, 31 - 1], jnp.int32)
+
+    out = decode_attention_appended(q, kc, vc, k_new, v_new,
+                                    prev_len=prev, window=window)
+
+    # reference: write kv at prev_len into a seq-major cache, then attend
+    kc_sm = jnp.swapaxes(kc, 1, 2)                       # (B, Smax, KH, D)
+    vc_sm = jnp.swapaxes(vc, 1, 2)
+    bidx = jnp.arange(B)
+    kc_sm = kc_sm.at[bidx, prev].set(k_new)
+    vc_sm = vc_sm.at[bidx, prev].set(v_new)
+    ref = decode_attention(q, kc_sm, vc_sm, cur_len=prev + 1, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_scatter_new_kv_writes_expected_positions():
+    from repro.models.transformer import _scatter_new_kv
+    L, B, KH, S, hd = 2, 3, 2, 8, 4
+    cache = jnp.zeros((L, B, KH, S, hd), jnp.float32)
+    new = jnp.ones((L, B, KH, hd), jnp.float32) * \
+        jnp.arange(1, B + 1)[None, :, None, None]
+    lens = jnp.asarray([0, 3, 7], jnp.int32)
+    out = np.asarray(_scatter_new_kv(cache, new, lens))
+    for b, pos in enumerate([0, 3, 7]):
+        np.testing.assert_allclose(out[:, b, :, pos, :], b + 1)
+        mask = np.ones(S, bool)
+        mask[pos] = False
+        assert np.all(out[:, b, :, mask, :] == 0)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer: trip counts exact on controlled scans
+# ---------------------------------------------------------------------------
+
+def test_hlo_analysis_counts_scan_trips():
+    from repro.launch.hlo_analysis import analyze
+    W = jnp.zeros((128, 128), jnp.float32)
+    x = jnp.zeros((8, 128), jnp.float32)
+    Ws = jnp.zeros((10, 128, 128), jnp.float32)
+    one = 2 * 8 * 128 * 128
+
+    hlo1 = jax.jit(lambda x: x @ W).lower(x).compile().as_text()
+    assert analyze(hlo1)["dot_flops"] == one
+
+    hlo10 = jax.jit(
+        lambda x: jax.lax.scan(lambda c, w: (c @ w, None), x, Ws)[0]
+    ).lower(x).compile().as_text()
+    assert analyze(hlo10)["dot_flops"] == 10 * one
+
+    def nested(x, Ws):
+        def micro(c, _):
+            y, _ = jax.lax.scan(
+                lambda h, w: (jax.checkpoint(lambda h, w: h @ w)(h, w), None),
+                c, Ws)
+            return y, None
+        return jax.lax.scan(micro, x, None, length=5)[0]
+
+    hlo50 = jax.jit(nested).lower(x, Ws).compile().as_text()
+    assert analyze(hlo50)["dot_flops"] == 50 * one
+
+    # XLA's own cost_analysis counts the body once — the reason this
+    # module exists; guard that assumption so a jax upgrade that fixes it
+    # makes us revisit
+    cost = jax.jit(
+        lambda x: jax.lax.scan(lambda c, w: (c @ w, None), x, Ws)[0]
+    ).lower(x).compile().cost_analysis()
+    assert cost["flops"] <= 2 * one
+
+
+def test_hlo_analysis_traffic_slice_aware():
+    from repro.launch.hlo_analysis import analyze
+    big = jnp.zeros((64, 256), jnp.float32)
+
+    def f(big, i):
+        sl = jax.lax.dynamic_slice(big, (i, 0), (1, 256))
+        return jnp.sum(sl * 2.0)
+
+    hlo = jax.jit(f).lower(big, jnp.int32(0)).compile().as_text()
+    t = analyze(hlo)["traffic_bytes"]
+    # must be order slice-size (few KB), not the full 64 KB x ops
+    assert t < 32 * 1024, t
+
+
+def test_chunked_ce_matches_full_loss():
+    """Blockwise cross-entropy (§Perf, big-vocab train cells) must match the
+    full-logit loss and its gradients."""
+    from repro.distributed.hints import ShardingHints, use_hints
+    cfg = reduced(REGISTRY["mamba2-130m"])
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                     cfg.vocab_size),
+    }
+    l0, _ = model.train_loss(params, batch)
+    g0 = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    with use_hints(ShardingHints(ce_chunk=48)):    # 256-vocab -> 6 chunks+pad
+        l1, _ = model.train_loss(params, batch)
+        g1 = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    assert abs(float(l0 - l1)) < 1e-5
+    import jax.tree_util as jtu
+    for a, b in zip(jtu.tree_leaves(g0), jtu.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=1e-4)

@@ -1,0 +1,192 @@
+"""Property-based tests (hypothesis) on system invariants: the workload
+generator, the paged-KV allocator, the gateway rate limiter, sharding rules,
+and the federation selector."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clock import EventLoop, VirtualClock
+from repro.core.gateway import RateLimiter
+from repro.data.workload import make_workload
+from repro.serving.kv_cache import OutOfPages, PagedKVCache
+
+# ---------------------------------------------------------------------------
+# workload generator
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 200), rate=st.one_of(
+    st.just(float("inf")), st.floats(0.1, 100.0)),
+    seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_workload_invariants(n, rate, seed):
+    wl = make_workload(n, rate=rate, seed=seed)
+    assert len(wl) == n
+    assert len({w.request_id for w in wl}) == n          # unique ids
+    arr = [w.arrival for w in wl]
+    assert all(a >= 0 for a in arr)
+    assert arr == sorted(arr)                            # non-decreasing
+    if math.isinf(rate):
+        assert all(a == 0.0 for a in arr)                # saturation mode
+    for w in wl:
+        assert 4 <= w.prompt_tokens <= 2048
+        assert 4 <= w.max_tokens <= 2048
+    # determinism
+    wl2 = make_workload(n, rate=rate, seed=seed)
+    assert [(w.prompt_tokens, w.max_tokens, w.arrival) for w in wl] == \
+        [(w.prompt_tokens, w.max_tokens, w.arrival) for w in wl2]
+
+
+# ---------------------------------------------------------------------------
+# paged KV allocator
+# ---------------------------------------------------------------------------
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_paged_kv_allocator_invariants(data):
+    num_pages = data.draw(st.integers(2, 64))
+    page = data.draw(st.sampled_from([8, 16, 64, 128]))
+    kv = PagedKVCache(num_pages, page)
+    live: dict[str, int] = {}
+    for i in range(data.draw(st.integers(1, 60))):
+        op = data.draw(st.sampled_from(["alloc", "append", "free"]))
+        if op == "alloc":
+            n = data.draw(st.integers(1, 3 * page))
+            sid = f"s{i}"
+            if kv.can_allocate(n):
+                pages = kv.allocate(sid, n)
+                assert len(pages) == kv.pages_needed(n)
+                assert 0 not in pages                    # trash page reserved
+                live[sid] = n
+            else:
+                try:
+                    kv.allocate(sid, n)
+                    raise AssertionError("allocate should have raised")
+                except OutOfPages:
+                    pass
+        elif op == "append" and live:
+            sid = data.draw(st.sampled_from(sorted(live)))
+            try:
+                kv.append_token(sid)
+                live[sid] += 1
+            except OutOfPages:
+                assert kv.free_pages == 0
+        elif op == "free" and live:
+            sid = data.draw(st.sampled_from(sorted(live)))
+            kv.free(sid)
+            del live[sid]
+        # invariant: no page is owned twice, free + owned == num_pages - 1
+        owned = [p for s in live for p in kv._tables[s]]
+        assert len(owned) == len(set(owned))
+        assert len(owned) + kv.free_pages == num_pages - 1
+        for sid, n in live.items():
+            assert len(kv._tables[sid]) >= kv.pages_needed(max(n, 1))
+
+
+# ---------------------------------------------------------------------------
+# gateway rate limiter
+# ---------------------------------------------------------------------------
+
+
+@given(rate=st.floats(0.5, 50.0), burst=st.floats(1.0, 20.0),
+       dts=st.lists(st.floats(0.0, 2.0), min_size=1, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_rate_limiter_never_exceeds_budget(rate, burst, dts):
+    loop = EventLoop(VirtualClock())
+    rl = RateLimiter(loop, rate, burst)
+    granted = 0
+    t = 0.0
+    for dt in dts:
+        t += dt
+        loop.clock._advance_to(t) if hasattr(loop.clock, "_advance_to") \
+            else None
+        loop.call_at(t, lambda: None)
+        loop.run_until(t)
+        if rl.allow("u"):
+            granted += 1
+        # budget: initial burst + accrued tokens
+        assert granted <= burst + rate * t + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# sharding rules validity
+# ---------------------------------------------------------------------------
+
+
+def test_sharding_specs_always_divide():
+    # every PartitionSpec a rule emits must evenly divide the dim it shards
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import REGISTRY
+    from repro.distributed.sharding import ShardingRules
+    from repro.models import make_model
+
+    # production mesh shape arithmetic without building a device mesh
+    sizes = {"data": 16, "model": 16, "pod": 2}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for name in ("qwen1.5-4b", "yi-34b", "dbrx-132b", "mamba2-130m",
+                 "zamba2-2.7b", "hubert-xlarge"):
+        cfg = REGISTRY[name]
+        model = make_model(cfg)
+        shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        for train in (True, False):
+            rules = ShardingRules(FakeMesh(), cfg, train=train)
+            specs = rules.param_specs(shapes)
+            flat_specs, _ = jax.tree_util.tree_flatten(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            flat_shapes, _ = jax.tree_util.tree_flatten(shapes)
+            for spec, leaf in zip(flat_specs, flat_shapes):
+                for dim, ax in zip(leaf.shape, tuple(spec)):
+                    if ax is None:
+                        continue
+                    n = 1
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        n *= sizes[a]
+                    assert dim % n == 0, (name, spec, leaf.shape)
+
+
+# ---------------------------------------------------------------------------
+# federation selector ordering
+# ---------------------------------------------------------------------------
+
+
+@given(free_a=st.integers(0, 4), free_b=st.integers(0, 4),
+       hot_a=st.booleans(), hot_b=st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_federation_priority_rules(free_a, free_b, hot_a, hot_b):
+    class EP:
+        def __init__(self, hot, free):
+            self._hot = hot
+            self._free = free
+            self.deployments = {"m": type("D", (), {
+                "nodes_per_instance": 1})()}
+            self.scheduler = type("S", (), {
+                "available_nodes": lambda s=None, f=free: f})()
+
+        def hosts(self, model):
+            return True
+
+        def model_states(self, model):
+            return ["running"] if self._hot else []
+
+    from repro.core.federation import FederationRouter
+    eps = {"a": EP(hot_a, free_a), "b": EP(hot_b, free_b)}
+    router = FederationRouter(eps, {"m": ["a", "b"]})
+    choice = router.select_endpoint("m")
+    rule = router.decisions[-1][2]
+    if hot_a:
+        assert choice == "a" and rule == "active-instance"
+    elif hot_b:
+        assert choice == "b" and rule == "active-instance"
+    elif free_a >= 1:
+        assert choice == "a" and rule == "free-nodes"
+    elif free_b >= 1:
+        assert choice == "b" and rule == "free-nodes"
+    else:
+        assert choice == "a" and rule == "configured-order"
