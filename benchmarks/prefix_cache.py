@@ -1,0 +1,213 @@
+"""Prefix caching + chunked prefill benchmark (real engine, CPU, reduced
+config).
+
+Two experiments, both written to ``results/benchmarks/prefix_cache.json``:
+
+1. **Shared-prefix sweep** — a shared-system-prompt workload (every prompt =
+   one shared prefix + a unique tail) at varying share ratios. Measures
+   prefill-token throughput (prompt tokens ingested per second) with the
+   prefix cache off vs on, steady-state (the shared prefix is warm, as on a
+   hot FIRST instance). Acceptance: >= 2x at the 80% share ratio.
+
+2. **Chunked-prefill inter-token latency** — short sequences are decoding
+   when one long prompt admits. One-shot prefill stalls every running
+   sequence for the whole prompt; with a chunk budget the prompt ingests
+   across steps and the max inter-token gap of the running sequences stays
+   bounded. Both maxima are recorded.
+
+``python -m benchmarks.run --only prefix_cache`` or run this module directly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, print_table
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.request import InferenceRequest, SamplingParams
+
+ARCH = "llama3.2-3b"
+PAGE = 32
+# long enough that prefill FLOPs dominate framework overhead on CPU; 512 is
+# also an exact power-of-two bucket, so the no-cache baseline pays no padding
+PROMPT_LEN = 512            # shared prefix + unique tail
+OUT_PATH = os.path.join("results", "benchmarks", "prefix_cache.json")
+
+
+def _mk_engine(model, params, **overrides):
+    cfg = EngineConfig(max_slots=4, max_seq_len=640, backend="paged",
+                       page_size=PAGE, **overrides)
+    return ContinuousBatchingEngine(model, params, cfg)
+
+
+def _requests(vocab, n, share_ratio, seed=0, max_tokens=1):
+    """Prompts = shared prefix (page-aligned share of PROMPT_LEN) + unique
+    tails. The prefix depends only on the ratio — warmup and measured
+    passes share it, so the cached cell measures the warm steady state.
+    ``max_tokens=1`` keeps the run prefill-dominated."""
+    n_shared = int(round(share_ratio * PROMPT_LEN / PAGE)) * PAGE
+    shared = np.random.default_rng(1000 + n_shared).integers(
+        2, vocab, size=n_shared).tolist()
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(2, vocab, size=PROMPT_LEN - n_shared).tolist()
+        reqs.append(InferenceRequest(
+            model=ARCH, prompt_tokens=shared + tail, request_id=f"r{i}",
+            sampling=SamplingParams(max_tokens=max_tokens, temperature=0.0)))
+    return reqs
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.add_request(r)
+    t0 = time.perf_counter()
+    outs = eng.run_to_completion()
+    return time.perf_counter() - t0, outs
+
+
+def bench_share_sweep(model, params, vocab, *, n_req, ratios):
+    rows, out = [], []
+    for ratio in ratios:
+        cells = {}
+        for cached in (False, True):
+            eng = _mk_engine(model, params, enable_prefix_cache=cached)
+            # warmup: compiles every jit bucket AND (cached variant) makes
+            # the shared prefix warm — the hot-instance steady state
+            _drain(eng, _requests(vocab, 3, ratio, seed=1))
+            reqs = _requests(vocab, n_req, ratio, seed=2)
+            prompt_tokens = sum(len(r.prompt_tokens) for r in reqs)
+            computed0 = eng.stats["prefill_tokens"]   # exclude the warmup
+            dt, outs = _drain(eng, reqs)
+            assert len(outs) == n_req
+            cells["cached" if cached else "baseline"] = {
+                "prefill_tok_per_s": prompt_tokens / dt,
+                "wall_s": dt,
+                "prompt_tokens": prompt_tokens,
+                "computed_tokens": None if not cached else
+                    eng.stats["prefill_tokens"] - computed0,
+                "cache": eng.cache_stats() if cached else None,
+            }
+        speedup = (cells["cached"]["prefill_tok_per_s"]
+                   / cells["baseline"]["prefill_tok_per_s"])
+        out.append({"share_ratio": ratio, **cells, "speedup": speedup})
+        rows.append([f"{ratio:.2f}",
+                     f"{cells['baseline']['prefill_tok_per_s']:.0f}",
+                     f"{cells['cached']['prefill_tok_per_s']:.0f}",
+                     f"{speedup:.2f}x"])
+        csv_line(f"prefix_cache/share_{ratio:.2f}",
+                 cells["cached"]["wall_s"] * 1e6 / n_req,
+                 f"speedup={speedup:.2f}")
+    print_table("Prefix-cache shared-prompt sweep "
+                f"({ARCH} reduced, {PROMPT_LEN}-token prompts)",
+                ["share", "base tok/s", "cached tok/s", "speedup"],
+                rows, widths=[6, 12, 13, 8])
+    return out
+
+
+def bench_chunked_itl(model, params, vocab, *, budget=64, long_prompt=512,
+                      n_decode=3, warm_steps=6):
+    """Max inter-token latency of already-running sequences while a long
+    prompt admits, one-shot vs chunked."""
+    rng = np.random.default_rng(3)
+
+    def scenario(chunk_budget):
+        eng = _mk_engine(model, params, chunked_prefill_budget=chunk_budget)
+
+        def load(tag, max_tokens):
+            for i in range(n_decode):
+                eng.add_request(InferenceRequest(
+                    model=ARCH,
+                    prompt_tokens=rng.integers(2, vocab, size=16).tolist(),
+                    request_id=f"{tag}-d{i}",
+                    sampling=SamplingParams(max_tokens=max_tokens,
+                                            temperature=0.0)))
+
+        # warmup: the long prompt ingests ALONE first so every
+        # (chunk-bucket, ctx-bucket) shape the measured admit will hit is
+        # compiled; then the decoder shapes
+        eng.add_request(InferenceRequest(
+            model=ARCH,
+            prompt_tokens=rng.integers(2, vocab, size=long_prompt).tolist(),
+            request_id="warm-long",
+            sampling=SamplingParams(max_tokens=2, temperature=0.0)))
+        eng.run_to_completion()
+        load("warm", 4)
+        eng.run_to_completion()
+
+        # measured pass: decoders run, then the long prompt lands
+        load("m", 64)
+        for _ in range(warm_steps):
+            eng.step()
+        last_tok = {rid: time.perf_counter() for rid in eng.running}
+        eng.add_request(InferenceRequest(
+            model=ARCH,
+            prompt_tokens=rng.integers(2, vocab, size=long_prompt).tolist(),
+            request_id="m-long",
+            sampling=SamplingParams(max_tokens=4, temperature=0.0)))
+        max_gap = 0.0
+        while eng.has_work():
+            eng.step()
+            now = time.perf_counter()
+            for rid in list(last_tok):
+                # every tracked sequence produced one token this step; those
+                # no longer running produced their final token in it
+                max_gap = max(max_gap, now - last_tok[rid])
+                if rid in eng.running:
+                    last_tok[rid] = now
+                else:
+                    del last_tok[rid]
+        return max_gap, eng.stats
+
+    itl_one_shot, stats_os = scenario(0)
+    itl_chunked, stats_ch = scenario(budget)
+    print_table("Chunked prefill: max inter-token latency during long-prompt "
+                "admit",
+                ["mode", "max ITL (ms)", "prefill chunks"],
+                [["one-shot", f"{itl_one_shot*1e3:.1f}",
+                  stats_os["prefill_chunks"]],
+                 [f"budget={budget}", f"{itl_chunked*1e3:.1f}",
+                  stats_ch["prefill_chunks"]]],
+                widths=[12, 13, 14])
+    csv_line("prefix_cache/itl_one_shot", itl_one_shot * 1e6, "max_itl")
+    csv_line("prefix_cache/itl_chunked", itl_chunked * 1e6,
+             f"budget={budget}")
+    return {"budget": budget, "long_prompt": long_prompt,
+            "max_itl_one_shot_s": itl_one_shot,
+            "max_itl_chunked_s": itl_chunked,
+            "itl_improvement": itl_one_shot / max(itl_chunked, 1e-9)}
+
+
+def main(fast: bool = False) -> dict:
+    cfg = reduced(REGISTRY[ARCH])
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    ratios = [0.0, 0.5, 0.8] if not fast else [0.8]
+    sweep = bench_share_sweep(model, params, cfg.vocab_size,
+                              n_req=6 if fast else 12, ratios=ratios)
+    itl = bench_chunked_itl(model, params, cfg.vocab_size)
+    result = {"arch": ARCH, "prompt_len": PROMPT_LEN, "page_size": PAGE,
+              "share_sweep": sweep, "chunked_prefill": itl}
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"\nwrote {OUT_PATH}")
+    at80 = next((c for c in sweep if abs(c["share_ratio"] - 0.8) < 1e-9),
+                None)
+    if at80 is not None and at80["speedup"] < 2.0:
+        raise SystemExit(
+            f"prefix cache speedup at 80% share is {at80['speedup']:.2f}x "
+            "(expected >= 2x)")
+    if itl["max_itl_chunked_s"] >= itl["max_itl_one_shot_s"]:
+        raise SystemExit("chunked prefill did not reduce max ITL")
+    return result
+
+
+if __name__ == "__main__":
+    main()

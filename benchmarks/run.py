@@ -6,6 +6,7 @@
   concurrency   Tbl. 1  WebUI closed-loop session sweep
   batch_mode    §5.3.1  online vs dedicated offline batch job
   engine_step   (real)  CPU wall-clock of the JAX engine, reduced configs
+  prefix_cache  (real)  KV prefix reuse + chunked-prefill ITL, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--only NAME]``.  Machine-readable
@@ -18,7 +19,7 @@ import time
 import traceback
 
 from benchmarks import (autoscale, batch_mode, concurrency, engine_step,
-                        external_api, rate_sweep, roofline)
+                        external_api, prefix_cache, rate_sweep, roofline)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -27,6 +28,7 @@ SUITES = {
     "concurrency": concurrency.main,
     "batch_mode": batch_mode.main,
     "engine_step": engine_step.main,
+    "prefix_cache": prefix_cache.main,
     "roofline": roofline.main,
 }
 

@@ -54,10 +54,15 @@ model = make_model(cfg)
 params = model.init_params(jax.random.PRNGKey(0))
 engine = ContinuousBatchingEngine(
     model, params, EngineConfig(max_slots=4, max_seq_len=128,
-                                backend="paged", page_size=16))
+                                backend="paged", page_size=16,
+                                enable_prefix_cache=True,
+                                chunked_prefill_budget=32))
 rng = np.random.default_rng(0)
+system_prompt = rng.integers(2, cfg.vocab_size, size=32).tolist()
 for i in range(6):
-    prompt = rng.integers(2, cfg.vocab_size, size=24).tolist()
+    # shared system prompt + unique tail: after the first request the
+    # prefix cache serves the shared pages without recomputing them
+    prompt = system_prompt + rng.integers(2, cfg.vocab_size, size=8).tolist()
     engine.add_request(InferenceRequest(
         model=cfg.name, prompt_tokens=prompt, request_id=f"req-{i}",
         sampling=SamplingParams(max_tokens=16, temperature=0.0)))
@@ -66,3 +71,4 @@ for o in sorted(outs, key=lambda o: o.request_id):
     print(f"{o.request_id}: {o.num_output_tokens} tokens "
           f"({o.finish_reason}) -> {o.output_tokens[:8]}...")
 print("engine stats:", engine.stats)
+print("prefix cache:", engine.cache_stats())

@@ -33,6 +33,9 @@ class ModelDeployment:
     autoscale: AutoScalePolicy = field(default_factory=AutoScalePolicy)
     walltime: float | None = None
     result_cpu: float = 0.0                # per-instance result serialization
+    # engine data-plane toggles (see repro.core.instances.SimEngine)
+    prefix_cache_hit_rate: float = 0.0     # warm-cache shared-prefix fraction
+    chunked_prefill_budget: int | None = None  # prompt tokens per engine step
 
 
 class ComputeEndpoint:
@@ -150,6 +153,8 @@ class ComputeEndpoint:
             num_nodes=dep.nodes_per_instance, max_slots=dep.max_slots,
             idle_timeout=dep.idle_timeout, walltime=dep.walltime,
             result_cpu=dep.result_cpu,
+            prefix_cache_hit_rate=dep.prefix_cache_hit_rate,
+            chunked_prefill_budget=dep.chunked_prefill_budget,
             on_released=self._on_instance_gone,
             on_failed=self._on_instance_failed,
             on_hot=self._on_instance_hot)

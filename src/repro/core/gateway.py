@@ -192,9 +192,12 @@ class InferenceGateway:
 
         def handler(release):
             def finish_ok(result, cached=False):
-                self.metrics.on_finish(rid, self.loop.now(),
-                                       result.get("output_tokens", 0),
-                                       cached=cached)
+                self.metrics.on_finish(
+                    rid, self.loop.now(), result.get("output_tokens", 0),
+                    cached=cached,
+                    cached_prompt_tokens=result.get("cached_prompt_tokens",
+                                                    0),
+                    prefill_chunks=result.get("prefill_chunks", 0))
                 if self.config.blocking_workers:
                     release()
                 fut.set_result(result)

@@ -35,20 +35,40 @@ class SimEngine:
     """DES model of a continuous-batching engine: per engine-step, every
     running sequence gains one token; newly admitted sequences add their
     prefill time to the step they join. Mirrors the real engine's
-    iteration-level scheduling."""
+    iteration-level scheduling.
+
+    Two data-plane toggles mirror ``repro.serving.engine.EngineConfig``:
+
+    * ``prefix_cache_hit_rate`` — steady-state fraction of each prompt found
+      in the hot instance's KV prefix cache (shared system prompts / few-shot
+      templates); those tokens cost no prefill compute. Models a WARM
+      instance — a cold instance's first prompts would miss, which this
+      first-order model ignores.
+    * ``chunked_prefill_budget`` — max prompt tokens ingested per engine
+      step (None = whole prompts in the admission step). Sequences produce
+      their first token only once their prefill budget has been consumed,
+      and each step's duration charges only that step's chunk — bounding
+      inter-token latency for running sequences, exactly like the real
+      engine.
+    """
 
     def __init__(self, loop, cost: InstanceCost, max_slots: int = 48,
-                 on_idle=None, on_busy=None):
+                 on_idle=None, on_busy=None,
+                 prefix_cache_hit_rate: float = 0.0,
+                 chunked_prefill_budget: int | None = None):
         self.loop = loop
         self.cost = cost
         self.max_slots = max_slots
         self.on_idle = on_idle
         self.on_busy = on_busy
+        self.prefix_cache_hit_rate = prefix_cache_hit_rate
+        self.chunked_prefill_budget = chunked_prefill_budget
         self.queue: list[tuple[SimRequest, object, object]] = []
         self.running: list[dict] = []
         self._step_ev = None
         self.total_output_tokens = 0
         self.total_finished = 0
+        self.total_cached_tokens = 0
         self.halted = False
 
     # -- load signals ----------------------------------------------------------
@@ -91,17 +111,36 @@ class SimEngine:
             self._schedule_step()
 
     def _schedule_step(self):
-        prefill_cost = 0.0
         while self.queue and len(self.running) < self.max_slots:
             sreq, on_first, on_done = self.queue.pop(0)
-            prefill_cost += self.cost.prefill_time(sreq.prompt_tokens)
+            # warm-cache discount: matched prefix tokens cost no compute;
+            # at least one token is always recomputed (its logits seed
+            # sampling), mirroring PagedKVCache.allocate_with_prefix
+            eff = max(int(round(sreq.prompt_tokens
+                                * (1.0 - self.prefix_cache_hit_rate))), 1)
+            self.total_cached_tokens += sreq.prompt_tokens - eff
             self.running.append({"req": sreq, "produced": 0,
+                                 "prefill_left": eff, "chunks": 0,
+                                 "cached": sreq.prompt_tokens - eff,
                                  "on_first": on_first, "on_done": on_done})
         if not self.running:
             self._step_ev = None
             if self.on_idle:
                 self.on_idle()
             return
+        # consume prompt tokens FIFO up to the chunk budget (all of them
+        # when chunking is off); only their compute lands in this step
+        prefill_cost = 0.0
+        left = self.chunked_prefill_budget or float("inf")
+        for r in self.running:
+            if left <= 0:
+                break
+            if r["prefill_left"] > 0:
+                take = min(r["prefill_left"], left)
+                r["prefill_left"] -= take
+                r["chunks"] += 1
+                left -= take
+                prefill_cost += self.cost.prefill_time(take)
         batch = len(self.running)
         ctx = sum(r["req"].prompt_tokens + r["produced"]
                   for r in self.running) / batch
@@ -116,6 +155,9 @@ class SimEngine:
         now = self.loop.now()
         still = []
         for r in self.running:
+            if r["prefill_left"] > 0:           # still ingesting its prompt
+                still.append(r)
+                continue
             r["produced"] += 1
             self.total_output_tokens += 1
             if r["produced"] == 1 and r["on_first"]:
@@ -125,6 +167,8 @@ class SimEngine:
                 if r["on_done"]:
                     r["on_done"]({"request_id": r["req"].request_id,
                                   "output_tokens": r["produced"],
+                                  "cached_prompt_tokens": r["cached"],
+                                  "prefill_chunks": r["chunks"],
                                   "finish_time": now})
             else:
                 still.append(r)
@@ -139,7 +183,9 @@ class ModelInstance:
                  scheduler, *, num_nodes: int = 1, max_slots: int = 48,
                  idle_timeout: float = 7200.0, on_released=None,
                  on_failed=None, on_hot=None, walltime: float | None = None,
-                 result_cpu: float = 0.0):
+                 result_cpu: float = 0.0,
+                 prefix_cache_hit_rate: float = 0.0,
+                 chunked_prefill_budget: int | None = None):
         self.loop = loop
         self.model_name = model_name
         self.cost = cost
@@ -159,7 +205,9 @@ class ModelInstance:
         self._idle_ev = None
         self.engine = SimEngine(loop, cost, max_slots=max_slots,
                                 on_idle=self._went_idle,
-                                on_busy=self._went_busy)
+                                on_busy=self._went_busy,
+                                prefix_cache_hit_rate=prefix_cache_hit_rate,
+                                chunked_prefill_budget=chunked_prefill_budget)
         self.hot_since = None
         self.created = loop.now()
         self.job = scheduler.submit(num_nodes, on_start=self._nodes_ready,

@@ -20,6 +20,8 @@ class RequestRecord:
     ok: bool = True
     error: str = ""
     cached: bool = False
+    cached_prompt_tokens: int = 0   # engine prefix-cache reuse (partial hit)
+    prefill_chunks: int = 0         # chunked-prefill steps for this prompt
 
     @property
     def e2e(self) -> float:
@@ -56,7 +58,7 @@ class MetricsLog:
             r.first_token = t
 
     def on_finish(self, request_id, t, output_tokens=0, ok=True, error="",
-                  cached=False):
+                  cached=False, cached_prompt_tokens=0, prefill_chunks=0):
         r = self._open.pop(request_id, None)
         if r is None:
             return
@@ -65,6 +67,8 @@ class MetricsLog:
         r.ok = ok
         r.error = error
         r.cached = cached
+        r.cached_prompt_tokens = cached_prompt_tokens
+        r.prefill_chunks = prefill_chunks
         self.records.append(r)
 
     # -- summaries --------------------------------------------------------------
@@ -80,7 +84,13 @@ class MetricsLog:
         end = t1 if t1 is not None else max(r.finish for r in recs)
         dur = max(end - start, 1e-9)
         toks = sum(r.output_tokens for r in recs)
+        prompt_toks = sum(r.prompt_tokens for r in recs)
+        cached_toks = sum(r.cached_prompt_tokens for r in recs)
         return {
+            "prompt_tokens": prompt_toks,
+            "cached_prompt_tokens": cached_toks,
+            "prefix_cache_hit_rate": (cached_toks / prompt_toks
+                                      if prompt_toks else 0.0),
             "completed": len(recs),
             "failed": sum(1 for r in self.records if not r.ok),
             "duration_s": dur,

@@ -67,6 +67,8 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
                        storage_bw: float = 2e9,
                        scale_cooldown: float = 30.0,
                        result_cpu: float = 0.0,
+                       prefix_cache_hit_rate: float = 0.0,
+                       chunked_prefill_budget: int | None = None,
                        hw: dict | None = None) -> ModelDeployment:
     """``hw``: optional InstanceCost overrides, e.g. A100 constants
     ``dict(peak_flops=312e12, hbm_bw=1555e9)`` for paper-validation runs."""
@@ -78,6 +80,8 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
         max_slots=max_slots,
         idle_timeout=idle_timeout,
         result_cpu=result_cpu,
+        prefix_cache_hit_rate=prefix_cache_hit_rate,
+        chunked_prefill_budget=chunked_prefill_budget,
         autoscale=AutoScalePolicy(max_instances=max_instances,
                                   cooldown=scale_cooldown),
     )

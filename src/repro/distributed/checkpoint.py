@@ -13,9 +13,41 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # pragma: no cover - env dependent
+    zstandard = None                      # fall back to stdlib zlib
+import zlib
 
 FORMAT_VERSION = 1
+# compression is self-describing so a checkpoint written with zstd loads in
+# an environment that only has zlib (and vice versa)
+_MAGIC_ZSTD = b"RPZS"
+_MAGIC_ZLIB = b"RPZL"
+
+
+def _compress(data: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return _MAGIC_ZSTD + zstandard.ZstdCompressor(level=level).compress(
+            data)
+    # zstd levels go to 22; zlib only accepts -1..9
+    return _MAGIC_ZLIB + zlib.compress(data, min(level, 9))
+
+
+def _decompress(blob: bytes) -> bytes:
+    magic, body = blob[:4], blob[4:]
+    if magic == _MAGIC_ZLIB:
+        return zlib.decompress(body)
+    if magic == _MAGIC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard module is not installed")
+        return zstandard.ZstdDecompressor().decompress(body)
+    # legacy (pre-magic) checkpoints were always zstd
+    if zstandard is not None:
+        return zstandard.ZstdDecompressor().decompress(blob)
+    raise RuntimeError("unrecognized checkpoint compression header")
 
 
 def _flatten(tree):
@@ -48,7 +80,7 @@ def save_checkpoint(path: str, tree, *, step: int = 0, metadata: dict | None
         "arrays": arrays,
     }
     packed = msgpack.packb(payload, use_bin_type=True)
-    compressed = zstandard.ZstdCompressor(level=level).compress(packed)
+    compressed = _compress(packed, level)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -67,7 +99,7 @@ def load_checkpoint(path: str, target=None, shardings=None):
     {path: array} dict is returned. ``shardings`` (pytree of NamedSharding
     matching target) re-places arrays for the CURRENT mesh — elastic restore."""
     with open(path, "rb") as f:
-        packed = zstandard.ZstdDecompressor().decompress(f.read())
+        packed = _decompress(f.read())
     payload = msgpack.unpackb(packed, raw=False)
     assert payload["version"] == FORMAT_VERSION
     arrays = []

@@ -91,8 +91,11 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, q_block=256,
         q_block=q_block, k_block=k_block, num_k_blocks=nk, seq_k=seq_k)
 
     grid = (BKH, G, nq, nk)
+    # renamed across jax releases: CompilerParams <-> TPUCompilerParams
+    params_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
     try:
-        compiler_params = pltpu.CompilerParams(
+        compiler_params = params_cls(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"))
     except TypeError:  # older naming

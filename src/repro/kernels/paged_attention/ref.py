@@ -1,5 +1,7 @@
 """Pure-jnp oracle for paged decode attention: gather pages into a contiguous
-cache, then masked softmax attention for a single query token."""
+cache, then masked softmax attention for a single query token. Also hosts the
+paged *prefill* read path used by chunked prefill: a multi-token query block
+attending over the page pool (cached prefix pages + the chunk's own pages)."""
 from __future__ import annotations
 
 import math
@@ -33,3 +35,21 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, q_offset,
+                                kv_len):
+    """Chunked-prefill attention over a paged KV cache.
+
+    q: (B, C, H, D) — a chunk of C query tokens whose first token sits at
+    absolute position ``q_offset``; the chunk's own KV must already be
+    written into the pages. Gathers the sequence's pages into a contiguous
+    view and runs causal flash-style attention with ``kv_len`` valid
+    positions (cached prefix + this chunk). Returns (B, C, H, D).
+    """
+    from repro.models.layers import chunked_attention
+
+    k = gather_kv(k_pages, block_tables)      # (B, S_ctx, KH, D)
+    v = gather_kv(v_pages, block_tables)
+    return chunked_attention(q, k, v, causal=True, q_offset=q_offset,
+                             kv_len=kv_len)

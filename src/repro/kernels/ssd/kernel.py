@@ -69,8 +69,11 @@ def ssd_fwd(x, a, B, C, *, chunk, interpret=False):
     nc = S // chunk
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    # renamed across jax releases: CompilerParams <-> TPUCompilerParams
+    params_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
     try:
-        compiler_params = pltpu.CompilerParams(
+        compiler_params = params_cls(
             dimension_semantics=("parallel", "arbitrary"))
     except TypeError:
         compiler_params = None

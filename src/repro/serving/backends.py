@@ -7,9 +7,23 @@ PagedBackend — vLLM-style paged KV pool with block tables, for attention
                families; decode attention goes through the paged-attention
                path (pure-jnp page gather on CPU, Pallas kernel on TPU via
                ``use_kernel=True``).
+
+Both backends speak the same prefill protocol to the engine:
+
+  task = backend.start_prefill(seq_id, prompt)   # reserve slot/pages
+  logits, n = backend.prefill_chunk(task, budget) # compute <= budget tokens
+  ... repeat until logits is not None (prompt fully ingested) ...
+
+``start_prefill`` on the paged backend also consults the prefix cache:
+tokens covered by content-matched pages are skipped (``task.pos`` starts
+past them), which is where shared-system-prompt workloads win. A sequence
+only joins the decode batch once its prefill completes (``backend.activate``
+is implied by the final chunk); mid-prefill sequences are excluded from
+decode bookkeeping and their batch slots write to the trash page.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -18,12 +32,16 @@ import numpy as np
 from jax import lax
 
 from repro.models import LM
-from repro.models.layers import rms_norm, project_qkv, mlp_layer
+from repro.models.layers import (chunked_attention, mlp_layer, project_qkv,
+                                 rms_norm)
 from repro.models.moe import moe_ffn
 from repro.models.transformer import _block
 from repro.serving.kv_cache import PagedKVCache
 from repro.kernels.paged_attention.ops import paged_attention as paged_attn_kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_prefill_attention_ref)
+
+ATTENTION_FAMILIES = ("dense", "moe", "vlm")
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -31,6 +49,44 @@ def _bucket(n: int, lo: int = 16) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _chunk_layer(h, lp, cfg, positions, write_attend):
+    """One transformer layer of a prefill chunk. The backends differ only in
+    how a chunk's KV is written into their cache and attended against it —
+    ``write_attend(q, k, v) -> (attn_out, new_cache_leaves)`` supplies that
+    step; the residual/FFN structure stays in one place (mirrors
+    transformer._block, which handles the no-cache and single-token cases).
+    """
+    B, S = h.shape[:2]
+    xa = rms_norm(h, lp["norm1"], cfg.norm_eps)
+    q, k, v = project_qkv(xa, lp["attn"], cfg, positions)
+    a, new_cache = write_attend(q, k, v)
+    h = h + (a.reshape(B, S, -1) @ lp["attn"]["wo"])
+    g = rms_norm(h, lp["norm2"], cfg.norm_eps)
+    if cfg.moe:
+        f, _ = moe_ffn(g, lp["moe"], cfg, mode="dense")
+    else:
+        f = mlp_layer(g, lp["mlp"])
+    return h + f, new_cache
+
+
+@dataclass
+class PrefillTask:
+    """In-flight prompt ingestion state (one per admitted sequence)."""
+    seq_id: str
+    prompt: list
+    pos: int = 0                    # next prompt position to compute
+    cached_tokens: int = 0          # prefix tokens served from the page cache
+    chunks: int = 0                 # chunks computed so far
+
+    @property
+    def remaining(self) -> int:
+        return len(self.prompt) - self.pos
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.prompt)
 
 
 class SlotBackend:
@@ -57,6 +113,8 @@ class SlotBackend:
 
         self._insert = jax.jit(_insert, donate_argnums=(0,))
         self._prefill = {}  # bucket -> jitted fn
+        # one jit object; specializes per chunk-bucket shape
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(2,))
         self._decode = jax.jit(
             lambda p, toks, cache: self.model.decode_step(p, toks, cache),
             donate_argnums=(2,))
@@ -65,11 +123,47 @@ class SlotBackend:
     def can_admit(self, n_prompt: int) -> bool:
         return bool(self.free_slots) and n_prompt < self.max_len
 
-    # -- ops --------------------------------------------------------------------
-    def prefill(self, seq_id: str, prompt: list[int]):
-        """Returns last-token logits (V,)."""
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        # SSM/hybrid state cannot be rebuilt from a cache slice, so those
+        # families ingest prompts in one shot regardless of the budget
+        return self.cfg.family in ATTENTION_FAMILIES
+
+    # -- prefill protocol -------------------------------------------------------
+    def start_prefill(self, seq_id: str, prompt: list) -> PrefillTask:
         slot = self.free_slots.pop()
         self.slot_of[seq_id] = slot
+        return PrefillTask(seq_id=seq_id, prompt=list(prompt))
+
+    def prefill_chunk(self, task: PrefillTask, budget: int | None = None):
+        """Compute up to ``budget`` prompt tokens (all remaining if None).
+        Returns (last_token_logits | None, tokens_computed)."""
+        S = len(task.prompt)
+        if budget is None or not self.supports_chunked_prefill:
+            chunk = task.remaining
+        else:
+            chunk = min(max(budget, 1), task.remaining)
+        if task.pos == 0 and chunk == S:
+            logits = self._one_shot(task.seq_id, task.prompt)
+            task.pos = S
+            task.chunks += 1
+            return logits, S
+        logits = self._compute_chunk(task, chunk)
+        task.pos += chunk
+        task.chunks += 1
+        if task.done:
+            return logits, chunk
+        return None, chunk
+
+    def prefill(self, seq_id: str, prompt: list):
+        """One-shot convenience: returns last-token logits (V,)."""
+        task = self.start_prefill(seq_id, prompt)
+        logits, _ = self.prefill_chunk(task, None)
+        return logits
+
+    # -- jitted bodies ----------------------------------------------------------
+    def _one_shot(self, seq_id: str, prompt: list):
+        slot = self.slot_of[seq_id]
         S = len(prompt)
         # SSM/hybrid state is polluted by right-padding, so those use exact
         # lengths (one compile per distinct length); attention families use
@@ -93,6 +187,60 @@ class SlotBackend:
         self.cache = self._insert(self.cache, slot_cache, slot)
         return np.asarray(logits)[0]
 
+    def _chunk_impl(self, params, toks, cache, slot, start, true_len):
+        """One prefill chunk straight into the stacked slot cache.
+
+        toks: (1, Cb) right-padded chunk; slot/start/true_len: traced
+        scalars. Writes the chunk's KV at positions [start, start+true_len)
+        of ``slot`` (padded rows are dropped out-of-bounds), then attends the
+        chunk queries over the slot's cache rows [0, start+true_len).
+        """
+        cfg = self.cfg
+        model = self.model
+        Cb = toks.shape[1]
+        x = model.embed_inputs(params, {"tokens": toks})
+        positions = start + jnp.arange(Cb)[None, :]
+        kv_len = start + true_len
+        Smax = cache["k"].shape[3]
+        wpos = start + jnp.arange(Cb)
+        wpos = jnp.where(jnp.arange(Cb) < true_len, wpos, Smax)  # pad -> drop
+
+        def body(h, xs):
+            lp, kc, vc = xs                       # kc: (B, KH, Smax, hd)
+
+            def write_attend(q, k, v):
+                kc2 = kc.at[slot, :, wpos].set(k[0].astype(kc.dtype),
+                                               mode="drop")
+                vc2 = vc.at[slot, :, wpos].set(v[0].astype(vc.dtype),
+                                               mode="drop")
+                kg = jnp.swapaxes(kc2[slot], 0, 1)[None]  # (1, Smax, KH, hd)
+                vg = jnp.swapaxes(vc2[slot], 0, 1)[None]
+                a = chunked_attention(q, kg, vg, causal=True, q_offset=start,
+                                      kv_len=kv_len)
+                return a, (kc2, vc2)
+
+            return _chunk_layer(h, lp, cfg, positions, write_attend)
+
+        h, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        idx = jnp.maximum(true_len - 1, 0)
+        logits = model.logits(params, h[:, idx])
+        cache = dict(cache)
+        cache["k"], cache["v"] = nk, nv
+        cache["len"] = cache["len"].at[slot].set(kv_len)
+        return logits[0], cache
+
+    def _compute_chunk(self, task: PrefillTask, chunk: int):
+        slot = self.slot_of[task.seq_id]
+        bucket = min(_bucket(chunk), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :chunk] = task.prompt[task.pos:task.pos + chunk]
+        logits, self.cache = self._chunk(
+            self.params, jnp.asarray(toks), self.cache, slot, task.pos, chunk)
+        return np.asarray(logits)
+
+    # -- decode -----------------------------------------------------------------
     def decode_batch(self, tokens_by_slot: np.ndarray):
         """tokens_by_slot: (max_slots,) int32. Returns logits (max_slots, V)."""
         logits, self.cache = self._decode(self.params,
@@ -107,15 +255,18 @@ class SlotBackend:
     def slot(self, seq_id: str) -> int:
         return self.slot_of[seq_id]
 
+    def cache_stats(self) -> dict:
+        return {}
+
 
 class PagedBackend:
     """Paged KV cache backend for attention-family models."""
 
     def __init__(self, model: LM, params, *, max_slots: int, max_len: int,
                  page_size: int = 128, num_pages: int | None = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, enable_prefix_cache: bool = False):
         cfg = model.cfg
-        assert cfg.family in ("dense", "moe", "vlm"), \
+        assert cfg.family in ATTENTION_FAMILIES, \
             "paged backend supports attention families"
         self.model = model
         self.params = params
@@ -126,7 +277,8 @@ class PagedBackend:
         self.pages_per_seq = -(-max_len // page_size)
         if num_pages is None:
             num_pages = max_slots * self.pages_per_seq + 1  # +1: trash page 0
-        self.kv = PagedKVCache(num_pages, page_size)
+        self.kv = PagedKVCache(num_pages, page_size,
+                               enable_prefix_cache=enable_prefix_cache)
         L, KH, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
         dtype = jnp.dtype(cfg.param_dtype)
         self.pools = {
@@ -137,8 +289,12 @@ class PagedBackend:
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.slot_of: dict[str, int] = {}
         self.seq_of: dict[int, str] = {}
+        self.decoding: set[str] = set()
         self._prefill = {}
+        # one jit object; specializes per (chunk bucket, ctx-page bucket)
+        self._chunk = jax.jit(self._chunk_prefill_impl, donate_argnums=(2,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._cow = jax.jit(self._cow_impl, donate_argnums=(0,))
 
     # -- capacity -------------------------------------------------------------
     def can_admit(self, n_prompt: int) -> bool:
@@ -146,11 +302,21 @@ class PagedBackend:
                 and self.kv.can_allocate(n_prompt + 1)
                 and n_prompt < self.max_len)
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return True
+
     # -- jitted bodies ----------------------------------------------------------
     def _attend(self, q, kp, vp, tables, lens):
         if self.use_kernel:
             return paged_attn_kernel(q, kp, vp, tables, lens, interpret=True)
         return paged_attention_ref(q, kp, vp, tables, lens)
+
+    def _cow_impl(self, pools, src, dst):
+        """Copy-on-write: duplicate page ``src`` into ``dst`` on device
+        (across every layer) before a write diverges a shared page."""
+        return {"k": pools["k"].at[:, dst].set(pools["k"][:, src]),
+                "v": pools["v"].at[:, dst].set(pools["v"][:, src])}
 
     def _prefill_impl(self, params, toks, pools, table, true_len, *, n_pages):
         """toks: (1, S_bucket); table: (n_pages,) page ids for this seq."""
@@ -169,6 +335,45 @@ class PagedBackend:
             kp = kp.at[table].set(kpg.astype(kp.dtype))
             vp = vp.at[table].set(vpg.astype(vp.dtype))
             return h2, (kp, vp)
+
+        h, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
+                                         pools["v"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        idx = jnp.maximum(true_len - 1, 0)
+        logits = model.logits(params, h[:, idx])
+        return logits[0], {"k": nk, "v": nv}
+
+    def _chunk_prefill_impl(self, params, toks, pools, table, write_pages,
+                            write_offs, start, true_len):
+        """One prefill chunk against the page pool.
+
+        toks: (1, Cb) right-padded chunk starting at absolute position
+        ``start``; table: (pages_per_seq,) the sequence's full block table
+        (0-padded); write_pages/write_offs: (Cb,) per-token destination in
+        the pool (padded rows are routed to trash page 0). The chunk's KV is
+        written first, then its queries attend over [0, start+true_len) via
+        the paged gather path — cached prefix pages are read, never
+        recomputed.
+        """
+        cfg = self.cfg
+        model = self.model
+        x = model.embed_inputs(params, {"tokens": toks})
+        positions = start + jnp.arange(toks.shape[1])[None, :]
+        kv_len = start + true_len
+
+        def body(h, xs):
+            lp, kp, vp = xs
+
+            def write_attend(q, k, v):
+                kp2 = kp.at[write_pages, write_offs].set(
+                    k[0].astype(kp.dtype))
+                vp2 = vp.at[write_pages, write_offs].set(
+                    v[0].astype(vp.dtype))
+                a = paged_prefill_attention_ref(q, kp2, vp2, table[None],
+                                                start, kv_len)
+                return a, (kp2, vp2)
+
+            return _chunk_layer(h, lp, cfg, positions, write_attend)
 
         h, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
                                          pools["v"]))
@@ -210,16 +415,48 @@ class PagedBackend:
         logits = model.logits(params, h[:, 0])
         return logits, {"k": nk, "v": nv}
 
-    # -- public ops ---------------------------------------------------------------
-    def prefill(self, seq_id: str, prompt: list[int]):
+    # -- prefill protocol --------------------------------------------------------
+    def start_prefill(self, seq_id: str, prompt: list) -> PrefillTask:
         slot = self.free_slots.pop()
         self.slot_of[seq_id] = slot
         self.seq_of[slot] = seq_id
+        prompt = list(prompt)
+        pages, n_cached = self.kv.allocate_with_prefix(seq_id, prompt)
+        return PrefillTask(seq_id=seq_id, prompt=prompt, pos=n_cached,
+                           cached_tokens=n_cached)
+
+    def prefill_chunk(self, task: PrefillTask, budget: int | None = None):
+        """Compute up to ``budget`` prompt tokens (all remaining if None).
+        Returns (last_token_logits | None, tokens_computed)."""
+        S = len(task.prompt)
+        chunk = task.remaining if budget is None \
+            else min(max(budget, 1), task.remaining)
+        if (task.pos == 0 and chunk == S
+                and not self.kv.enable_prefix_cache):
+            # legacy fast path: whole-prompt self-attention, block KV writes
+            logits = self._one_shot(task.seq_id, task.prompt)
+        else:
+            logits = self._compute_chunk(task, chunk)
+        task.pos += chunk
+        task.chunks += 1
+        if task.done:
+            self.kv.commit_prefix(task.seq_id, task.prompt)
+            self.decoding.add(task.seq_id)
+            return logits, chunk
+        return None, chunk
+
+    def prefill(self, seq_id: str, prompt: list):
+        """One-shot convenience: returns last-token logits (V,)."""
+        task = self.start_prefill(seq_id, prompt)
+        logits, _ = self.prefill_chunk(task, None)
+        return logits
+
+    def _one_shot(self, seq_id: str, prompt: list):
         S = len(prompt)
         bucket = min(_bucket(max(S, self.page_size)), self.max_len)
         bucket = -(-bucket // self.page_size) * self.page_size
         n_pages = bucket // self.page_size
-        pages = self.kv.allocate(seq_id, S)
+        pages = self.kv._tables[seq_id]
         # padded tail of the bucket writes land in trash page 0 (copy — do
         # not mutate the sequence's own table)
         write_table = list(pages) + [0] * (n_pages - len(pages))
@@ -235,27 +472,73 @@ class PagedBackend:
             jnp.asarray(np.array(write_table, np.int32)), S)
         return np.asarray(logits)
 
+    def _compute_chunk(self, task: PrefillTask, chunk: int):
+        ps = self.page_size
+        pos = task.pos
+        # COW any shared page this chunk writes into (only possible for the
+        # recomputed final token of a page-aligned full prefix hit)
+        for pi in range(pos // ps, (pos + chunk - 1) // ps + 1):
+            cow = self.kv.writable_page(task.seq_id, pi * ps)
+            if cow is not None:
+                self.pools = self._cow(self.pools, *cow)
+        table = self.kv._tables[task.seq_id]
+        bucket = min(_bucket(chunk), self.max_len)
+        write_pages = np.zeros((bucket,), np.int32)     # pad -> trash page 0
+        write_offs = np.arange(bucket, dtype=np.int32) % ps
+        for j in range(chunk):
+            p = pos + j
+            write_pages[j] = table[p // ps]
+            write_offs[j] = p % ps
+        # gather only as much context as the chunk can see, bucketed so the
+        # jit specializes per power-of-two page count — not per max_len
+        n_ctx = min(_bucket(-(-(pos + chunk) // ps), lo=1),
+                    self.pages_per_seq)
+        ctx_table = np.zeros((n_ctx,), np.int32)
+        ctx_table[:min(len(table), n_ctx)] = table[:n_ctx]
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :chunk] = task.prompt[pos:pos + chunk]
+        logits, self.pools = self._chunk(
+            self.params, jnp.asarray(toks), self.pools,
+            jnp.asarray(ctx_table), jnp.asarray(write_pages),
+            jnp.asarray(write_offs), pos, chunk)
+        return np.asarray(logits)
+
+    # -- decode -----------------------------------------------------------------
     def decode_batch(self, tokens_by_slot: np.ndarray):
-        """tokens_by_slot: (max_slots,). Inactive slots write to trash page 0."""
-        for sid in self.slot_of:
+        """tokens_by_slot: (max_slots,). Inactive / mid-prefill slots write
+        to trash page 0."""
+        for sid in self.decoding:
             self.kv.ensure_slot(sid)
+            # a decode write into a still-shared page must diverge first
+            cow = self.kv.writable_page(sid, self.kv.length(sid))
+            if cow is not None:
+                self.pools = self._cow(self.pools, *cow)
         tables = np.zeros((self.max_slots, self.pages_per_seq), np.int32)
         lens = np.zeros((self.max_slots,), np.int32)
         for slot, sid in self.seq_of.items():
+            if sid not in self.decoding:
+                continue
             tables[slot] = self.kv.table_array([sid], self.pages_per_seq)[0]
             lens[slot] = self.kv.length(sid)
         logits, self.pools = self._decode(
             self.params, self.pools, jnp.asarray(tokens_by_slot),
             jnp.asarray(tables), jnp.asarray(lens))
-        for sid in self.slot_of:
+        for sid in self.decoding:
             self.kv.advance(sid)
         return np.asarray(logits)
 
     def free(self, seq_id: str):
         slot = self.slot_of.pop(seq_id)
         self.seq_of.pop(slot, None)
+        self.decoding.discard(seq_id)
         self.free_slots.append(slot)
         self.kv.free(seq_id)
 
     def slot(self, seq_id: str) -> int:
         return self.slot_of[seq_id]
+
+    def cache_stats(self) -> dict:
+        s = dict(self.kv.stats)
+        s["hit_rate"] = self.kv.hit_rate()
+        s["cached_free_pages"] = self.kv.cached_free_pages
+        return s

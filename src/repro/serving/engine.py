@@ -1,21 +1,32 @@
 """Continuous-batching inference engine (the vLLM-analogue, real JAX).
 
-One ``step()`` = admit waiting requests into free capacity (prefill each,
-sampling its first token), then run ONE batched decode step across all
-running sequences. This is vLLM-style iteration-level scheduling: new
-requests join the running batch between token steps, finished ones free
-their slots/pages immediately.
+One ``step()`` = admit waiting requests into free capacity (prefilling each),
+then run ONE batched decode step across all running sequences. This is
+vLLM-style iteration-level scheduling: new requests join the running batch
+between token steps, finished ones free their slots/pages immediately.
+
+Two throughput/latency features layer on top of the base loop:
+
+* **Prefix caching** (``enable_prefix_cache``, paged backend): prompts whose
+  leading pages content-match already-computed pages skip recomputing them —
+  the backend's ``PrefillTask.cached_tokens`` reports how much was reused.
+* **Chunked prefill** (``chunked_prefill_budget`` > 0): instead of ingesting
+  a whole prompt in one step (stalling decode for every running sequence),
+  each step computes at most ``budget`` prompt tokens across the in-flight
+  prefills, then still runs the decode batch — bounding time-between-tokens
+  while long prompts admit. A sequence samples its first token (and joins
+  the decode batch) only once its final chunk completes.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.models import LM
-from repro.serving.backends import PagedBackend, SlotBackend
+from repro.serving.backends import PagedBackend, PrefillTask, SlotBackend
 from repro.serving.request import (InferenceRequest, RequestMetrics,
                                    RequestOutput)
 from repro.serving.sampler import sample_tokens
@@ -35,6 +46,11 @@ class EngineConfig:
     num_pages: int | None = None
     use_kernel: bool = False
     max_prefills_per_step: int = 4
+    # prompt tokens computed per engine step across all in-flight prefills;
+    # 0 disables chunking (whole prompts ingest in their admission step)
+    chunked_prefill_budget: int = 0
+    # content-addressed KV page reuse across sequences (paged backend only)
+    enable_prefix_cache: bool = False
 
 
 @dataclass
@@ -58,14 +74,22 @@ class ContinuousBatchingEngine:
             self.backend = PagedBackend(
                 model, params, max_slots=self.cfg.max_slots,
                 max_len=self.cfg.max_seq_len, page_size=self.cfg.page_size,
-                num_pages=self.cfg.num_pages, use_kernel=self.cfg.use_kernel)
+                num_pages=self.cfg.num_pages, use_kernel=self.cfg.use_kernel,
+                enable_prefix_cache=self.cfg.enable_prefix_cache)
         else:
+            if self.cfg.enable_prefix_cache:
+                raise ValueError("prefix caching requires backend='paged'")
             self.backend = SlotBackend(
                 model, params, max_slots=self.cfg.max_slots,
                 max_len=self.cfg.max_seq_len)
         self.waiting: deque[InferenceRequest] = deque()
+        # request_id -> (_Running, PrefillTask): admitted, prompt not yet
+        # fully ingested (only populated when chunked prefill is on)
+        self.prefilling: "OrderedDict[str, tuple[_Running, PrefillTask]]" = \
+            OrderedDict()
         self.running: dict[str, _Running] = {}
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0,
+        self.stats = {"prefill_tokens": 0, "cached_prompt_tokens": 0,
+                      "prefill_chunks": 0, "decode_tokens": 0, "steps": 0,
                       "finished": 0, "aborted": 0}
 
     # -- queue management -------------------------------------------------------
@@ -81,6 +105,11 @@ class ContinuousBatchingEngine:
                 del self.waiting[i]
                 self.stats["aborted"] += 1
                 return True
+        if request_id in self.prefilling:
+            self.backend.free(request_id)
+            del self.prefilling[request_id]
+            self.stats["aborted"] += 1
+            return True
         if request_id in self.running:
             self.backend.free(request_id)
             del self.running[request_id]
@@ -89,7 +118,7 @@ class ContinuousBatchingEngine:
         return False
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.prefilling or self.running)
 
     @property
     def num_running(self) -> int:
@@ -104,28 +133,20 @@ class ContinuousBatchingEngine:
         return bool(self.waiting) and not self.backend.can_admit(
             len(self.waiting[0].prompt_tokens))
 
+    def cache_stats(self) -> dict:
+        """Prefix-cache counters from the backend (empty for slot backend)."""
+        return self.backend.cache_stats()
+
     # -- engine iteration ---------------------------------------------------------
     def step(self) -> list[RequestOutput]:
         self.stats["steps"] += 1
         finished: list[RequestOutput] = []
 
-        # 1) admit waiting requests while capacity allows
-        admitted = 0
-        while (self.waiting and admitted < self.cfg.max_prefills_per_step
-               and self.backend.can_admit(len(self.waiting[0].prompt_tokens))):
-            req = self.waiting.popleft()
-            run = _Running(req=req, metrics=req._metrics)
-            logits = self.backend.prefill(req.request_id, req.prompt_tokens)
-            self.stats["prefill_tokens"] += len(req.prompt_tokens)
-            tok = self._sample_one(req, logits, step=0)
-            run.output_tokens.append(tok)
-            run.metrics.first_token_time = self.clock.now()
-            self.stats["decode_tokens"] += 1
-            self.running[req.request_id] = run
-            admitted += 1
-            f = self._maybe_finish(run)
-            if f:
-                finished.append(f)
+        # 1) prefill: whole prompts (legacy) or up to the chunk budget
+        if self.cfg.chunked_prefill_budget > 0:
+            self._prefill_chunked(finished)
+        else:
+            self._prefill_one_shot(finished)
 
         # 2) one batched decode step over all running sequences
         if self.running:
@@ -160,6 +181,68 @@ class ContinuousBatchingEngine:
         while self.has_work():
             outs.extend(self.step())
         return outs
+
+    # -- prefill scheduling -------------------------------------------------------
+    def _admit(self) -> tuple[_Running, PrefillTask]:
+        req = self.waiting.popleft()
+        run = _Running(req=req, metrics=req._metrics)
+        task = self.backend.start_prefill(req.request_id, req.prompt_tokens)
+        run.metrics.cached_prompt_tokens = task.cached_tokens
+        self.stats["cached_prompt_tokens"] += task.cached_tokens
+        return run, task
+
+    def _prefill_one_shot(self, finished: list):
+        admitted = 0
+        while (self.waiting and admitted < self.cfg.max_prefills_per_step
+               and self.backend.can_admit(len(self.waiting[0].prompt_tokens))):
+            run, task = self._admit()
+            logits, n = self.backend.prefill_chunk(task, None)
+            self._account_chunk(run, n)
+            self._finish_prefill(run, logits, finished)
+            admitted += 1
+
+    def _prefill_chunked(self, finished: list):
+        budget = self.cfg.chunked_prefill_budget
+        left = budget
+        # continue in-flight prefills first (FIFO: oldest admission makes
+        # progress before new prompts consume budget)
+        for rid, (run, task) in list(self.prefilling.items()):
+            if left <= 0:
+                return
+            logits, n = self.backend.prefill_chunk(task, left)
+            left -= n
+            self._account_chunk(run, n)
+            if logits is not None:
+                del self.prefilling[rid]
+                self._finish_prefill(run, logits, finished)
+        admitted = 0
+        while (left > 0 and self.waiting
+               and admitted < self.cfg.max_prefills_per_step
+               and self.backend.can_admit(len(self.waiting[0].prompt_tokens))):
+            run, task = self._admit()
+            admitted += 1
+            logits, n = self.backend.prefill_chunk(task, left)
+            left -= n
+            self._account_chunk(run, n)
+            if logits is not None:
+                self._finish_prefill(run, logits, finished)
+            else:
+                self.prefilling[run.req.request_id] = (run, task)
+
+    def _account_chunk(self, run: _Running, n_tokens: int):
+        self.stats["prefill_tokens"] += n_tokens
+        self.stats["prefill_chunks"] += 1
+        run.metrics.prefill_chunks += 1
+
+    def _finish_prefill(self, run: _Running, logits, finished: list):
+        tok = self._sample_one(run.req, logits, step=0)
+        run.output_tokens.append(tok)
+        run.metrics.first_token_time = self.clock.now()
+        self.stats["decode_tokens"] += 1
+        self.running[run.req.request_id] = run
+        f = self._maybe_finish(run)
+        if f:
+            finished.append(f)
 
     # -- helpers ------------------------------------------------------------------
     def _sample_one(self, req, logits, step) -> int:

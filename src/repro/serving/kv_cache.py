@@ -4,8 +4,34 @@ The page *pool* is device memory (jnp arrays, shaped (L, NP, page, KH, hd));
 this class owns the free list and per-sequence block tables. Token writes and
 attention reads happen inside the jitted engine step functions, which receive
 the pool plus padded block-table / length arrays built here.
+
+Prefix caching (``enable_prefix_cache=True``) adds three mechanisms on top of
+the plain allocator:
+
+* **Content-addressed pages** — every *full* page of a committed prompt is
+  registered under a chain hash ``h_i = H(h_{i-1}, tokens_in_page_i)``, so a
+  later prompt sharing the same token prefix maps to the same page chain.
+* **Copy-on-write reference counts** — matched pages are shared (refcount
+  incremented), including with still-running sequences. Any write into a page
+  with refcount > 1 must first go through :meth:`writable_page`, which hands
+  the caller a private copy target (the backend performs the device copy).
+* **LRU free list** — freeing a sequence does not destroy its registered
+  pages; they park in an LRU "cached-free" list and can be resurrected by a
+  later hash hit. Fresh allocations draw from the never-cached free list
+  first and only then evict the least-recently-used cached page (dropping its
+  hash registration).
+
+Invariants (checked by tests/test_prefix_cache.py):
+  * page 0 is the trash page: never allocated, never hashed;
+  * every other page is in exactly one of {referenced (ref>0), LRU
+    cached-free, plain free};
+  * ``free_pages`` counts plain free + LRU pages (both are claimable);
+  * a partial (not-full) page is never registered, so it is only shared in
+    the page-aligned full-prefix case handled by :meth:`writable_page`.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import numpy as np
 
@@ -15,44 +41,177 @@ class OutOfPages(RuntimeError):
 
 
 class PagedKVCache:
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 enable_prefix_cache: bool = False):
         self.num_pages = num_pages
         self.page_size = page_size
+        self.enable_prefix_cache = enable_prefix_cache
         # page 0 is reserved as the trash page: inactive batch slots in the
         # jitted decode step write there (masked reads make it harmless)
         self._free = list(range(num_pages - 1, 0, -1))
         self._tables: dict[str, list[int]] = {}
         self._lens: dict[str, int] = {}
+        self._ref: dict[int, int] = {}            # page -> refcount (>0 only)
+        # prefix-cache state (all empty when disabled)
+        self._hash_of: dict[int, object] = {}     # page -> chain hash
+        self._page_of: dict[object, int] = {}     # chain hash -> page
+        self._lru: OrderedDict[int, None] = OrderedDict()  # freed cached pages
+        self.stats = {"hit_tokens": 0, "miss_tokens": 0, "hit_pages": 0,
+                      "evictions": 0, "cow_copies": 0, "resurrections": 0}
 
     # -- capacity ------------------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return len(self._free) + len(self._lru)
 
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
     def can_allocate(self, n_tokens: int) -> bool:
+        # conservative: assumes no prefix hit
         return self.pages_needed(n_tokens) <= self.free_pages
+
+    # -- page hashing ----------------------------------------------------------
+    def page_hashes(self, tokens: list[int]) -> list[object]:
+        """Chain hash per FULL page of ``tokens`` (partial tail excluded)."""
+        out = []
+        h = None
+        for i in range(len(tokens) // self.page_size):
+            chunk = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
+            h = hash((h, chunk))
+            out.append(h)
+        return out
+
+    # -- internal page acquisition ---------------------------------------------
+    def _take_page(self) -> int:
+        """Claim a writable page: prefer never-cached free pages, then evict
+        the least-recently-used cached-free page (its hash dies with it)."""
+        if self._free:
+            p = self._free.pop()
+        elif self._lru:
+            p, _ = self._lru.popitem(last=False)       # oldest first
+            self._drop_registration(p)
+            self.stats["evictions"] += 1
+        else:
+            raise OutOfPages("page pool exhausted")
+        self._ref[p] = 1
+        return p
+
+    def _drop_registration(self, page: int) -> None:
+        h = self._hash_of.pop(page, None)
+        if h is not None and self._page_of.get(h) == page:
+            del self._page_of[h]
+
+    def _release_page(self, page: int) -> None:
+        self._ref[page] -= 1
+        if self._ref[page] > 0:
+            return
+        del self._ref[page]
+        if page in self._hash_of:
+            self._lru[page] = None                     # park, resurrectable
+            self._lru.move_to_end(page)
+        else:
+            self._free.append(page)
 
     # -- lifecycle -----------------------------------------------------------
     def allocate(self, seq_id: str, n_tokens: int) -> list[int]:
+        """Plain allocation (no prefix matching)."""
         need = self.pages_needed(max(n_tokens, 1))
         if need > self.free_pages:
-            raise OutOfPages(f"{seq_id}: need {need} pages, {self.free_pages} free")
-        pages = [self._free.pop() for _ in range(need)]
+            raise OutOfPages(f"{seq_id}: need {need} pages, "
+                             f"{self.free_pages} free")
+        pages = [self._take_page() for _ in range(need)]
         self._tables[seq_id] = pages
         self._lens[seq_id] = n_tokens
         return pages
+
+    def allocate_with_prefix(self, seq_id: str,
+                             tokens: list[int]) -> tuple[list[int], int]:
+        """Allocate pages for a full prompt, reusing the longest cached page
+        chain. Returns ``(pages, n_cached)``: the sequence's block table and
+        how many leading tokens are already computed in shared pages.
+
+        At least one token is always left to compute (its logits seed
+        sampling), so a page-aligned full hit reports ``len(tokens) - 1``
+        cached tokens; the recomputed final token's KV write then lands in a
+        shared page and is COW'd by the backend via :meth:`writable_page`.
+        """
+        if not self.enable_prefix_cache:
+            pages = self.allocate(seq_id, len(tokens))
+            self.stats["miss_tokens"] += len(tokens)
+            return pages, 0
+        hashes = self.page_hashes(tokens)
+        matched: list[int] = []
+        for h in hashes:
+            p = self._page_of.get(h)
+            if p is None:
+                break
+            matched.append(p)
+        n_cached = min(len(matched) * self.page_size, max(len(tokens) - 1, 0))
+        need_total = self.pages_needed(max(len(tokens), 1))
+        n_fresh = need_total - len(matched)
+        if n_fresh > len(self._free) + len(self._lru) - sum(
+                1 for p in matched if p in self._lru):
+            # matched LRU pages are about to be pinned; they no longer count
+            # as claimable when sizing the fresh allocation
+            raise OutOfPages(f"{seq_id}: need {n_fresh} fresh pages")
+        for p in matched:                              # pin shared pages
+            if p in self._lru:
+                del self._lru[p]
+                self._ref[p] = 1
+                self.stats["resurrections"] += 1
+            else:
+                self._ref[p] += 1
+        fresh = [self._take_page() for _ in range(n_fresh)]
+        self._tables[seq_id] = matched + fresh
+        self._lens[seq_id] = len(tokens)
+        self.stats["hit_tokens"] += n_cached
+        self.stats["miss_tokens"] += len(tokens) - n_cached
+        self.stats["hit_pages"] += len(matched)
+        return self._tables[seq_id], n_cached
+
+    def commit_prefix(self, seq_id: str, tokens: list[int]) -> None:
+        """Register the sequence's freshly computed full pages in the content
+        index (call once prefill has actually written them)."""
+        if not self.enable_prefix_cache:
+            return
+        table = self._tables[seq_id]
+        for i, h in enumerate(self.page_hashes(tokens)):
+            p = table[i]
+            if p in self._hash_of:
+                continue                               # already registered
+            if h in self._page_of:
+                continue                               # a twin won the race
+            self._hash_of[p] = h
+            self._page_of[h] = p
+
+    def writable_page(self, seq_id: str, token_pos: int):
+        """Ensure the page holding ``token_pos`` is privately owned before a
+        KV write. Returns ``None`` if already exclusive, else ``(src, dst)``:
+        the caller MUST copy device page ``src`` -> ``dst`` (copy-on-write);
+        the block table is already updated to ``dst``.
+        """
+        idx = token_pos // self.page_size
+        table = self._tables[seq_id]
+        if idx >= len(table):
+            return None            # page not allocated yet (nothing shared)
+        src = table[idx]
+        if self._ref.get(src, 0) <= 1:
+            return None
+        dst = self._take_page()
+        table[idx] = dst
+        self._ref[src] -= 1                            # still >0: others own it
+        self.stats["cow_copies"] += 1
+        return src, dst
 
     def ensure_slot(self, seq_id: str) -> None:
         """Make sure a page exists for the NEXT token position (call before
         the decode step writes at position ``len``)."""
         n = self._lens[seq_id] + 1
         if self.pages_needed(n) > len(self._tables[seq_id]):
-            if not self._free:
+            if not self.free_pages:
                 raise OutOfPages(f"{seq_id}: pool exhausted on append")
-            self._tables[seq_id].append(self._free.pop())
+            self._tables[seq_id].append(self._take_page())
 
     def advance(self, seq_id: str) -> None:
         self._lens[seq_id] += 1
@@ -63,11 +222,23 @@ class PagedKVCache:
         self.advance(seq_id)
 
     def free(self, seq_id: str) -> None:
-        self._free.extend(reversed(self._tables.pop(seq_id, [])))
+        for p in reversed(self._tables.pop(seq_id, [])):
+            self._release_page(p)
         self._lens.pop(seq_id, None)
 
     def length(self, seq_id: str) -> int:
         return self._lens[seq_id]
+
+    def ref_count(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    @property
+    def cached_free_pages(self) -> int:
+        return len(self._lru)
+
+    def hit_rate(self) -> float:
+        tot = self.stats["hit_tokens"] + self.stats["miss_tokens"]
+        return self.stats["hit_tokens"] / tot if tot else 0.0
 
     # -- device-facing views ---------------------------------------------------
     def table_array(self, seq_ids: list[str], max_pages: int) -> np.ndarray:

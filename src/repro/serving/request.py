@@ -38,6 +38,8 @@ class RequestMetrics:
     queued_time: float = 0.0       # entered engine queue
     first_token_time: float = 0.0
     finish_time: float = 0.0
+    cached_prompt_tokens: int = 0  # prompt tokens served from the prefix cache
+    prefill_chunks: int = 0        # engine steps this prompt's ingest spanned
 
     @property
     def ttft(self):

@@ -1,0 +1,250 @@
+"""Prefix caching + chunked prefill: correctness locks.
+
+The contract under test: turning on block-level KV reuse and/or chunked
+prefill must never change WHAT the engine generates — only how much prefill
+compute it spends and how it is scheduled. Greedy (temperature=0) outputs
+are therefore compared token-for-token against the cold one-shot baseline.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.kv_cache import OutOfPages, PagedKVCache
+from repro.serving.request import InferenceRequest, SamplingParams
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(REGISTRY["llama3.2-3b"])
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **overrides):
+    kw = dict(max_slots=4, max_seq_len=128, backend="paged", page_size=PAGE)
+    kw.update(overrides)
+    return ContinuousBatchingEngine(model, params, EngineConfig(**kw))
+
+
+def _run(eng, prompts, max_tokens=8):
+    for i, p in enumerate(prompts):
+        eng.add_request(InferenceRequest(
+            model="m", prompt_tokens=list(p), request_id=f"r{i}",
+            sampling=SamplingParams(max_tokens=max_tokens, temperature=0.0)))
+    outs = eng.run_to_completion()
+    return {o.request_id: o.output_tokens for o in outs}
+
+
+def _shared_prefix_prompts(vocab, n, n_shared=40, n_tail=24, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(2, vocab, size=n_shared).tolist()
+    return [shared + rng.integers(2, vocab, size=n_tail).tolist()
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_shares_pages_and_refcounts():
+    kv = PagedKVCache(32, PAGE, enable_prefix_cache=True)
+    toks = list(range(PAGE * 2 + 5))                   # 2 full pages + tail
+    pages_a, cached_a = kv.allocate_with_prefix("a", toks)
+    assert cached_a == 0                               # cold
+    kv.commit_prefix("a", toks)
+    pages_b, cached_b = kv.allocate_with_prefix("b", toks)
+    assert cached_b == 2 * PAGE                        # both full pages hit
+    assert pages_b[:2] == pages_a[:2]                  # physically shared
+    assert pages_b[2] != pages_a[2]                    # partial page private
+    assert kv.ref_count(pages_a[0]) == 2
+    kv.free("a")
+    assert kv.ref_count(pages_b[0]) == 1               # b still owns it
+    kv.free("b")
+    assert kv.ref_count(pages_b[0]) == 0
+    assert kv.cached_free_pages == 2                   # parked in LRU, warm
+
+
+def test_lru_resurrection_and_eviction():
+    kv = PagedKVCache(8, PAGE, enable_prefix_cache=True)   # 7 usable pages
+    t1 = list(range(PAGE))                                 # 1 full page
+    kv.allocate_with_prefix("a", t1 + [1, 2])
+    kv.commit_prefix("a", t1 + [1, 2])
+    kv.free("a")
+    assert kv.cached_free_pages == 1
+    # same prefix returns: resurrect the parked page
+    _, cached = kv.allocate_with_prefix("b", t1 + [9, 9])
+    assert cached == PAGE
+    assert kv.stats["resurrections"] == 1
+    kv.free("b")
+    # page pressure: allocating more than the plain free list forces LRU
+    # eviction, after which the old prefix no longer matches
+    kv.allocate("big", 7 * PAGE)
+    assert kv.stats["evictions"] >= 1
+    kv.free("big")
+    _, cached = kv.allocate_with_prefix("c", t1 + [3])
+    assert cached == 0                                  # registration evicted
+
+
+def test_writable_page_cow_semantics():
+    kv = PagedKVCache(16, PAGE, enable_prefix_cache=True)
+    toks = list(range(PAGE))                            # exactly one page
+    pa, _ = kv.allocate_with_prefix("a", toks)
+    kv.commit_prefix("a", toks)
+    pb, cached = kv.allocate_with_prefix("b", toks)
+    assert cached == PAGE - 1                           # final token recomputed
+    assert pb == pa                                     # full hit, shared
+    cow = kv.writable_page("b", PAGE - 1)
+    assert cow is not None
+    src, dst = cow
+    assert src == pa[0] and dst != src
+    assert kv._tables["b"][0] == dst                    # b rewired to its copy
+    assert kv.ref_count(src) == 1 and kv.ref_count(dst) == 1
+    assert kv.writable_page("b", PAGE - 1) is None      # now exclusive
+
+
+def test_out_of_pages_still_raises():
+    kv = PagedKVCache(4, PAGE, enable_prefix_cache=True)
+    kv.allocate("a", 3 * PAGE)
+    with pytest.raises(OutOfPages):
+        kv.allocate("b", PAGE)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end output equivalence (the real invariant)
+# ---------------------------------------------------------------------------
+
+def test_prefix_reuse_outputs_match_cold_start(lm):
+    cfg, model, params = lm
+    prompts = _shared_prefix_prompts(cfg.vocab_size, 6)
+    cold = _run(_engine(model, params), prompts)
+    eng = _engine(model, params, enable_prefix_cache=True)
+    warm = _run(eng, prompts)
+    assert warm == cold
+    assert eng.stats["cached_prompt_tokens"] > 0        # reuse actually fired
+    assert eng.cache_stats()["hit_rate"] > 0.3
+
+
+def test_cow_divergence_outputs_match(lm):
+    """Page-aligned identical prompts force the full-prefix-hit + COW path;
+    generations diverge afterwards (different seeds via step index) yet must
+    match the cold baseline exactly."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(7)
+    p = rng.integers(2, cfg.vocab_size, size=2 * PAGE).tolist()
+    prompts = [p, p, p]
+    cold = _run(_engine(model, params), prompts, max_tokens=6)
+    eng = _engine(model, params, enable_prefix_cache=True)
+    warm = _run(eng, prompts, max_tokens=6)
+    assert warm == cold
+    assert eng.cache_stats()["cow_copies"] >= 1
+
+
+def test_lru_eviction_under_page_pressure_end_to_end(lm):
+    cfg, model, params = lm
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, cfg.vocab_size, size=2 * PAGE).tolist()
+               for _ in range(6)]
+    # pool sized for ~2 sequences: later admissions must evict parked pages
+    eng = _engine(model, params, max_slots=2, num_pages=9,
+                  enable_prefix_cache=True)
+    warm = _run(eng, prompts, max_tokens=4)
+    cold = _run(_engine(model, params, max_slots=2, num_pages=9), prompts,
+                max_tokens=4)
+    assert warm == cold
+    assert eng.cache_stats()["evictions"] > 0
+    assert eng.backend.kv.free_pages == 8               # nothing leaked
+
+
+@pytest.mark.parametrize("backend", ["paged", "slots"])
+def test_chunked_prefill_matches_one_shot(lm, backend):
+    cfg, model, params = lm
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
+               for n in (24, 40, 33, 17)]
+    one_shot = _run(_engine(model, params, backend=backend), prompts)
+    eng = _engine(model, params, backend=backend, chunked_prefill_budget=16)
+    chunked = _run(eng, prompts)
+    assert chunked == one_shot
+    # prompts longer than the budget really did span multiple chunks
+    assert eng.stats["prefill_chunks"] > len(prompts)
+
+
+def test_chunked_prefill_with_prefix_cache(lm):
+    cfg, model, params = lm
+    prompts = _shared_prefix_prompts(cfg.vocab_size, 5, seed=11)
+    cold = _run(_engine(model, params), prompts)
+    eng = _engine(model, params, enable_prefix_cache=True,
+                  chunked_prefill_budget=16)
+    both = _run(eng, prompts)
+    assert both == cold
+    assert eng.stats["cached_prompt_tokens"] > 0
+
+
+def test_chunked_prefill_interleaves_decode(lm):
+    """While a long prompt ingests chunk-by-chunk, already-running sequences
+    keep producing a token every step."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(9)
+    eng = _engine(model, params, chunked_prefill_budget=8, max_seq_len=256)
+    eng.add_request(InferenceRequest(
+        model="m", prompt_tokens=rng.integers(2, cfg.vocab_size,
+                                              size=8).tolist(),
+        request_id="short", sampling=SamplingParams(max_tokens=32,
+                                                    temperature=0.0)))
+    eng.step()
+    assert "short" in eng.running
+    eng.add_request(InferenceRequest(
+        model="m", prompt_tokens=rng.integers(2, cfg.vocab_size,
+                                              size=64).tolist(),
+        request_id="long", sampling=SamplingParams(max_tokens=4,
+                                                   temperature=0.0)))
+    produced_during_ingest = 0
+    steps = 0
+    while "long" not in eng.running and steps < 32:
+        before = len(eng.running["short"].output_tokens)
+        eng.step()
+        steps += 1
+        if "short" in eng.running:
+            produced_during_ingest += \
+                len(eng.running["short"].output_tokens) - before
+    assert "long" in eng.running or steps < 32
+    assert steps >= 64 // 8                 # the ingest really was chunked
+    assert produced_during_ingest >= steps - 1   # decode never stalled
+    eng.run_to_completion()
+
+
+def test_sim_engine_prefix_and_chunk_toggles():
+    """DES mirror: warm-cache hit rate cuts prefill cost; a chunk budget
+    bounds per-step time during a long-prompt admit."""
+    from repro.core.clock import EventLoop, VirtualClock
+    from repro.core.instances import SimEngine, SimRequest
+    from repro.serving.costmodel import InstanceCost
+    from repro.core.testbed import LLAMA70B
+
+    def run(hit, budget):
+        loop = EventLoop(VirtualClock())
+        cost = InstanceCost(cfg=LLAMA70B, chips=8)
+        eng = SimEngine(loop, cost, max_slots=8,
+                        prefix_cache_hit_rate=hit,
+                        chunked_prefill_budget=budget)
+        done = []
+        for i in range(8):
+            eng.submit(SimRequest(f"r{i}", 2048, 16),
+                       None, lambda r: done.append(r))
+        loop.run_until_idle()
+        assert len(done) == 8
+        return loop.now(), eng
+
+    t_cold, _ = run(0.0, None)
+    t_warm, eng_warm = run(0.9, None)
+    assert t_warm < t_cold                   # cache discount helps makespan
+    assert eng_warm.total_cached_tokens > 0
+    t_chunked, eng_c = run(0.0, 256)
+    # same total work either way, so chunking must not LOSE much throughput
+    assert t_chunked < t_cold * 1.5

@@ -4,7 +4,12 @@ and the federation selector."""
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.clock import EventLoop, VirtualClock
 from repro.core.gateway import RateLimiter
@@ -83,6 +88,57 @@ def test_paged_kv_allocator_invariants(data):
         assert len(owned) + kv.free_pages == num_pages - 1
         for sid, n in live.items():
             assert len(kv._tables[sid]) >= kv.pages_needed(max(n, 1))
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_prefix_cache_allocator_invariants(data):
+    """With prefix caching on, pages may be shared — the invariants become:
+    refcounts exactly count owning tables, and {referenced, LRU-cached-free,
+    plain-free} partition the non-trash pool."""
+    from collections import Counter
+
+    num_pages = data.draw(st.integers(4, 64))
+    page = data.draw(st.sampled_from([4, 8, 16]))
+    kv = PagedKVCache(num_pages, page, enable_prefix_cache=True)
+    # a small prompt vocabulary makes shared prefixes (and hash hits) likely
+    pool = [data.draw(st.lists(st.integers(0, 3), min_size=1,
+                               max_size=3 * page)) for _ in range(3)]
+    live: dict[str, int] = {}
+    for i in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.sampled_from(["alloc", "append", "free"]))
+        if op == "alloc":
+            toks = list(data.draw(st.sampled_from(pool)))
+            sid = f"s{i}"
+            try:
+                pages, n_cached = kv.allocate_with_prefix(sid, toks)
+                kv.commit_prefix(sid, toks)
+                live[sid] = len(toks)
+                assert n_cached <= max(len(toks) - 1, 0)
+                assert len(pages) == kv.pages_needed(max(len(toks), 1))
+                assert 0 not in pages
+            except OutOfPages:
+                pass
+        elif op == "append" and live:
+            sid = data.draw(st.sampled_from(sorted(live)))
+            try:
+                kv.writable_page(sid, kv.length(sid))   # backend-side COW
+                kv.append_token(sid)
+                live[sid] += 1
+            except OutOfPages:
+                pass
+        elif op == "free" and live:
+            sid = data.draw(st.sampled_from(sorted(live)))
+            kv.free(sid)
+            del live[sid]
+        owned = Counter(p for s in live for p in kv._tables[s])
+        for p, n in owned.items():
+            assert kv.ref_count(p) == n
+        assert set(kv._free).isdisjoint(owned)
+        assert set(kv._lru).isdisjoint(owned)
+        assert set(kv._free).isdisjoint(kv._lru)
+        assert (len(kv._free) + len(kv._lru) + len(owned)
+                == num_pages - 1)
 
 
 # ---------------------------------------------------------------------------
