@@ -97,8 +97,11 @@ class APIServerCost(InstanceCost):
     admit_cpu: float = 0.004
     chunk_cpu: float = 0.00025
 
-    def decode_step_time(self, batch: int, ctx: int = 1024) -> float:
-        return (super().decode_step_time(batch, ctx)
+    def decode_step_time(self, batch: int, ctx: int = 1024,
+                         steps_per_sync: int = 1) -> float:
+        # the HTTP thread detokenizes/streams every token regardless of how
+        # the engine batches its device syncs, so chunk_cpu is per token
+        return (super().decode_step_time(batch, ctx, steps_per_sync)
                 + batch * self.chunk_cpu)
 
     def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:

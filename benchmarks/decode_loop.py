@@ -1,0 +1,200 @@
+"""Decode fast-path benchmark (real engine, CPU, reduced config).
+
+Steady-state decode throughput and inter-token latency for the legacy
+host-driven decode path vs the fused device-resident path at
+``decode_steps_per_sync`` (K) in {1, 4, 16}. The legacy path ships the full
+``(max_slots, V)`` logits to the host and re-dispatches a sampling call
+every token; the fused path runs decode+sample+stop checks in one donated
+jitted call and, at K>1, loops K steps on device per host sync — so its
+per-token cost is dominated by the model step, not transfers/dispatch.
+
+Inter-token latency is measured at token *delivery*: with K>1 tokens
+surface in bursts (intra-burst gap 0, inter-burst gap = the sync period),
+so the p99 column makes the throughput/latency trade explicit.
+
+Greedy outputs are asserted token-identical across every mode — the fast
+path must be an optimization, not a different sampler.
+
+Writes ``results/benchmarks/decode_loop.json``.
+``python -m benchmarks.run --only decode_loop`` or run this module
+directly; ``--smoke`` (via ``benchmarks.run``) shrinks the workload and
+relaxes the speedup gate for CI.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, print_table
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.serving import backends
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.request import InferenceRequest, SamplingParams
+
+ARCH = "llama3.2-3b"
+PAGE = 32
+PROMPT_LEN = 32
+SLOTS = 4
+OUT_PATH = os.path.join("results", "benchmarks", "decode_loop.json")
+
+
+def _requests(vocab, n, gen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [InferenceRequest(
+        model=ARCH,
+        prompt_tokens=rng.integers(2, vocab, size=PROMPT_LEN).tolist(),
+        request_id=f"r{i}",
+        sampling=SamplingParams(max_tokens=gen, temperature=0.0))
+        for i in range(n)]
+
+
+def _mk_engine(model, params, gen, *, fused, K):
+    cfg = EngineConfig(
+        max_slots=SLOTS, max_seq_len=PROMPT_LEN + gen + PAGE,
+        backend="paged", page_size=PAGE, fused_decode=fused,
+        decode_steps_per_sync=K)
+    return ContinuousBatchingEngine(model, params, cfg)
+
+
+def _timed_pass(eng, reqs):
+    """Drive one full workload, recording per-token delivery gaps and the
+    per-step token rate. ``steady_tok_per_s`` is the median per-step rate —
+    robust to a contention spike hitting one step of one mode's pass on a
+    shared host, which total wall clock is not — and is the 'steady-state
+    decode tok/s' the acceptance gate compares."""
+    for r in copy.deepcopy(reqs):
+        eng.add_request(r)
+    outputs = {}
+    seen: dict[str, int] = {}
+    last: dict[str, float] = {}
+    gaps: list[float] = []
+    rates: list[float] = []
+    dec0 = eng.stats["decode_tokens"]
+    sync0 = eng.stats["decode_syncs"]
+    t0 = time.perf_counter()
+    prev = t0
+    while eng.has_work():
+        fin = eng.step()
+        now = time.perf_counter()
+        live = {rid: len(run.output_tokens)
+                for rid, run in eng.running.items()}
+        for o in fin:
+            live[o.request_id] = len(o.output_tokens)
+            outputs[o.request_id] = list(o.output_tokens)
+        step_tokens = 0
+        for rid, n in live.items():
+            delta = n - seen.get(rid, 0)
+            if delta > 0:
+                step_tokens += delta
+                gaps.append(now - last.get(rid, t0))   # burst head gap
+                gaps.extend([0.0] * (delta - 1))       # rest arrive together
+                last[rid] = now
+                seen[rid] = n
+        if step_tokens:
+            rates.append(step_tokens / (now - prev))
+        prev = now
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "decode_tokens": eng.stats["decode_tokens"] - dec0,
+        "decode_syncs": eng.stats["decode_syncs"] - sync0,
+        "tok_per_s": (eng.stats["decode_tokens"] - dec0) / wall,
+        "steady_tok_per_s": float(np.median(rates)),
+        "p50_itl_ms": float(np.percentile(gaps, 50) * 1e3),
+        "p99_itl_ms": float(np.percentile(gaps, 99) * 1e3),
+        "outputs": outputs,
+    }
+
+
+def bench(model, params, vocab, *, gen, ks):
+    reqs = _requests(vocab, SLOTS, gen, seed=2)
+    modes = [("legacy", False, 1)] + [("fused", True, k) for k in ks]
+    results, rows = [], []
+    for name, fused, k in modes:
+        eng = _mk_engine(model, params, gen, fused=fused, K=k)
+        # warmup: compiles every jit bucket this mode will hit
+        _timed_pass(eng, _requests(vocab, SLOTS, gen, seed=1))
+        backends.reset_transfer_stats()
+        # best of two passes: wall-clock contention on a shared host hits
+        # one mode's pass, not the others', and would skew the ratios
+        # best of three passes: on a small shared host, contention can sit
+        # on one mode's whole pass and would skew the ratios. The identity
+        # assertion below always compares pass-1 outputs (greedy decode is
+        # deterministic, so later passes produce the same tokens).
+        r = _timed_pass(eng, reqs)
+        transfers = backends.TRANSFER_STATS["decode_logits_transfers"]
+        for _ in range(2):
+            r2 = _timed_pass(eng, reqs)
+            if r2["steady_tok_per_s"] > r["steady_tok_per_s"]:
+                r2["outputs"] = r["outputs"]
+                r = r2
+        r["mode"], r["K"] = name, k
+        r["logits_transfers"] = transfers     # per pass (deterministic)
+        if fused:
+            assert r["logits_transfers"] == 0, \
+                "fused path transferred logits to host"
+        results.append(r)
+        rows.append([f"{name} K={k}", f"{r['steady_tok_per_s']:.0f}",
+                     f"{r['p50_itl_ms']:.2f}", f"{r['p99_itl_ms']:.2f}",
+                     r["decode_syncs"], r["logits_transfers"]])
+        csv_line(f"decode_loop/{name}_K{k}", r["wall_s"] * 1e6 / max(
+            r["decode_tokens"], 1), f"tok_s={r['steady_tok_per_s']:.0f}")
+    base = results[0]["outputs"]
+    for r in results[1:]:
+        assert r["outputs"] == base, \
+            f"{r['mode']} K={r['K']} outputs diverged from legacy"
+    print_table(
+        f"Decode fast path ({ARCH} reduced, B={SLOTS}, {gen} gen tokens)",
+        ["mode", "steady tok/s", "p50 ITL ms", "p99 ITL ms", "syncs",
+         "logits->host"],
+        rows, widths=[12, 12, 10, 10, 6, 12])
+    return results
+
+
+def main(fast: bool = False, smoke: bool = False) -> dict:
+    cfg = reduced(REGISTRY[ARCH])
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    # smoke keeps gen long enough for steady state to dominate — short
+    # runs under-credit K=16 (end-of-sequence waste is a larger share)
+    # and give its median rate too few sync samples to reject contention
+    gen = 64 if (smoke or fast) else 192
+    ks = [1, 16] if smoke else [1, 4, 16]
+    results = bench(model, params, cfg.vocab_size, gen=gen, ks=ks)
+    legacy = results[0]
+    fused16 = next(r for r in results if r["mode"] == "fused"
+                   and r["K"] == 16)
+    speedup = fused16["steady_tok_per_s"] / legacy["steady_tok_per_s"]
+    out = {"arch": ARCH, "batch": SLOTS, "prompt_len": PROMPT_LEN,
+           "gen_tokens": gen, "page_size": PAGE,
+           "modes": [{k: v for k, v in r.items() if k != "outputs"}
+                     for r in results],
+           "speedup_fused16_vs_legacy": speedup,
+           "tokens_identical": True}
+    # fast/smoke runs must not clobber the committed full-mode artifact
+    path = OUT_PATH.replace(".json", ".fast.json") if (fast or smoke) \
+        else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {path}  (fused K=16 vs legacy: {speedup:.2f}x)")
+    # the 2x claim is held to the full-length run only; reduced runs
+    # (smoke/fast: gen=64) under-credit K=16 — end-of-sequence waste is a
+    # larger share and the median has fewer sync samples — and the smoke
+    # floor additionally leaves headroom for loaded shared CI runners
+    floor = 1.3 if smoke else (1.5 if fast else 2.0)
+    if speedup < floor:
+        raise SystemExit(
+            f"fused decode speedup at K=16 is {speedup:.2f}x "
+            f"(expected >= {floor}x)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

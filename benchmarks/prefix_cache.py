@@ -184,7 +184,10 @@ def bench_chunked_itl(model, params, vocab, *, budget=64, long_prompt=512,
             "itl_improvement": itl_one_shot / max(itl_chunked, 1e-9)}
 
 
-def main(fast: bool = False) -> dict:
+def main(fast: bool = False, min_speedup: float = 2.0) -> dict:
+    """``min_speedup`` is the 80%-share acceptance gate; CI's ``--smoke``
+    lowers it — shared-runner wall clocks swing ~2x between machines and
+    the gate should catch regressions, not host variance."""
     cfg = reduced(REGISTRY[ARCH])
     model = make_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
@@ -194,16 +197,18 @@ def main(fast: bool = False) -> dict:
     itl = bench_chunked_itl(model, params, cfg.vocab_size)
     result = {"arch": ARCH, "prompt_len": PROMPT_LEN, "page_size": PAGE,
               "share_sweep": sweep, "chunked_prefill": itl}
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as f:
+    # fast/smoke runs must not clobber the committed full-sweep artifact
+    path = OUT_PATH.replace(".json", ".fast.json") if fast else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
         json.dump(result, f, indent=2)
-    print(f"\nwrote {OUT_PATH}")
+    print(f"\nwrote {path}")
     at80 = next((c for c in sweep if abs(c["share_ratio"] - 0.8) < 1e-9),
                 None)
-    if at80 is not None and at80["speedup"] < 2.0:
+    if at80 is not None and at80["speedup"] < min_speedup:
         raise SystemExit(
             f"prefix cache speedup at 80% share is {at80['speedup']:.2f}x "
-            "(expected >= 2x)")
+            f"(expected >= {min_speedup}x)")
     if itl["max_itl_chunked_s"] >= itl["max_itl_one_shot_s"]:
         raise SystemExit("chunked prefill did not reduce max ITL")
     return result

@@ -7,9 +7,12 @@
   batch_mode    §5.3.1  online vs dedicated offline batch job
   engine_step   (real)  CPU wall-clock of the JAX engine, reduced configs
   prefix_cache  (real)  KV prefix reuse + chunked-prefill ITL, JSON output
+  decode_loop   (real)  fused decode fast path vs legacy, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
-``python -m benchmarks.run [--fast] [--only NAME]``.  Machine-readable
+``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
+``--smoke`` runs only the real-engine perf-path suites at minimal sizes
+with their acceptance gates on — the CI regression check.  Machine-readable
 lines are prefixed ``CSV,name,us_per_call,derived``.
 """
 from __future__ import annotations
@@ -18,8 +21,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (autoscale, batch_mode, concurrency, engine_step,
-                        external_api, prefix_cache, rate_sweep, roofline)
+from benchmarks import (autoscale, batch_mode, concurrency, decode_loop,
+                        engine_step, external_api, prefix_cache, rate_sweep,
+                        roofline)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -29,26 +33,47 @@ SUITES = {
     "batch_mode": batch_mode.main,
     "engine_step": engine_step.main,
     "prefix_cache": prefix_cache.main,
+    "decode_loop": decode_loop.main,
     "roofline": roofline.main,
 }
+
+# real-engine suites with self-enforced acceptance thresholds: these are
+# the ones a perf-path regression breaks, so CI runs exactly these
+SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced request counts / fewer cells")
+    ap.add_argument("--smoke", action="store_true",
+                    help="perf-path regression check: real-engine suites "
+                         "only, minimal sizes (implies --fast)")
     ap.add_argument("--only", default=None, choices=[*SUITES, None])
     args = ap.parse_args()
 
-    names = [args.only] if args.only else list(SUITES)
+    if args.only:
+        names = [args.only]
+    elif args.smoke:
+        names = list(SMOKE_SUITES)
+    else:
+        names = list(SUITES)
     failures = []
     for name in names:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         t0 = time.time()
+        kw = {"fast": args.fast or args.smoke}
+        if args.smoke and name == "decode_loop":
+            kw["smoke"] = True
+        if args.smoke and name == "prefix_cache":
+            kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom
         try:
-            SUITES[name](fast=args.fast)
+            SUITES[name](**kw)
             print(f"[{name}] done in {time.time() - t0:.1f}s")
-        except Exception:                       # noqa: BLE001
+        except (Exception, SystemExit):         # noqa: BLE001
+            # acceptance gates signal via SystemExit — catch it so one
+            # failed gate still lets the remaining suites run and the
+            # failure summary aggregate
             failures.append(name)
             print(f"[{name}] FAILED:\n{traceback.format_exc()}")
     if failures:

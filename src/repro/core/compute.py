@@ -36,6 +36,7 @@ class ModelDeployment:
     # engine data-plane toggles (see repro.core.instances.SimEngine)
     prefix_cache_hit_rate: float = 0.0     # warm-cache shared-prefix fraction
     chunked_prefill_budget: int | None = None  # prompt tokens per engine step
+    decode_steps_per_sync: int = 1         # fused decode tokens per host sync
 
 
 class ComputeEndpoint:
@@ -155,6 +156,7 @@ class ComputeEndpoint:
             result_cpu=dep.result_cpu,
             prefix_cache_hit_rate=dep.prefix_cache_hit_rate,
             chunked_prefill_budget=dep.chunked_prefill_budget,
+            decode_steps_per_sync=dep.decode_steps_per_sync,
             on_released=self._on_instance_gone,
             on_failed=self._on_instance_failed,
             on_hot=self._on_instance_hot)

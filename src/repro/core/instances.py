@@ -37,7 +37,7 @@ class SimEngine:
     prefill time to the step they join. Mirrors the real engine's
     iteration-level scheduling.
 
-    Two data-plane toggles mirror ``repro.serving.engine.EngineConfig``:
+    Three data-plane toggles mirror ``repro.serving.engine.EngineConfig``:
 
     * ``prefix_cache_hit_rate`` — steady-state fraction of each prompt found
       in the hot instance's KV prefix cache (shared system prompts / few-shot
@@ -50,12 +50,21 @@ class SimEngine:
       and each step's duration charges only that step's chunk — bounding
       inter-token latency for running sequences, exactly like the real
       engine.
+    * ``decode_steps_per_sync`` — the fused multi-step decode loop: each
+      scheduled step covers K tokens per running sequence, charged
+      ``K * decode_step_time(steps_per_sync=K)`` (the host-sync overhead
+      amortized over K), and tokens surface in bursts of K at sync time —
+      so throughput rises while tail inter-token latency quantizes to the
+      sync period, matching ``benchmarks/decode_loop.py``. Falls back to
+      K=1 whenever a prefill is in flight or new sequences were admitted,
+      mirroring the real engine's composition-change rule.
     """
 
     def __init__(self, loop, cost: InstanceCost, max_slots: int = 48,
                  on_idle=None, on_busy=None,
                  prefix_cache_hit_rate: float = 0.0,
-                 chunked_prefill_budget: int | None = None):
+                 chunked_prefill_budget: int | None = None,
+                 decode_steps_per_sync: int = 1):
         self.loop = loop
         self.cost = cost
         self.max_slots = max_slots
@@ -63,9 +72,12 @@ class SimEngine:
         self.on_busy = on_busy
         self.prefix_cache_hit_rate = prefix_cache_hit_rate
         self.chunked_prefill_budget = chunked_prefill_budget
+        self.decode_steps_per_sync = max(int(decode_steps_per_sync), 1)
         self.queue: list[tuple[SimRequest, object, object]] = []
         self.running: list[dict] = []
         self._step_ev = None
+        self._step_k = 1
+        self._composition_changed = False
         self.total_output_tokens = 0
         self.total_finished = 0
         self.total_cached_tokens = 0
@@ -111,8 +123,10 @@ class SimEngine:
             self._schedule_step()
 
     def _schedule_step(self):
+        admitted = False
         while self.queue and len(self.running) < self.max_slots:
             sreq, on_first, on_done = self.queue.pop(0)
+            admitted = True
             # warm-cache discount: matched prefix tokens cost no compute;
             # at least one token is always recomputed (its logits seed
             # sampling), mirroring PagedKVCache.allocate_with_prefix
@@ -141,11 +155,22 @@ class SimEngine:
                 r["chunks"] += 1
                 left -= take
                 prefill_cost += self.cost.prefill_time(take)
+        # multi-step decode: K tokens per sync unless a prefill is in
+        # flight or the batch composition changed — admissions AND the
+        # finishes/frees of the previous sync, which dirty the real
+        # engine's slot state (same fallback rule as
+        # ContinuousBatchingEngine._decode_fused)
+        k = self.decode_steps_per_sync
+        if (admitted or self._composition_changed or prefill_cost > 0
+                or any(r["prefill_left"] > 0 for r in self.running)):
+            k = 1
+        self._composition_changed = False
+        self._step_k = k
         batch = len(self.running)
         ctx = sum(r["req"].prompt_tokens + r["produced"]
                   for r in self.running) / batch
-        dt = self.cost.decode_step_time(batch, ctx=max(int(ctx), 1)) \
-            + prefill_cost
+        dt = k * self.cost.decode_step_time(batch, ctx=max(int(ctx), 1),
+                                            steps_per_sync=k) + prefill_cost
         self._step_ev = self.loop.call_after(dt, self._finish_step)
 
     def _finish_step(self):
@@ -158,12 +183,17 @@ class SimEngine:
             if r["prefill_left"] > 0:           # still ingesting its prompt
                 still.append(r)
                 continue
-            r["produced"] += 1
-            self.total_output_tokens += 1
-            if r["produced"] == 1 and r["on_first"]:
+            first = r["produced"] == 0
+            # a sequence reaching max_tokens mid-sync stops there, like the
+            # device loop's done mask freezing the slot
+            take = min(self._step_k, r["req"].max_tokens - r["produced"])
+            r["produced"] += take
+            self.total_output_tokens += take
+            if first and r["on_first"]:
                 r["on_first"](now)
             if r["produced"] >= r["req"].max_tokens:
                 self.total_finished += 1
+                self._composition_changed = True   # next sync runs K=1
                 if r["on_done"]:
                     r["on_done"]({"request_id": r["req"].request_id,
                                   "output_tokens": r["produced"],
@@ -185,7 +215,8 @@ class ModelInstance:
                  on_failed=None, on_hot=None, walltime: float | None = None,
                  result_cpu: float = 0.0,
                  prefix_cache_hit_rate: float = 0.0,
-                 chunked_prefill_budget: int | None = None):
+                 chunked_prefill_budget: int | None = None,
+                 decode_steps_per_sync: int = 1):
         self.loop = loop
         self.model_name = model_name
         self.cost = cost
@@ -207,7 +238,8 @@ class ModelInstance:
                                 on_idle=self._went_idle,
                                 on_busy=self._went_busy,
                                 prefix_cache_hit_rate=prefix_cache_hit_rate,
-                                chunked_prefill_budget=chunked_prefill_budget)
+                                chunked_prefill_budget=chunked_prefill_budget,
+                                decode_steps_per_sync=decode_steps_per_sync)
         self.hot_since = None
         self.created = loop.now()
         self.job = scheduler.submit(num_nodes, on_start=self._nodes_ready,

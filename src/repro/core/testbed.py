@@ -69,6 +69,7 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
                        result_cpu: float = 0.0,
                        prefix_cache_hit_rate: float = 0.0,
                        chunked_prefill_budget: int | None = None,
+                       decode_steps_per_sync: int = 1,
                        hw: dict | None = None) -> ModelDeployment:
     """``hw``: optional InstanceCost overrides, e.g. A100 constants
     ``dict(peak_flops=312e12, hbm_bw=1555e9)`` for paper-validation runs."""
@@ -82,6 +83,7 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
         result_cpu=result_cpu,
         prefix_cache_hit_rate=prefix_cache_hit_rate,
         chunked_prefill_budget=chunked_prefill_budget,
+        decode_steps_per_sync=decode_steps_per_sync,
         autoscale=AutoScalePolicy(max_instances=max_instances,
                                   cooldown=scale_cooldown),
     )

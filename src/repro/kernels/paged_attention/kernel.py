@@ -8,6 +8,12 @@ tokens) so tiles are MXU/VPU aligned, and an online-softmax accumulator in
 VMEM scratch merges pages (flash-decoding style).
 
 Grid: (B, KH, pages_per_seq) — pages innermost for the accumulator carry.
+
+GQA: the G = H // KH query heads sharing a KV head ride along the q tile's
+sublane axis, so one page DMA serves all of them in a single (G, page)
+MXU contraction. The ops wrapper pads G up to the dtype's sublane tile for
+real-TPU lowering; the kernel itself is grouping-agnostic (G=1 MHA,
+G=H MQA, anything between).
 """
 from __future__ import annotations
 
@@ -94,9 +100,19 @@ def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
             pltpu.VMEM((G, D), jnp.float32),
         ],
     )
+    # renamed across jax releases: CompilerParams <-> TPUCompilerParams
+    params_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+    kw = {}
+    if params_cls is not None and not interpret:
+        # batch and kv-head grid axes are independent; the page axis carries
+        # the online-softmax accumulator and must run in order
+        kw["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
         interpret=interpret,
+        **kw,
     )(block_tables, context_lens, q, k_pages, v_pages)

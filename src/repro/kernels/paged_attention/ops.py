@@ -1,4 +1,15 @@
-"""Public jit'd wrapper for the paged-attention decode kernel."""
+"""Public jit'd wrapper for the paged-attention decode kernel.
+
+GQA handling lives here: the kernel grid iterates (batch, kv-head, page)
+and expects the query tensor grouped as (B, KH, G, D) with G = H // KH
+query heads sharing each KV head. Real-TPU lowering requires the (G, D)
+query tile's sublane axis to be a multiple of the dtype's min tile (8 for
+f32, 16 for bf16), which odd groupings (e.g. yi's 56q/8kv -> G=7) and
+small groups (G < 8) violate — so the wrapper pads the group axis up to
+the sublane tile, lets the padded rows compute garbage against the same
+pages, and slices them off. MQA (KH=1) and MHA (G=1) are just the
+endpoints of the same path.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,23 +20,39 @@ import jax.numpy as jnp
 from repro.kernels.paged_attention.kernel import paged_attention_fwd
 
 
+def _sublane(dtype) -> int:
+    return 16 if dtype == jnp.bfloat16 else 8
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
-                    interpret=False):
+                    interpret=None):
     """Decode attention over a paged KV cache.
 
     q: (B, H, D) one query token per sequence;
     k_pages / v_pages: (NP, page_size, KH, D) the global page pool;
     block_tables: (B, pages_per_seq) int32 page ids (pad with 0 beyond len);
     context_lens: (B,) int32 valid token counts.
+    ``interpret=None`` auto-selects: compiled Pallas on TPU, the
+    interpreter elsewhere (CPU tests / parity checks).
     Returns (B, H, D).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, H, D = q.shape
     KH = k_pages.shape[2]
+    assert H % KH == 0, \
+        f"query heads ({H}) must be a multiple of kv heads ({KH})"
     G = H // KH
     qr = q.reshape(B, KH, G, D)
+    sub = _sublane(q.dtype)
+    Gp = -(-G // sub) * sub
+    if Gp != G:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
     out = paged_attention_fwd(qr, k_pages, v_pages,
                               block_tables.astype(jnp.int32),
                               context_lens.astype(jnp.int32),
                               interpret=interpret)
+    if Gp != G:
+        out = out[:, :, :G]
     return out.reshape(B, H, D)

@@ -8,6 +8,21 @@ PagedBackend — vLLM-style paged KV pool with block tables, for attention
                path (pure-jnp page gather on CPU, Pallas kernel on TPU via
                ``use_kernel=True``).
 
+Both backends expose two decode paths:
+
+* ``decode_batch(tokens)`` — legacy host-driven step: one jitted model call,
+  the full ``(max_slots, V)`` logits come back to the host and the engine
+  samples there. Every step pays a device->host logits transfer plus a
+  second sampling dispatch.
+* ``fused_decode(K, host_state)`` — device-resident fast path: a single
+  jitted, donated call runs K decode steps under ``lax.fori_loop``, each
+  step fusing model forward + top-p sampling + stop/length checks on
+  device. Per-slot sampling state (temperature/top-p/seed base/limits) and,
+  for the paged backend, block tables and lengths stay resident across
+  calls; only ``(K, max_slots)`` token ids and tiny ``(max_slots,)``
+  produced/done vectors are synced to the host. Logits never leave the
+  device (asserted via ``TRANSFER_STATS``).
+
 Both backends speak the same prefill protocol to the engine:
 
   task = backend.start_prefill(seq_id, prompt)   # reserve slot/pages
@@ -36,12 +51,56 @@ from repro.models.layers import (chunked_attention, mlp_layer, project_qkv,
                                  rms_norm)
 from repro.models.moe import moe_ffn
 from repro.models.transformer import _block
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.kv_cache import OutOfPages, PagedKVCache
 from repro.kernels.paged_attention.ops import paged_attention as paged_attn_kernel
 from repro.kernels.paged_attention.ref import (paged_attention_ref,
                                                paged_prefill_attention_ref)
 
+from repro.serving.sampler import fold_seeds, sample_from_logits
+
 ATTENTION_FAMILIES = ("dense", "moe", "vlm")
+
+# -- host-transfer accounting -------------------------------------------------
+# The fused decode path's contract is that logits never cross to the host;
+# every logits device->host conversion in this module goes through
+# ``_logits_to_host`` so tests can assert the fused path performs none.
+# Sampled token ids / produced / done vectors are O(max_slots) ints and are
+# the *intended* sync payload — they are not counted.
+TRANSFER_STATS = {"decode_logits_transfers": 0, "decode_logits_bytes": 0}
+
+
+def reset_transfer_stats() -> None:
+    TRANSFER_STATS["decode_logits_transfers"] = 0
+    TRANSFER_STATS["decode_logits_bytes"] = 0
+
+
+def _logits_to_host(x) -> np.ndarray:
+    out = np.asarray(x)
+    TRANSFER_STATS["decode_logits_transfers"] += 1
+    TRANSFER_STATS["decode_logits_bytes"] += out.nbytes
+    return out
+
+
+def _upload_state(host_state: dict) -> dict:
+    # copy: jnp.asarray may alias numpy memory on CPU, and the fused call
+    # donates the state buffers
+    return {k: jnp.asarray(np.array(v)) for k, v in host_state.items()}
+
+
+def _sample_and_latch(st, logits, tokens, n_gen, done, produced, live):
+    """Device-side sample + stop/limit latch for one fused decode step —
+    the single definition both backends inline, so their token-identity
+    semantics cannot diverge. ``live`` slots take the sampled token and
+    advance; a live slot hitting its stop token or generation limit
+    latches ``done`` and freezes from the next step on."""
+    seeds = fold_seeds(st["seed_base"], n_gen)
+    sampled = sample_from_logits(logits, st["temps"], st["top_ps"], seeds)
+    tokens = jnp.where(live, sampled, tokens)
+    n_gen = n_gen + live.astype(jnp.int32)
+    hit_stop = (st["stop_tok"] >= 0) & (sampled == st["stop_tok"])
+    done = done | (live & (hit_stop | (n_gen >= st["gen_limit"])))
+    produced = produced + live.astype(jnp.int32)
+    return tokens, n_gen, done, produced
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -118,6 +177,8 @@ class SlotBackend:
         self._decode = jax.jit(
             lambda p, toks, cache: self.model.decode_step(p, toks, cache),
             donate_argnums=(2,))
+        self._fused = {}        # K -> jitted multi-step decode+sample fn
+        self._dec_st = None     # device-resident per-slot decode state
 
     # -- capacity -------------------------------------------------------------
     def can_admit(self, n_prompt: int) -> bool:
@@ -185,7 +246,7 @@ class SlotBackend:
         logits, slot_cache = self._prefill[bucket](
             self.params, jnp.asarray(toks), S)
         self.cache = self._insert(self.cache, slot_cache, slot)
-        return np.asarray(logits)[0]
+        return logits[0]            # device-resident (V,)
 
     def _chunk_impl(self, params, toks, cache, slot, start, true_len):
         """One prefill chunk straight into the stacked slot cache.
@@ -238,7 +299,7 @@ class SlotBackend:
         toks[0, :chunk] = task.prompt[task.pos:task.pos + chunk]
         logits, self.cache = self._chunk(
             self.params, jnp.asarray(toks), self.cache, slot, task.pos, chunk)
-        return np.asarray(logits)
+        return logits               # device-resident (V,)
 
     # -- decode -----------------------------------------------------------------
     def decode_batch(self, tokens_by_slot: np.ndarray):
@@ -246,7 +307,59 @@ class SlotBackend:
         logits, self.cache = self._decode(self.params,
                                           jnp.asarray(tokens_by_slot),
                                           self.cache)
-        return np.asarray(logits)
+        return _logits_to_host(logits)
+
+    # -- fused decode fast path --------------------------------------------------
+    @property
+    def supports_fused_decode(self) -> bool:
+        return True
+
+    def _fused_impl(self, params, cache, st, *, K):
+        """K fused decode+sample+stop-check steps, entirely on device.
+
+        st holds per-slot (max_slots,) vectors: tokens, n_gen, temps,
+        top_ps, seed_base, stop_tok, gen_limit, active. A slot stops
+        updating (``done``) once it hits its stop token or generation
+        limit; the cache still steps every slot — exactly what the legacy
+        path did for freed slots — so active slots are bit-identical.
+        Returns (tokens (K, B), produced (B,), done (B,), cache, st).
+        """
+        B = st["tokens"].shape[0]
+
+        def body(i, carry):
+            cache, tokens, n_gen, done, produced, out = carry
+            logits, cache = self.model.decode_step(params, tokens, cache)
+            live = st["active"] & ~done
+            tokens, n_gen, done, produced = _sample_and_latch(
+                st, logits, tokens, n_gen, done, produced, live)
+            out = out.at[i].set(tokens)
+            return cache, tokens, n_gen, done, produced, out
+
+        cache, tokens, n_gen, done, produced, out = lax.fori_loop(
+            0, K, body,
+            (cache, st["tokens"], st["n_gen"], jnp.zeros((B,), bool),
+             jnp.zeros((B,), jnp.int32), jnp.zeros((K, B), jnp.int32)))
+        st = dict(st, tokens=tokens, n_gen=n_gen)
+        return out, produced, done, cache, st
+
+    def fused_decode(self, K: int, host_state: dict | None = None):
+        """Run K decode steps on device; sync only token ids and flags.
+
+        host_state (when the engine's slot composition changed) re-seeds the
+        device-resident state; otherwise the state carried from the previous
+        call is reused. Returns (tokens (K, max_slots) np.int32,
+        produced (max_slots,) np.int32, done (max_slots,) bool).
+        """
+        if host_state is not None:
+            self._dec_st = _upload_state(host_state)
+        assert self._dec_st is not None, \
+            "fused_decode needs host_state on the first call"
+        if K not in self._fused:
+            self._fused[K] = jax.jit(partial(self._fused_impl, K=K),
+                                     donate_argnums=(1, 2))
+        out, produced, done, self.cache, self._dec_st = self._fused[K](
+            self.params, self.cache, self._dec_st)
+        return np.asarray(out), np.asarray(produced), np.asarray(done)
 
     def free(self, seq_id: str):
         slot = self.slot_of.pop(seq_id)
@@ -295,6 +408,10 @@ class PagedBackend:
         self._chunk = jax.jit(self._chunk_prefill_impl, donate_argnums=(2,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._cow = jax.jit(self._cow_impl, donate_argnums=(0,))
+        self._fused = {}            # K -> jitted multi-step decode+sample fn
+        self._dec_st = None         # device-resident per-slot decode state
+        self._dev_tables = None     # device-resident (tables, lens) pair
+        self._dev_tables_key = None  # kv.table_version the pair was built at
 
     # -- capacity -------------------------------------------------------------
     def can_admit(self, n_prompt: int) -> bool:
@@ -309,7 +426,8 @@ class PagedBackend:
     # -- jitted bodies ----------------------------------------------------------
     def _attend(self, q, kp, vp, tables, lens):
         if self.use_kernel:
-            return paged_attn_kernel(q, kp, vp, tables, lens, interpret=True)
+            # interpret=None: compiled Pallas on TPU, interpreter elsewhere
+            return paged_attn_kernel(q, kp, vp, tables, lens, interpret=None)
         return paged_attention_ref(q, kp, vp, tables, lens)
 
     def _cow_impl(self, pools, src, dst):
@@ -382,17 +500,18 @@ class PagedBackend:
         logits = model.logits(params, h[:, idx])
         return logits[0], {"k": nk, "v": nv}
 
-    def _decode_impl(self, params, pools, tokens, tables, lens):
-        """tokens: (B,); tables: (B, PPS); lens: (B,) current lengths.
-        The page for position ``lens`` must already exist (ensure_slot)."""
+    def _decode_forward(self, params, pools, tokens, tables, lens,
+                        page_idx, off):
+        """One decode-step transformer forward against the page pool:
+        write each slot's new KV at (page_idx, off), attend over
+        [0, lens+1). Shared by the legacy step and the fused loop (which
+        routes dead slots' writes to the trash page via page_idx/off).
+        Returns (logits (B, V), pools)."""
         cfg = self.cfg
         model = self.model
         B = tokens.shape[0]
         x = jnp.take(params["embed"], tokens[:, None], axis=0)
         positions = lens[:, None]
-        page_slot = lens // self.page_size                     # (B,)
-        page_idx = jnp.take_along_axis(tables, page_slot[:, None], 1)[:, 0]
-        off = lens % self.page_size
 
         def body(h, xs):
             lp, kp, vp = xs
@@ -414,6 +533,15 @@ class PagedBackend:
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         logits = model.logits(params, h[:, 0])
         return logits, {"k": nk, "v": nv}
+
+    def _decode_impl(self, params, pools, tokens, tables, lens):
+        """tokens: (B,); tables: (B, PPS); lens: (B,) current lengths.
+        The page for position ``lens`` must already exist (ensure_slot)."""
+        page_slot = lens // self.page_size                     # (B,)
+        page_idx = jnp.take_along_axis(tables, page_slot[:, None], 1)[:, 0]
+        off = lens % self.page_size
+        return self._decode_forward(params, pools, tokens, tables, lens,
+                                    page_idx, off)
 
     # -- prefill protocol --------------------------------------------------------
     def start_prefill(self, seq_id: str, prompt: list) -> PrefillTask:
@@ -470,7 +598,7 @@ class PagedBackend:
         logits, self.pools = self._prefill[bucket](
             self.params, jnp.asarray(toks), self.pools,
             jnp.asarray(np.array(write_table, np.int32)), S)
-        return np.asarray(logits)
+        return logits               # device-resident (V,)
 
     def _compute_chunk(self, task: PrefillTask, chunk: int):
         ps = self.page_size
@@ -501,7 +629,7 @@ class PagedBackend:
             self.params, jnp.asarray(toks), self.pools,
             jnp.asarray(ctx_table), jnp.asarray(write_pages),
             jnp.asarray(write_offs), pos, chunk)
-        return np.asarray(logits)
+        return logits               # device-resident (V,)
 
     # -- decode -----------------------------------------------------------------
     def decode_batch(self, tokens_by_slot: np.ndarray):
@@ -525,7 +653,109 @@ class PagedBackend:
             jnp.asarray(tables), jnp.asarray(lens))
         for sid in self.decoding:
             self.kv.advance(sid)
-        return np.asarray(logits)
+        return _logits_to_host(logits)
+
+    # -- fused decode fast path --------------------------------------------------
+    @property
+    def supports_fused_decode(self) -> bool:
+        return True
+
+    def _fused_impl(self, params, pools, st, tables, lens, *, K):
+        """K fused decode+sample+stop-check steps against the page pool.
+
+        Per step: write the fed token's KV at position ``lens`` (dead slots
+        route to trash page 0), attend over the block tables, sample on
+        device, advance lens/n_gen only for live slots, latch ``done`` on
+        stop-token or generation-limit hits. The host pre-allocates pages
+        and resolves copy-on-write for all K positions before the call, so
+        the block tables are loop-invariant. Returns
+        (tokens (K, B), produced (B,), done (B,), pools, st, lens).
+        """
+        ps = self.page_size
+        B = st["tokens"].shape[0]
+
+        def step(i, carry):
+            pools, tokens, n_gen, lens, done, produced, out = carry
+            live = st["active"] & ~done
+            page_slot = lens // ps
+            page_idx = jnp.take_along_axis(tables, page_slot[:, None], 1)[:, 0]
+            page_idx = jnp.where(live, page_idx, 0)      # dead slots -> trash
+            off = jnp.where(live, lens % ps, 0)
+            logits, pools = self._decode_forward(params, pools, tokens,
+                                                 tables, lens, page_idx, off)
+            lens = lens + live.astype(jnp.int32)
+            tokens, n_gen, done, produced = _sample_and_latch(
+                st, logits, tokens, n_gen, done, produced, live)
+            out = out.at[i].set(tokens)
+            return pools, tokens, n_gen, lens, done, produced, out
+
+        pools, tokens, n_gen, lens, done, produced, out = lax.fori_loop(
+            0, K, step,
+            (pools, st["tokens"], st["n_gen"], lens, jnp.zeros((B,), bool),
+             jnp.zeros((B,), jnp.int32), jnp.zeros((K, B), jnp.int32)))
+        st = dict(st, tokens=tokens, n_gen=n_gen)
+        return out, produced, done, pools, st, lens
+
+    def fused_decode(self, K: int, host_state: dict | None = None):
+        """Run up to K decode steps on device; sync only token ids and flags.
+
+        Host-side prep per call: allocate page headroom for K tokens per
+        decoding sequence (clamping K down if the pool is tight) and resolve
+        copy-on-write for every page the loop will write. Block tables and
+        lengths are uploaded only when the allocator state changed
+        (``kv.table_version``) or the engine re-seeds the slot state;
+        otherwise the device-resident copies carry over. Returns
+        (tokens (K_eff, max_slots), produced, done) as numpy arrays.
+        """
+        ps = self.page_size
+        K_eff = max(1, K)
+        # guarantee every live sequence ONE token of headroom first (the
+        # legacy ensure_slot contract: raise loudly rather than routing a
+        # live KV write to the trash page) — only then extend best-effort
+        # toward K, so one sequence's K-token headroom can never starve a
+        # later sequence out of its single page
+        for sid in self.decoding:
+            if self.kv.ensure_capacity(sid, 1) <= 0:
+                raise OutOfPages(f"{sid}: pool exhausted on decode append")
+        for sid in self.decoding:
+            ahead = max(1, min(K_eff, self.max_len - self.kv.length(sid)))
+            K_eff = min(K_eff, max(1, self.kv.ensure_capacity(sid, ahead)))
+        for sid in self.decoding:
+            pos0 = self.kv.length(sid)
+            for pi in range(pos0 // ps, (pos0 + K_eff - 1) // ps + 1):
+                cow = self.kv.writable_page(sid, pi * ps)
+                if cow is not None:
+                    self.pools = self._cow(self.pools, *cow)
+        if (host_state is not None or self._dev_tables is None
+                or self._dev_tables_key != self.kv.table_version):
+            tables = np.zeros((self.max_slots, self.pages_per_seq), np.int32)
+            lens = np.zeros((self.max_slots,), np.int32)
+            for slot, sid in self.seq_of.items():
+                if sid in self.decoding:
+                    tables[slot] = self.kv.table_array(
+                        [sid], self.pages_per_seq)[0]
+                    lens[slot] = self.kv.length(sid)
+            self._dev_tables = (jnp.asarray(tables), jnp.asarray(lens))
+            self._dev_tables_key = self.kv.table_version
+        if host_state is not None:
+            self._dec_st = _upload_state(host_state)
+        assert self._dec_st is not None, \
+            "fused_decode needs host_state on the first call"
+        if K_eff not in self._fused:
+            # tables (arg 3) are NOT donated: the device copy is reused
+            # across calls until the allocator bumps table_version
+            self._fused[K_eff] = jax.jit(partial(self._fused_impl, K=K_eff),
+                                         donate_argnums=(1, 2, 4))
+        tables_d, lens_d = self._dev_tables
+        out, produced, done, self.pools, self._dec_st, lens_d = \
+            self._fused[K_eff](self.params, self.pools, self._dec_st,
+                               tables_d, lens_d)
+        self._dev_tables = (tables_d, lens_d)
+        produced_np = np.asarray(produced)
+        for slot, sid in self.seq_of.items():
+            if sid in self.decoding:
+                self.kv.advance_n(sid, int(produced_np[slot]))
+        return np.asarray(out), produced_np, np.asarray(done)
 
     def free(self, seq_id: str):
         slot = self.slot_of.pop(seq_id)

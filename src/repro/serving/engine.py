@@ -1,11 +1,11 @@
 """Continuous-batching inference engine (the vLLM-analogue, real JAX).
 
 One ``step()`` = admit waiting requests into free capacity (prefilling each),
-then run ONE batched decode step across all running sequences. This is
-vLLM-style iteration-level scheduling: new requests join the running batch
-between token steps, finished ones free their slots/pages immediately.
+then run batched decode across all running sequences. This is vLLM-style
+iteration-level scheduling: new requests join the running batch between
+token steps, finished ones free their slots/pages immediately.
 
-Two throughput/latency features layer on top of the base loop:
+Throughput/latency features layered on the base loop:
 
 * **Prefix caching** (``enable_prefix_cache``, paged backend): prompts whose
   leading pages content-match already-computed pages skip recomputing them —
@@ -16,6 +16,17 @@ Two throughput/latency features layer on top of the base loop:
   prefills, then still runs the decode batch — bounding time-between-tokens
   while long prompts admit. A sequence samples its first token (and joins
   the decode batch) only once its final chunk completes.
+* **Fused decode fast path** (``fused_decode``, default on): decode forward,
+  sampling, and stop/length checks run in ONE jitted donated device call;
+  the ``(max_slots, V)`` logits never come back to the host. Per-slot
+  sampling state lives in slot-indexed arrays updated only when the batch
+  composition changes (admit/free), not rebuilt per step.
+* **Multi-step decode** (``decode_steps_per_sync`` = K > 1): the fused call
+  loops K decode steps on device (``lax.fori_loop``) and the host syncs
+  once per K tokens — amortizing dispatch + transfer latency. The engine
+  falls back to K=1 automatically whenever a prefill is in flight or the
+  batch composition just changed, so chunked prefill and prefix caching
+  compose unchanged; outputs are token-identical to the per-step path.
 """
 from __future__ import annotations
 
@@ -29,7 +40,8 @@ from repro.models import LM
 from repro.serving.backends import PagedBackend, PrefillTask, SlotBackend
 from repro.serving.request import (InferenceRequest, RequestMetrics,
                                    RequestOutput)
-from repro.serving.sampler import sample_tokens
+from repro.serving.sampler import (SEED_MOD, sample_token, sample_tokens,
+                                   seed_base)
 
 
 class _RealClock:
@@ -51,6 +63,13 @@ class EngineConfig:
     chunked_prefill_budget: int = 0
     # content-addressed KV page reuse across sequences (paged backend only)
     enable_prefix_cache: bool = False
+    # device-resident decode: fuse decode+sample+stop checks into one jitted
+    # call (logits never transferred to host); False = legacy per-step path
+    fused_decode: bool = True
+    # decode steps per host sync in the fused path (K): the device loops K
+    # fused steps and the host unpacks K tokens per slot. Auto-falls back to
+    # 1 while prefills are in flight or the batch composition changed.
+    decode_steps_per_sync: int = 1
 
 
 @dataclass
@@ -62,6 +81,39 @@ class _Running:
     @property
     def last_token(self) -> int:
         return self.output_tokens[-1]
+
+
+class _SlotStates:
+    """Slot-indexed decode state, host mirror of the device-resident copy.
+
+    Rebuilt from scratch never — entries are written on admit (activate)
+    and cleared on free, so the per-step hot loop does no host array
+    construction. ``dirty`` means the batch composition changed since the
+    device copy was seeded: the next fused call re-uploads, and the engine
+    syncs every token (K=1) for that step.
+    """
+
+    def __init__(self, n: int):
+        self.tokens = np.zeros((n,), np.int32)      # last sampled token
+        self.n_gen = np.zeros((n,), np.int32)       # tokens generated so far
+        self.temps = np.zeros((n,), np.float32)
+        self.top_ps = np.ones((n,), np.float32)
+        self.seed_base = np.zeros((n,), np.uint32)
+        self.stop_tok = np.full((n,), -1, np.int32)  # -1 = no stop token
+        self.gen_limit = np.full((n,), np.iinfo(np.int32).max, np.int32)
+        self.active = np.zeros((n,), bool)
+        self.dirty = True
+
+    def host_state(self) -> dict:
+        return {"tokens": self.tokens, "n_gen": self.n_gen,
+                "temps": self.temps, "top_ps": self.top_ps,
+                "seed_base": self.seed_base, "stop_tok": self.stop_tok,
+                "gen_limit": self.gen_limit, "active": self.active}
+
+    def step_seeds(self) -> np.ndarray:
+        """PRNG seeds for the next decode step (legacy host path)."""
+        s = (self.seed_base + self.n_gen.astype(np.uint32)) % SEED_MOD
+        return s.astype(np.int32)
 
 
 class ContinuousBatchingEngine:
@@ -88,9 +140,10 @@ class ContinuousBatchingEngine:
         self.prefilling: "OrderedDict[str, tuple[_Running, PrefillTask]]" = \
             OrderedDict()
         self.running: dict[str, _Running] = {}
+        self.slots = _SlotStates(self.cfg.max_slots)
         self.stats = {"prefill_tokens": 0, "cached_prompt_tokens": 0,
                       "prefill_chunks": 0, "decode_tokens": 0, "steps": 0,
-                      "finished": 0, "aborted": 0}
+                      "decode_syncs": 0, "finished": 0, "aborted": 0}
 
     # -- queue management -------------------------------------------------------
     def add_request(self, req: InferenceRequest):
@@ -106,12 +159,12 @@ class ContinuousBatchingEngine:
                 self.stats["aborted"] += 1
                 return True
         if request_id in self.prefilling:
-            self.backend.free(request_id)
+            self._release_slot(request_id)
             del self.prefilling[request_id]
             self.stats["aborted"] += 1
             return True
         if request_id in self.running:
-            self.backend.free(request_id)
+            self._release_slot(request_id)
             del self.running[request_id]
             self.stats["aborted"] += 1
             return True
@@ -148,33 +201,67 @@ class ContinuousBatchingEngine:
         else:
             self._prefill_one_shot(finished)
 
-        # 2) one batched decode step over all running sequences
+        # 2) batched decode over all running sequences
         if self.running:
-            max_slots = self.cfg.max_slots
-            tokens = np.zeros((max_slots,), np.int32)
-            by_slot: dict[int, _Running] = {}
-            for rid, run in self.running.items():
-                s = self.backend.slot(rid)
-                tokens[s] = run.last_token
-                by_slot[s] = run
-            logits = self.backend.decode_batch(tokens)
-            temps = np.zeros((max_slots,), np.float32)
-            top_ps = np.ones((max_slots,), np.float32)
-            seeds = np.zeros((max_slots,), np.int32)
-            for s, run in by_slot.items():
-                sp = run.req.sampling
-                temps[s] = sp.temperature
-                top_ps[s] = sp.top_p
-                seeds[s] = (sp.seed * 1_000_003
-                            + len(run.output_tokens)) % (2 ** 31 - 1)
-            toks = np.asarray(sample_tokens(logits, temps, top_ps, seeds))
-            for s, run in by_slot.items():
-                run.output_tokens.append(int(toks[s]))
-                self.stats["decode_tokens"] += 1
-                f = self._maybe_finish(run)
-                if f:
-                    finished.append(f)
+            by_slot = {self.backend.slot(rid): run
+                       for rid, run in self.running.items()}
+            if (self.cfg.fused_decode
+                    and getattr(self.backend, "supports_fused_decode", False)):
+                self._decode_fused(by_slot, finished)
+            else:
+                self._decode_legacy(by_slot, finished)
         return finished
+
+    def _decode_legacy(self, by_slot: dict, finished: list):
+        """Per-token host-driven decode: logits come back to the host, a
+        second jitted call samples them there."""
+        st = self.slots
+        logits = self.backend.decode_batch(st.tokens)
+        toks = np.asarray(sample_tokens(logits, st.temps, st.top_ps,
+                                        st.step_seeds()))
+        self.stats["decode_syncs"] += 1
+        for s, run in by_slot.items():
+            tok = int(toks[s])
+            run.output_tokens.append(tok)
+            st.tokens[s] = tok
+            st.n_gen[s] += 1
+            self.stats["decode_tokens"] += 1
+            f = self._maybe_finish(run)
+            if f:
+                finished.append(f)
+
+    def _decode_fused(self, by_slot: dict, finished: list):
+        """Device-resident decode: one fused jitted call runs K decode +
+        sample + stop-check steps; the host syncs only (K, max_slots) token
+        ids plus produced/done vectors."""
+        st = self.slots
+        K = max(1, self.cfg.decode_steps_per_sync)
+        if self.prefilling or st.dirty:
+            # prefill in flight or batch composition changed: sync every
+            # token so chunked prefill interleaves unchanged. A backlog in
+            # ``waiting`` alone does NOT clamp K — queued requests can only
+            # admit once a slot frees, which happens at a sync boundary
+            # either way, so a saturated engine keeps the multi-step win.
+            K = 1
+        toks, produced, done = self.backend.fused_decode(
+            K, st.host_state() if st.dirty else None)
+        st.dirty = False
+        self.stats["decode_syncs"] += 1
+        for s, run in by_slot.items():
+            p = int(produced[s])
+            for j in range(p):
+                run.output_tokens.append(int(toks[j, s]))
+            st.tokens[s] = run.last_token
+            st.n_gen[s] += p
+            self.stats["decode_tokens"] += p
+            f = self._maybe_finish(run)
+            if (f is not None) != bool(done[s]):
+                raise RuntimeError(
+                    f"fused decode divergence for {run.req.request_id}: "
+                    f"device done={bool(done[s])}, host finish="
+                    f"{f.finish_reason if f else None}")
+            if f:
+                finished.append(f)
 
     def run_to_completion(self) -> list[RequestOutput]:
         outs = []
@@ -243,16 +330,46 @@ class ContinuousBatchingEngine:
         f = self._maybe_finish(run)
         if f:
             finished.append(f)
+        else:
+            self._activate_slot(run)
+
+    # -- slot state ---------------------------------------------------------------
+    def _activate_slot(self, run: _Running):
+        """Seed the slot-indexed decode state when a sequence joins the
+        decode batch (its prefill completed). This is the ONLY place
+        sampling params are materialized — the decode loop never rebuilds
+        per-step host arrays."""
+        s = self.backend.slot(run.req.request_id)
+        sp = run.req.sampling
+        st = self.slots
+        st.tokens[s] = run.last_token
+        st.n_gen[s] = len(run.output_tokens)
+        st.temps[s] = sp.temperature
+        st.top_ps[s] = sp.top_p
+        st.seed_base[s] = seed_base(sp.seed)
+        st.stop_tok[s] = -1 if sp.stop_token is None else sp.stop_token
+        # one bound covers both finish conditions the device can hit:
+        # n_gen >= max_tokens ("length") and prompt+n_gen >= max_seq_len
+        st.gen_limit[s] = min(sp.max_tokens,
+                              self.cfg.max_seq_len
+                              - len(run.req.prompt_tokens))
+        st.active[s] = True
+        st.dirty = True
+
+    def _release_slot(self, request_id: str):
+        s = self.backend.slot(request_id)
+        self.slots.active[s] = False
+        self.slots.dirty = True
+        self.backend.free(request_id)
 
     # -- helpers ------------------------------------------------------------------
     def _sample_one(self, req, logits, step) -> int:
+        """First-token sampling from device-resident prefill logits: only
+        the sampled id crosses to the host, via the same sampler the fused
+        decode path inlines."""
         sp = req.sampling
-        seed = (sp.seed * 1_000_003 + step) % (2 ** 31 - 1)
-        tok = sample_tokens(logits[None].astype(np.float32),
-                            np.array([sp.temperature], np.float32),
-                            np.array([sp.top_p], np.float32),
-                            np.array([seed], np.int32))
-        return int(np.asarray(tok)[0])
+        seed = (seed_base(sp.seed) + step) % SEED_MOD
+        return int(sample_token(logits, sp.temperature, sp.top_p, seed))
 
     def _maybe_finish(self, run: _Running):
         sp = run.req.sampling
@@ -267,7 +384,7 @@ class ContinuousBatchingEngine:
         if not reason:
             return None
         run.metrics.finish_time = self.clock.now()
-        self.backend.free(run.req.request_id)
+        self._release_slot(run.req.request_id)
         del self.running[run.req.request_id]
         self.stats["finished"] += 1
         return RequestOutput(request_id=run.req.request_id,

@@ -58,6 +58,9 @@ class PagedKVCache:
         self._lru: OrderedDict[int, None] = OrderedDict()  # freed cached pages
         self.stats = {"hit_tokens": 0, "miss_tokens": 0, "hit_pages": 0,
                       "evictions": 0, "cow_copies": 0, "resurrections": 0}
+        # bumped on every block-table mutation (allocate/append/COW/free);
+        # the fused decode path caches device-side tables keyed on this
+        self.table_version = 0
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -123,6 +126,7 @@ class PagedKVCache:
         pages = [self._take_page() for _ in range(need)]
         self._tables[seq_id] = pages
         self._lens[seq_id] = n_tokens
+        self.table_version += 1
         return pages
 
     def allocate_with_prefix(self, seq_id: str,
@@ -165,6 +169,7 @@ class PagedKVCache:
         fresh = [self._take_page() for _ in range(n_fresh)]
         self._tables[seq_id] = matched + fresh
         self._lens[seq_id] = len(tokens)
+        self.table_version += 1
         self.stats["hit_tokens"] += n_cached
         self.stats["miss_tokens"] += len(tokens) - n_cached
         self.stats["hit_pages"] += len(matched)
@@ -200,6 +205,7 @@ class PagedKVCache:
             return None
         dst = self._take_page()
         table[idx] = dst
+        self.table_version += 1
         self._ref[src] -= 1                            # still >0: others own it
         self.stats["cow_copies"] += 1
         return src, dst
@@ -212,9 +218,28 @@ class PagedKVCache:
             if not self.free_pages:
                 raise OutOfPages(f"{seq_id}: pool exhausted on append")
             self._tables[seq_id].append(self._take_page())
+            self.table_version += 1
 
     def advance(self, seq_id: str) -> None:
         self._lens[seq_id] += 1
+
+    def advance_n(self, seq_id: str, n: int) -> None:
+        """Advance a sequence's length by ``n`` tokens (multi-step decode
+        sync: the device loop already wrote their KV)."""
+        self._lens[seq_id] += n
+
+    def ensure_capacity(self, seq_id: str, ahead: int) -> int:
+        """Append pages until the block table covers ``ahead`` tokens past
+        the current length (best effort: stops early when the pool runs
+        dry rather than raising). Returns how many tokens of write headroom
+        the table actually covers — the multi-step decode loop clamps its
+        step count to the minimum across sequences."""
+        cur = self._lens[seq_id]
+        table = self._tables[seq_id]
+        while len(table) * self.page_size < cur + ahead and self.free_pages:
+            table.append(self._take_page())
+            self.table_version += 1
+        return min(ahead, len(table) * self.page_size - cur)
 
     def append_token(self, seq_id: str) -> None:
         """ensure_slot + advance (single-sequence convenience)."""
@@ -225,6 +250,7 @@ class PagedKVCache:
         for p in reversed(self._tables.pop(seq_id, [])):
             self._release_page(p)
         self._lens.pop(seq_id, None)
+        self.table_version += 1
 
     def length(self, seq_id: str) -> int:
         return self._lens[seq_id]

@@ -1,30 +1,79 @@
-"""Token sampling: greedy / temperature / top-p (nucleus)."""
+"""Token sampling: greedy / temperature / top-p (nucleus).
+
+Three entry points share one implementation:
+
+* :func:`sample_tokens` — jitted batch sampler (the legacy host-driven
+  decode path and tests).
+* :func:`sample_token` — jitted single-logits sampler for prefill's first
+  token; the logits stay on device, only the sampled id crosses to host.
+* :func:`sample_from_logits` / :func:`fold_seeds` — pure bodies for
+  inlining inside larger jitted programs (the fused decode step), where
+  sampling must happen on device without a separate dispatch.
+
+Seed folding: the engine derives a per-request ``seed_base =
+(seed * 1_000_003) % SEED_MOD`` once at admission; each step's PRNG seed is
+``(seed_base + n_generated) % SEED_MOD``. :func:`fold_seeds` reproduces that
+arithmetic in uint32 on device, so host- and device-driven sampling are
+bit-identical for the same request state.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+SEED_MOD = 2 ** 31 - 1
+SEED_MULT = 1_000_003
+
+
+def seed_base(seed: int) -> int:
+    """Host-side per-request seed base (fits in uint32/int32)."""
+    return (seed * SEED_MULT) % SEED_MOD
+
+
+def fold_seeds(base, n_gen):
+    """base: (B,) uint32 seed bases; n_gen: (B,) int32 tokens generated so
+    far. Returns (B,) int32 PRNG seeds, identical to the host fold
+    ``(seed * SEED_MULT + n_gen) % SEED_MOD``."""
+    s = (base.astype(jnp.uint32) + n_gen.astype(jnp.uint32)) % jnp.uint32(
+        SEED_MOD)
+    return s.astype(jnp.int32)
+
+
+def _sample_one(lg, temp, tp, seed):
+    """lg: (V,) f32; temp/tp: f32 scalars; seed: int32 scalar -> int32."""
+    greedy = jnp.argmax(lg).astype(jnp.int32)
+
+    def sampled():
+        scaled = lg / jnp.maximum(temp, 1e-6)
+        sort_idx = jnp.argsort(-scaled)
+        sorted_logits = scaled[sort_idx]
+        probs = jax.nn.softmax(sorted_logits)
+        cum = jnp.cumsum(probs)
+        keep = cum - probs < tp               # first token always kept
+        masked = jnp.where(keep, sorted_logits, -jnp.inf)
+        choice = jax.random.categorical(jax.random.PRNGKey(seed), masked)
+        return sort_idx[choice].astype(jnp.int32)
+
+    return jax.lax.cond(temp <= 0.0, lambda: greedy, sampled)
+
+
+def sample_from_logits(logits, temperature, top_p, seeds):
+    """Pure (jit-inlinable) batch sampler. logits: (B, V) f32; temperature,
+    top_p: (B,) f32; seeds: (B,) int32. temperature == 0 -> greedy.
+    Returns (B,) int32."""
+    return jax.vmap(_sample_one)(logits, temperature, top_p, seeds)
+
 
 @jax.jit
 def sample_tokens(logits, temperature, top_p, seeds):
-    """logits: (B, V) f32; temperature, top_p: (B,) f32; seeds: (B,) int32
-    (per-request seed folded with the step counter by the caller).
-    temperature == 0 -> greedy. Returns (B,) int32."""
+    """Jitted batch sampler (see :func:`sample_from_logits`)."""
+    return sample_from_logits(logits, temperature, top_p, seeds)
 
-    def one(lg, temp, tp, seed):
-        greedy = jnp.argmax(lg).astype(jnp.int32)
 
-        def sampled():
-            scaled = lg / jnp.maximum(temp, 1e-6)
-            sort_idx = jnp.argsort(-scaled)
-            sorted_logits = scaled[sort_idx]
-            probs = jax.nn.softmax(sorted_logits)
-            cum = jnp.cumsum(probs)
-            keep = cum - probs < tp               # first token always kept
-            masked = jnp.where(keep, sorted_logits, -jnp.inf)
-            choice = jax.random.categorical(jax.random.PRNGKey(seed), masked)
-            return sort_idx[choice].astype(jnp.int32)
-
-        return jax.lax.cond(temp <= 0.0, lambda: greedy, sampled)
-
-    return jax.vmap(one)(logits, temperature, top_p, seeds)
+@jax.jit
+def sample_token(logits, temperature, top_p, seed):
+    """One sequence's first token from device-resident logits (V,).
+    Scalars are weak-typed, so repeated calls don't retrace."""
+    return _sample_one(logits.astype(jnp.float32),
+                       jnp.float32(temperature), jnp.float32(top_p),
+                       jnp.int32(seed))

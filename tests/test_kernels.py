@@ -73,7 +73,10 @@ PAGED_CASES = [
     (4, 8, 2, 64, 128, 4, 32),
     (2, 4, 4, 128, 128, 8, 64),
     (3, 8, 1, 64, 256, 2, 16),        # MQA
-    (2, 56, 8, 128, 128, 4, 16),      # yi head config
+    (2, 56, 8, 128, 128, 4, 16),      # yi head config (G=7, sublane-padded)
+    (2, 12, 4, 64, 128, 4, 16),       # GQA G=3 (pads to the sublane tile)
+    (1, 32, 2, 64, 128, 2, 8),        # GQA G=16 (exceeds one f32 sublane)
+    (2, 40, 8, 32, 128, 3, 16),       # GQA G=5, small head dim
 ]
 
 
@@ -91,6 +94,31 @@ def test_paged_attention(case, dtype):
     ref = paged_attention_ref(q, kp, vp, tables, lens)
     assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
                     **tol(dtype))
+
+
+def test_paged_attention_gqa_group_padding_is_invisible():
+    """The GQA wrapper pads the query-group axis to the sublane tile; the
+    padded rows must not leak: each KV head's G query heads must produce
+    exactly what an unpadded per-head gather computes."""
+    B, H, KH, D, page, PPS, NP = 2, 6, 2, 64, 128, 3, 8   # G=3 -> pads to 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NP, page, KH, D))
+    vp = jax.random.normal(ks[2], (NP, page, KH, D))
+    tables = jax.random.randint(ks[3], (B, PPS), 0, NP)
+    lens = jax.random.randint(ks[4], (B,), 1, PPS * page + 1)
+    out = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, tables, lens)
+    assert out.shape == (B, H, D)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_rejects_ragged_grouping():
+    with pytest.raises(AssertionError, match="multiple of kv heads"):
+        paged_attention(jnp.zeros((1, 6, 64)), jnp.zeros((4, 128, 4, 64)),
+                        jnp.zeros((4, 128, 4, 64)),
+                        jnp.zeros((1, 2), jnp.int32),
+                        jnp.ones((1,), jnp.int32), interpret=True)
 
 
 def test_paged_attention_page_permutation_invariance():
