@@ -8,6 +8,7 @@
   engine_step   (real)  CPU wall-clock of the JAX engine, reduced configs
   prefix_cache  (real)  KV prefix reuse + chunked-prefill ITL, JSON output
   decode_loop   (real)  fused decode fast path vs legacy, JSON output
+  spec_decode   (real)  draft-and-verify speculative decoding, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
@@ -23,7 +24,7 @@ import traceback
 
 from benchmarks import (autoscale, batch_mode, concurrency, decode_loop,
                         engine_step, external_api, prefix_cache, rate_sweep,
-                        roofline)
+                        roofline, spec_decode)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -34,12 +35,13 @@ SUITES = {
     "engine_step": engine_step.main,
     "prefix_cache": prefix_cache.main,
     "decode_loop": decode_loop.main,
+    "spec_decode": spec_decode.main,
     "roofline": roofline.main,
 }
 
 # real-engine suites with self-enforced acceptance thresholds: these are
 # the ones a perf-path regression breaks, so CI runs exactly these
-SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop"]
+SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode"]
 
 
 def main() -> None:
@@ -63,7 +65,7 @@ def main() -> None:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         t0 = time.time()
         kw = {"fast": args.fast or args.smoke}
-        if args.smoke and name == "decode_loop":
+        if args.smoke and name in ("decode_loop", "spec_decode"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

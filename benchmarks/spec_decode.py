@@ -1,0 +1,183 @@
+"""Speculative-decoding benchmark (real engine, CPU, reduced config).
+
+Steady-state decode throughput for the PR 2 fused multi-step baseline
+(``decode_steps_per_sync=16``, target model only) vs draft-and-verify
+speculative decoding at ``spec_tokens`` (k) in {4, 8}: per round the 1-layer
+draft's fused loop proposes k tokens and ONE target forward verifies all
+k+1 positions, so in the accept-heavy regime the target's weights are read
+once per ~k+1 emitted tokens instead of once per token.
+
+CI cannot train a distilled draft, so the benchmark constructs the
+draft/target pair the way distillation leaves them: the draft IS the
+target's first layer (plus shared embeddings/head), and the target stacks
+additional layers whose residual contributions are scaled to ~0 — the
+target is genuinely ``TARGET_LAYERS``x the draft's per-step compute, while
+its argmax agrees with the draft's almost always. The measured acceptance
+rate is reported in the JSON artifact and gated at >= 0.7; greedy outputs
+are asserted token-identical to the non-speculative baseline — speculation
+must be an optimization, not a different sampler.
+
+Writes ``results/benchmarks/spec_decode.json``.
+``python -m benchmarks.run --only spec_decode`` or run this module
+directly; ``--smoke`` (via ``benchmarks.run``) shrinks the workload and
+relaxes the speedup gate for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from benchmarks.common import csv_line, print_table
+# workload shape (ARCH/PROMPT_LEN/SLOTS/PAGE) is decode_loop's: the
+# imported request builder and timed pass close over those constants
+from benchmarks.decode_loop import (ARCH, PAGE, PROMPT_LEN, SLOTS,
+                                    _requests, _timed_pass)
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.serving import backends
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+
+TARGET_LAYERS = 5          # draft is 1 layer: 5x per-step compute asymmetry
+RESIDUAL_EPS = 1e-3        # extra-layer output scale ("distilled" agreement)
+# wider than the test-suite reduced config: speculation trades draft steps
+# for target-layer compute, so layer compute must dominate the fixed per-op
+# dispatch floor for the trade to be visible on CPU (as it is on real HW)
+DIMS = dict(d_model=256, d_ff=1024, num_heads=8, num_kv_heads=4,
+            head_dim=32, vocab_size=1024)
+BASELINE_K = 16            # the PR 2 fused multi-step baseline
+OUT_PATH = os.path.join("results", "benchmarks", "spec_decode.json")
+
+
+def build_pair():
+    """(draft cfg/model/params, target cfg/model/params) with the target =
+    draft + near-zero residual layers (see module docstring)."""
+    draft_cfg = dataclasses.replace(reduced(REGISTRY[ARCH]), num_layers=1,
+                                    **DIMS)
+    target_cfg = dataclasses.replace(draft_cfg, num_layers=TARGET_LAYERS)
+    draft_model = make_model(draft_cfg)
+    target_model = make_model(target_cfg)
+    dp = draft_model.init_params(jax.random.PRNGKey(0))
+    tp = target_model.init_params(jax.random.PRNGKey(1))
+    tp["embed"] = dp["embed"]
+    tp["final_norm"] = dp["final_norm"]
+    if "lm_head" in dp:
+        tp["lm_head"] = dp["lm_head"]
+
+    def graft(path, t, d):
+        t = t.at[0].set(d[0])                  # layer 0 == the draft
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("wo", "w2"):               # extra layers: ~zero residual
+            t = t.at[1:].multiply(jnp.asarray(RESIDUAL_EPS, t.dtype))
+        return t
+
+    tp["layers"] = jtu.tree_map_with_path(graft, tp["layers"], dp["layers"])
+    return (draft_cfg, draft_model, dp), (target_cfg, target_model, tp)
+
+
+def _mk_engine(target, draft, gen, *, spec_k):
+    _, tm, tp = target
+    _, dm, dp = draft
+    cfg = EngineConfig(
+        max_slots=SLOTS, max_seq_len=PROMPT_LEN + gen + 2 * PAGE,
+        backend="paged", page_size=PAGE,
+        decode_steps_per_sync=1 if spec_k else BASELINE_K,
+        spec_tokens=spec_k)
+    if spec_k:
+        return ContinuousBatchingEngine(tm, tp, cfg, draft_model=dm,
+                                        draft_params=dp)
+    return ContinuousBatchingEngine(tm, tp, cfg)
+
+
+def bench(target, draft, *, gen, ks):
+    vocab = target[0].vocab_size
+    reqs = _requests(vocab, SLOTS, gen, seed=2)
+    modes = [(f"fused K={BASELINE_K}", 0)] + [(f"spec k={k}", k) for k in ks]
+    results, rows = [], []
+    for name, spec_k in modes:
+        eng = _mk_engine(target, draft, gen, spec_k=spec_k)
+        # warmup pass compiles every jit bucket this mode will hit
+        _timed_pass(eng, _requests(vocab, SLOTS, gen, seed=1))
+        accept0 = dict(eng.stats)
+        backends.reset_transfer_stats()
+        r = _timed_pass(eng, reqs)
+        transfers = backends.TRANSFER_STATS["decode_logits_transfers"]
+        # best of three passes: contention on a shared host can sit on one
+        # mode's whole pass; pass-1 outputs are kept for the identity check
+        for _ in range(2):
+            r2 = _timed_pass(eng, reqs)
+            if r2["steady_tok_per_s"] > r["steady_tok_per_s"]:
+                r2["outputs"] = r["outputs"]
+                r = r2
+        proposed = eng.stats["spec_proposed"] - accept0["spec_proposed"]
+        accepted = eng.stats["spec_accepted"] - accept0["spec_accepted"]
+        r["mode"], r["spec_tokens"] = name, spec_k
+        r["logits_transfers"] = transfers
+        r["accept_rate"] = accepted / proposed if proposed else None
+        assert r["logits_transfers"] == 0, \
+            f"{name}: decode path transferred logits to host"
+        results.append(r)
+        acc = "-" if r["accept_rate"] is None else f"{r['accept_rate']:.2f}"
+        rows.append([name, f"{r['steady_tok_per_s']:.0f}",
+                     f"{r['p50_itl_ms']:.2f}", f"{r['p99_itl_ms']:.2f}",
+                     r["decode_syncs"], acc])
+        csv_line(f"spec_decode/{name.replace(' ', '_')}",
+                 r["wall_s"] * 1e6 / max(r["decode_tokens"], 1),
+                 f"tok_s={r['steady_tok_per_s']:.0f}")
+    base = results[0]["outputs"]
+    for r in results[1:]:
+        assert r["outputs"] == base, \
+            f"{r['mode']} outputs diverged from the non-speculative baseline"
+    print_table(
+        f"Speculative decoding ({ARCH} reduced, target {TARGET_LAYERS}L / "
+        f"draft 1L, B={SLOTS}, {gen} gen tokens)",
+        ["mode", "steady tok/s", "p50 ITL ms", "p99 ITL ms", "syncs",
+         "accept"],
+        rows, widths=[14, 12, 10, 10, 6, 8])
+    return results
+
+
+def main(fast: bool = False, smoke: bool = False) -> dict:
+    draft, target = build_pair()
+    gen = 64 if (smoke or fast) else 192
+    ks = [4] if smoke else [4, 8]
+    results = bench(target, draft, gen=gen, ks=ks)
+    baseline = results[0]
+    best = max(results[1:], key=lambda r: r["steady_tok_per_s"])
+    speedup = best["steady_tok_per_s"] / baseline["steady_tok_per_s"]
+    out = {"arch": ARCH, "target_layers": TARGET_LAYERS, "draft_layers": 1,
+           "batch": SLOTS, "prompt_len": PROMPT_LEN, "gen_tokens": gen,
+           "page_size": PAGE, "baseline_steps_per_sync": BASELINE_K,
+           "modes": [{k: v for k, v in r.items() if k != "outputs"}
+                     for r in results],
+           "speedup_spec_vs_fused16": speedup,
+           "best_spec_tokens": best["spec_tokens"],
+           "accept_rate": best["accept_rate"],
+           "tokens_identical": True}
+    # fast/smoke runs must not clobber the committed full-mode artifact
+    path = OUT_PATH.replace(".json", ".fast.json") if (fast or smoke) \
+        else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {path}  (spec k={best['spec_tokens']} vs fused "
+          f"K={BASELINE_K}: {speedup:.2f}x, accept={best['accept_rate']:.2f})")
+    if best["accept_rate"] < 0.7:
+        raise SystemExit(
+            f"draft acceptance {best['accept_rate']:.2f} (expected >= 0.7)")
+    # the 1.4x acceptance-criterion claim is held to the full-length run;
+    # smoke leaves headroom for loaded shared CI runners
+    floor = 1.1 if smoke else (1.2 if fast else 1.4)
+    if speedup < floor:
+        raise SystemExit(
+            f"speculative decode speedup is {speedup:.2f}x "
+            f"(expected >= {floor}x)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

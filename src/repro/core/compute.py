@@ -37,6 +37,9 @@ class ModelDeployment:
     prefix_cache_hit_rate: float = 0.0     # warm-cache shared-prefix fraction
     chunked_prefill_budget: int | None = None  # prompt tokens per engine step
     decode_steps_per_sync: int = 1         # fused decode tokens per host sync
+    spec_tokens: int = 0                   # draft tokens per speculative round
+    spec_accept_rate: float = 0.8          # steady-state draft acceptance
+    draft_cost: InstanceCost | None = None  # draft model (required for spec)
 
 
 class ComputeEndpoint:
@@ -157,6 +160,9 @@ class ComputeEndpoint:
             prefix_cache_hit_rate=dep.prefix_cache_hit_rate,
             chunked_prefill_budget=dep.chunked_prefill_budget,
             decode_steps_per_sync=dep.decode_steps_per_sync,
+            spec_tokens=dep.spec_tokens,
+            spec_accept_rate=dep.spec_accept_rate,
+            draft_cost=dep.draft_cost,
             on_released=self._on_instance_gone,
             on_failed=self._on_instance_failed,
             on_hot=self._on_instance_hot)

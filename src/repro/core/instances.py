@@ -9,7 +9,7 @@ import itertools
 from dataclasses import dataclass, field
 from enum import Enum
 
-from repro.serving.costmodel import InstanceCost
+from repro.serving.costmodel import InstanceCost, expected_spec_tokens
 
 _inst_ids = itertools.count(1)
 
@@ -58,13 +58,23 @@ class SimEngine:
       sync period, matching ``benchmarks/decode_loop.py``. Falls back to
       K=1 whenever a prefill is in flight or new sequences were admitted,
       mirroring the real engine's composition-change rule.
+    * ``spec_tokens`` / ``spec_accept_rate`` / ``draft_cost`` — speculative
+      decoding: each steady-state round charges
+      ``spec_round_time(batch, draft_cost, k)`` (k+1 fused draft steps plus
+      ONE batched verify forward) and every running sequence gains
+      ``expected_spec_tokens(accept_rate, k)`` tokens, matching
+      ``benchmarks/spec_decode.py``. Rounds fall back to plain decode steps
+      whenever a prefill is in flight or the composition changed — the same
+      rule as the real engine's ``_decode_spec`` fallback.
     """
 
     def __init__(self, loop, cost: InstanceCost, max_slots: int = 48,
                  on_idle=None, on_busy=None,
                  prefix_cache_hit_rate: float = 0.0,
                  chunked_prefill_budget: int | None = None,
-                 decode_steps_per_sync: int = 1):
+                 decode_steps_per_sync: int = 1,
+                 spec_tokens: int = 0, spec_accept_rate: float = 0.8,
+                 draft_cost: InstanceCost | None = None):
         self.loop = loop
         self.cost = cost
         self.max_slots = max_slots
@@ -73,6 +83,11 @@ class SimEngine:
         self.prefix_cache_hit_rate = prefix_cache_hit_rate
         self.chunked_prefill_budget = chunked_prefill_budget
         self.decode_steps_per_sync = max(int(decode_steps_per_sync), 1)
+        self.spec_tokens = max(int(spec_tokens), 0)
+        self.spec_accept_rate = spec_accept_rate
+        self.draft_cost = draft_cost
+        if self.spec_tokens and draft_cost is None:
+            raise ValueError("spec_tokens > 0 requires draft_cost")
         self.queue: list[tuple[SimRequest, object, object]] = []
         self.running: list[dict] = []
         self._step_ev = None
@@ -160,17 +175,28 @@ class SimEngine:
         # finishes/frees of the previous sync, which dirty the real
         # engine's slot state (same fallback rule as
         # ContinuousBatchingEngine._decode_fused)
-        k = self.decode_steps_per_sync
-        if (admitted or self._composition_changed or prefill_cost > 0
-                or any(r["prefill_left"] > 0 for r in self.running)):
-            k = 1
+        steady = not (admitted or self._composition_changed
+                      or prefill_cost > 0
+                      or any(r["prefill_left"] > 0 for r in self.running))
         self._composition_changed = False
-        self._step_k = k
         batch = len(self.running)
         ctx = sum(r["req"].prompt_tokens + r["produced"]
                   for r in self.running) / batch
-        dt = k * self.cost.decode_step_time(batch, ctx=max(int(ctx), 1),
-                                            steps_per_sync=k) + prefill_cost
+        ctx = max(int(ctx), 1)
+        if self.spec_tokens and steady:
+            # speculative round: k+1 draft steps + one verify forward per
+            # expected_spec_tokens(a, k) tokens per sequence
+            self._step_k = max(int(round(expected_spec_tokens(
+                self.spec_accept_rate, self.spec_tokens))), 1)
+            dt = self.cost.spec_round_time(batch, self.draft_cost,
+                                           self.spec_tokens, ctx=ctx) \
+                + prefill_cost
+        else:
+            k = self.decode_steps_per_sync if steady else 1
+            self._step_k = k
+            dt = k * self.cost.decode_step_time(batch, ctx=ctx,
+                                                steps_per_sync=k) \
+                + prefill_cost
         self._step_ev = self.loop.call_after(dt, self._finish_step)
 
     def _finish_step(self):
@@ -216,7 +242,9 @@ class ModelInstance:
                  result_cpu: float = 0.0,
                  prefix_cache_hit_rate: float = 0.0,
                  chunked_prefill_budget: int | None = None,
-                 decode_steps_per_sync: int = 1):
+                 decode_steps_per_sync: int = 1,
+                 spec_tokens: int = 0, spec_accept_rate: float = 0.8,
+                 draft_cost: InstanceCost | None = None):
         self.loop = loop
         self.model_name = model_name
         self.cost = cost
@@ -239,7 +267,10 @@ class ModelInstance:
                                 on_busy=self._went_busy,
                                 prefix_cache_hit_rate=prefix_cache_hit_rate,
                                 chunked_prefill_budget=chunked_prefill_budget,
-                                decode_steps_per_sync=decode_steps_per_sync)
+                                decode_steps_per_sync=decode_steps_per_sync,
+                                spec_tokens=spec_tokens,
+                                spec_accept_rate=spec_accept_rate,
+                                draft_cost=draft_cost)
         self.hot_since = None
         self.created = loop.now()
         self.job = scheduler.submit(num_nodes, on_start=self._nodes_ready,

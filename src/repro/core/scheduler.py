@@ -69,12 +69,27 @@ class ClusterScheduler:
         """Job gives back its nodes (endpoint idle-release or shutdown)."""
         if job.state in (JobState.ENDED, JobState.FAILED):
             return
+        if job.state == JobState.QUEUED:
+            # a queued job must leave the queue when released, or
+            # _try_schedule would later zombie-start an ENDED job and leak
+            # its nodes forever (caught by the hypothesis scheduler
+            # property: terminal states are terminal)
+            self._end_queued(job)
+            return
         self._finish(job, JobState.ENDED)
 
     def cancel(self, job: Job):
         if job.state == JobState.QUEUED:
-            self._queue.remove(job)
-            job.state = JobState.ENDED
+            self._end_queued(job)
+
+    def _end_queued(self, job: Job):
+        """Terminal transition for a job that never started: dequeue, mark
+        ENDED, and fire on_end — one code path for release() and cancel()."""
+        self._queue.remove(job)
+        job.state = JobState.ENDED
+        job.end_time = self.loop.now()
+        if job.on_end:
+            job.on_end(job)
 
     # -- status (federation reads this) ------------------------------------------
     def available_nodes(self) -> int:

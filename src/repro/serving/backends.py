@@ -23,6 +23,14 @@ Both backends expose two decode paths:
   produced/done vectors are synced to the host. Logits never leave the
   device (asserted via ``TRANSFER_STATS``).
 
+Speculative decoding adds a third call, ``spec_verify(draft_tokens)``: ONE
+jitted forward verifies the k proposed tokens plus the guaranteed target
+token for every slot (write KV at len..len+k, attend causally, sample all
+k+1 seeded targets, latch stops/limits, truncate to the accepted prefix) —
+the multi-token analogue of one fused step, with the same state-residency
+and zero-logits-transfer contract. ``spec_headroom``/``reset_lens`` are its
+host-side page-reservation and draft-rollback companions.
+
 Both backends speak the same prefill protocol to the engine:
 
   task = backend.start_prefill(seq_id, prompt)   # reserve slot/pages
@@ -38,6 +46,7 @@ decode bookkeeping and their batch slots write to the trash page.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from functools import partial
 
@@ -47,16 +56,17 @@ import numpy as np
 from jax import lax
 
 from repro.models import LM
-from repro.models.layers import (chunked_attention, mlp_layer, project_qkv,
-                                 rms_norm)
+from repro.models.layers import (NEG_INF, chunked_attention, mlp_layer,
+                                 project_qkv, rms_norm)
 from repro.models.moe import moe_ffn
 from repro.models.transformer import _block
 from repro.serving.kv_cache import OutOfPages, PagedKVCache
 from repro.kernels.paged_attention.ops import paged_attention as paged_attn_kernel
-from repro.kernels.paged_attention.ref import (paged_attention_ref,
+from repro.kernels.paged_attention.ref import (gather_kv, paged_attention_ref,
                                                paged_prefill_attention_ref)
 
-from repro.serving.sampler import fold_seeds, sample_from_logits
+from repro.serving.sampler import (fold_seeds, sample_from_logits,
+                                   spec_accept, spec_targets)
 
 ATTENTION_FAMILIES = ("dense", "moe", "vlm")
 
@@ -101,6 +111,62 @@ def _sample_and_latch(st, logits, tokens, n_gen, done, produced, live):
     done = done | (live & (hit_stop | (n_gen >= st["gen_limit"])))
     produced = produced + live.astype(jnp.int32)
     return tokens, n_gen, done, produced
+
+
+def _spec_block_attention(q, k, v, lens, *, kv_major):
+    """Attention for a speculative verify block of T tokens per slot.
+
+    q: (B, T, H, D). k/v hold history PLUS the block's own KV (already
+    written): kv-heads-major (B, KH, Smax, D) for the dense slot cache, or
+    seq-major (B, S, KH, D) for a gathered page view. ``lens``: (B,) valid
+    history length BEFORE the block — query j attends [0, lens + j + 1), the
+    same visible set the sequential decode path sees at that position.
+    """
+    B, T, H, D = q.shape
+    KH = k.shape[1] if kv_major else k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, T, KH, G, D).astype(jnp.float32)
+    sub = "btkgd,bksd->bkgts" if kv_major else "btkgd,bskd->bkgts"
+    s = jnp.einsum(sub, qr, k.astype(jnp.float32)) * scale
+    S = s.shape[-1]
+    ok = jnp.arange(S)[None, None, :] \
+        < (lens[:, None] + 1 + jnp.arange(T))[:, :, None]      # (B, T, S)
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    sub = "bkgts,bksd->btkgd" if kv_major else "bkgts,bskd->btkgd"
+    out = jnp.einsum(sub, p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, D).astype(q.dtype)
+
+
+def _spec_accept_and_latch(st, logits, draft):
+    """Device-side acceptance + stop/limit latch for one speculative round —
+    the single definition both backends inline (the verify-path analogue of
+    :func:`_sample_and_latch`). logits: (B, T, V) with T = k + 1; draft:
+    (B, k). Emits the accepted draft prefix, the residual resample at the
+    first mismatch (or the bonus token when everything matched), truncated
+    at the first stop-token / generation-limit hit. Returns
+    (targets (B, T), produced (B,), done (B,), st) with st's tokens/n_gen
+    advanced by ``produced``.
+    """
+    T = logits.shape[1]
+    targets = spec_targets(logits, st["temps"], st["top_ps"],
+                           st["seed_base"], st["n_gen"])
+    emit, n_emit = spec_accept(targets, draft)
+    n2 = st["n_gen"][:, None] + 1 + jnp.arange(T, dtype=jnp.int32)[None, :]
+    hit_stop = (st["stop_tok"][:, None] >= 0) \
+        & (targets == st["stop_tok"][:, None])
+    hit = emit & (hit_stop | (n2 >= st["gen_limit"][:, None]))
+    any_hit = hit.any(axis=1)
+    first_hit = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    produced = jnp.where(any_hit, first_hit + 1, n_emit)
+    produced = jnp.where(st["active"], produced, 0)
+    done = st["active"] & any_hit
+    last = jnp.take_along_axis(
+        targets, jnp.maximum(produced - 1, 0)[:, None], axis=1)[:, 0]
+    tokens = jnp.where(produced > 0, last, st["tokens"])
+    st = dict(st, tokens=tokens, n_gen=st["n_gen"] + produced)
+    return targets, produced, done, st
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -178,6 +244,7 @@ class SlotBackend:
             lambda p, toks, cache: self.model.decode_step(p, toks, cache),
             donate_argnums=(2,))
         self._fused = {}        # K -> jitted multi-step decode+sample fn
+        self._spec_fns = {}     # T -> jitted verify+accept fn
         self._dec_st = None     # device-resident per-slot decode state
 
     # -- capacity -------------------------------------------------------------
@@ -361,6 +428,101 @@ class SlotBackend:
             self.params, self.cache, self._dec_st)
         return np.asarray(out), np.asarray(produced), np.asarray(done)
 
+    # -- speculative decoding ----------------------------------------------------
+    @property
+    def supports_spec_decode(self) -> bool:
+        # the verify block rewrites cache positions; SSM/hybrid state cannot
+        # be rolled back, so only attention families can speculate
+        return self.cfg.family in ATTENTION_FAMILIES
+
+    def spec_headroom(self, k: int) -> int:
+        """How many draft tokens a verify round can take (the engine already
+        bounds k by max_seq_len); the dense cache has no page pool to run
+        dry, so the answer is always k."""
+        return k
+
+    def reset_lens(self, lens_by_seq: dict[str, int]) -> None:
+        """Roll per-slot cache lengths back to the given values — the
+        draft cache's truncate-on-reject between speculative rounds. Only
+        the (max_slots,) length vector moves; KV rows past the new length
+        are rewritten before the length ever crosses them. The caller
+        covers every live slot, and a dead slot's length is never read
+        before its next prefill resets it, so the vector is rebuilt from
+        the host without pulling the device copy back."""
+        lens = np.zeros((self.max_slots,), np.int32)
+        for sid, n in lens_by_seq.items():
+            lens[self.slot_of[sid]] = n
+        self.cache = dict(self.cache)
+        self.cache["len"] = jnp.asarray(lens)
+
+    def spec_catch_up(self, seq_id: str, tokens: list, from_pos: int):
+        """Draft-cache resync after non-speculative rounds advanced the
+        emitted stream without the draft: compute KV for
+        ``tokens[from_pos:]`` (already-emitted prompt+output tokens) into
+        the sequence's slot via the chunked-prefill body, leaving its
+        cache length at ``len(tokens)``. Logits are discarded on device."""
+        task = PrefillTask(seq_id=seq_id, prompt=list(tokens), pos=from_pos)
+        self._compute_chunk(task, task.remaining)
+
+    def _spec_impl(self, params, cache, st, draft, *, T):
+        """Verify T = k+1 tokens per slot in ONE forward: feed
+        [last_token, draft_0..draft_{k-1}], write their KV at positions
+        lens..lens+k (dead slots drop out-of-bounds), attend causally, then
+        accept/latch on device. Rejected positions keep their (masked)
+        writes — they sit past the rolled-back length and are overwritten
+        before the length crosses them. Returns
+        (tokens (T, B), produced (B,), done (B,), cache, st)."""
+        cfg = self.cfg
+        B = st["tokens"].shape[0]
+        lens = cache["len"]
+        tokens_in = jnp.concatenate([st["tokens"][:, None], draft], axis=1)
+        x = jnp.take(params["embed"], tokens_in, axis=0)
+        positions = lens[:, None] + jnp.arange(T)[None, :]
+        Smax = cache["k"].shape[3]
+        bidx = jnp.arange(B)[:, None]
+        wpos = jnp.where(st["active"][:, None], positions, Smax)  # dead: drop
+
+        def body(h, xs):
+            lp, kc, vc = xs
+
+            def write_attend(q, k, v):
+                kc2 = kc.at[bidx, :, wpos].set(k.astype(kc.dtype),
+                                               mode="drop")
+                vc2 = vc.at[bidx, :, wpos].set(v.astype(vc.dtype),
+                                               mode="drop")
+                a = _spec_block_attention(q, kc2, vc2, lens, kv_major=True)
+                return a, (kc2, vc2)
+
+            return _chunk_layer(h, lp, cfg, positions, write_attend)
+
+        h, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self.model.logits(params, h)                  # (B, T, V)
+        targets, produced, done, st = _spec_accept_and_latch(st, logits,
+                                                             draft)
+        cache = dict(cache, k=nk, v=nv)
+        cache["len"] = lens + produced
+        return targets.T, produced, done, cache, st
+
+    def spec_verify(self, draft_tokens: np.ndarray, host_state=None):
+        """One speculative round's verification: draft_tokens (B, k) from
+        the draft's fused loop; one jitted call verifies, accepts, resamples
+        the residual, and truncates the cache — logits never reach the host.
+        Returns (tokens (k+1, B), produced (B,), done (B,)) numpy arrays."""
+        if host_state is not None:
+            self._dec_st = _upload_state(host_state)
+        assert self._dec_st is not None, \
+            "spec_verify needs host_state on the first call"
+        T = draft_tokens.shape[1] + 1
+        if T not in self._spec_fns:
+            self._spec_fns[T] = jax.jit(partial(self._spec_impl, T=T),
+                                        donate_argnums=(1, 2))
+        out, produced, done, self.cache, self._dec_st = self._spec_fns[T](
+            self.params, self.cache, self._dec_st,
+            jnp.asarray(np.ascontiguousarray(draft_tokens)))
+        return np.asarray(out), np.asarray(produced), np.asarray(done)
+
     def free(self, seq_id: str):
         slot = self.slot_of.pop(seq_id)
         self.free_slots.append(slot)
@@ -409,6 +571,7 @@ class PagedBackend:
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._cow = jax.jit(self._cow_impl, donate_argnums=(0,))
         self._fused = {}            # K -> jitted multi-step decode+sample fn
+        self._spec_fns = {}         # T -> jitted verify+accept fn
         self._dec_st = None         # device-resident per-slot decode state
         self._dev_tables = None     # device-resident (tables, lens) pair
         self._dev_tables_key = None  # kv.table_version the pair was built at
@@ -708,35 +871,9 @@ class PagedBackend:
         (tokens (K_eff, max_slots), produced, done) as numpy arrays.
         """
         ps = self.page_size
-        K_eff = max(1, K)
-        # guarantee every live sequence ONE token of headroom first (the
-        # legacy ensure_slot contract: raise loudly rather than routing a
-        # live KV write to the trash page) — only then extend best-effort
-        # toward K, so one sequence's K-token headroom can never starve a
-        # later sequence out of its single page
-        for sid in self.decoding:
-            if self.kv.ensure_capacity(sid, 1) <= 0:
-                raise OutOfPages(f"{sid}: pool exhausted on decode append")
-        for sid in self.decoding:
-            ahead = max(1, min(K_eff, self.max_len - self.kv.length(sid)))
-            K_eff = min(K_eff, max(1, self.kv.ensure_capacity(sid, ahead)))
-        for sid in self.decoding:
-            pos0 = self.kv.length(sid)
-            for pi in range(pos0 // ps, (pos0 + K_eff - 1) // ps + 1):
-                cow = self.kv.writable_page(sid, pi * ps)
-                if cow is not None:
-                    self.pools = self._cow(self.pools, *cow)
-        if (host_state is not None or self._dev_tables is None
-                or self._dev_tables_key != self.kv.table_version):
-            tables = np.zeros((self.max_slots, self.pages_per_seq), np.int32)
-            lens = np.zeros((self.max_slots,), np.int32)
-            for slot, sid in self.seq_of.items():
-                if sid in self.decoding:
-                    tables[slot] = self.kv.table_array(
-                        [sid], self.pages_per_seq)[0]
-                    lens[slot] = self.kv.length(sid)
-            self._dev_tables = (jnp.asarray(tables), jnp.asarray(lens))
-            self._dev_tables_key = self.kv.table_version
+        K_eff = self._reserve_headroom(max(1, K))
+        self._resolve_cow(K_eff)
+        self._refresh_tables(force=host_state is not None)
         if host_state is not None:
             self._dec_st = _upload_state(host_state)
         assert self._dec_st is not None, \
@@ -750,6 +887,148 @@ class PagedBackend:
         out, produced, done, self.pools, self._dec_st, lens_d = \
             self._fused[K_eff](self.params, self.pools, self._dec_st,
                                tables_d, lens_d)
+        self._dev_tables = (tables_d, lens_d)
+        produced_np = np.asarray(produced)
+        for slot, sid in self.seq_of.items():
+            if sid in self.decoding:
+                self.kv.advance_n(sid, int(produced_np[slot]))
+        return np.asarray(out), produced_np, np.asarray(done)
+
+    def _reserve_headroom(self, n: int) -> int:
+        """Reserve page headroom for up to ``n`` token writes per decoding
+        sequence. Guarantees every live sequence ONE token of headroom
+        first (the legacy ensure_slot contract: raise loudly rather than
+        routing a live KV write to the trash page) — only then extends
+        best-effort toward ``n``, so one sequence's multi-token headroom
+        can never starve a later sequence out of its single page. Returns
+        the write count the pool (and ``max_len``) can actually take."""
+        for sid in self.decoding:
+            if self.kv.ensure_capacity(sid, 1) <= 0:
+                raise OutOfPages(f"{sid}: pool exhausted on decode append")
+        for sid in self.decoding:
+            ahead = max(1, min(n, self.max_len - self.kv.length(sid)))
+            n = min(n, max(1, self.kv.ensure_capacity(sid, ahead)))
+        return n
+
+    def _resolve_cow(self, n_writes: int) -> None:
+        """COW every still-shared page the next ``n_writes`` decode/verify
+        token writes of each decoding sequence would land in."""
+        ps = self.page_size
+        for sid in self.decoding:
+            pos0 = self.kv.length(sid)
+            for pi in range(pos0 // ps, (pos0 + n_writes - 1) // ps + 1):
+                cow = self.kv.writable_page(sid, pi * ps)
+                if cow is not None:
+                    self.pools = self._cow(self.pools, *cow)
+
+    def _refresh_tables(self, force: bool) -> None:
+        """(Re)upload the device-resident (block tables, lengths) pair when
+        the allocator state moved from under the cached copy."""
+        if (force or self._dev_tables is None
+                or self._dev_tables_key != self.kv.table_version):
+            tables = np.zeros((self.max_slots, self.pages_per_seq), np.int32)
+            lens = np.zeros((self.max_slots,), np.int32)
+            for slot, sid in self.seq_of.items():
+                if sid in self.decoding:
+                    tables[slot] = self.kv.table_array(
+                        [sid], self.pages_per_seq)[0]
+                    lens[slot] = self.kv.length(sid)
+            self._dev_tables = (jnp.asarray(tables), jnp.asarray(lens))
+            self._dev_tables_key = self.kv.table_version
+
+    # -- speculative decoding ----------------------------------------------------
+    @property
+    def supports_spec_decode(self) -> bool:
+        return True
+
+    def spec_headroom(self, k: int) -> int:
+        """Reserve page headroom for a verify round of k draft tokens + the
+        guaranteed target token; returns the k the pool can actually take
+        (the same reservation policy as ``fused_decode``)."""
+        return self._reserve_headroom(k + 1) - 1
+
+    def reset_lens(self, lens_by_seq: dict[str, int]) -> None:
+        """Truncate-on-reject for the draft's paged cache between rounds:
+        roll each sequence's logical length back (pages stay as headroom)."""
+        for sid, n in lens_by_seq.items():
+            self.kv.rollback_to(sid, n)
+
+    def spec_catch_up(self, seq_id: str, tokens: list, from_pos: int):
+        """Draft-cache resync after non-speculative rounds advanced the
+        emitted stream without the draft: compute KV for
+        ``tokens[from_pos:]`` into the sequence's pages via the
+        chunked-prefill body, leaving its logical length at
+        ``len(tokens)``. Logits are discarded on device."""
+        want = len(tokens)
+        self.kv.rollback_to(seq_id, from_pos)
+        need = want - self.kv.length(seq_id)
+        if self.kv.ensure_capacity(seq_id, need) < need:
+            raise OutOfPages(f"{seq_id}: pool exhausted on draft catch-up")
+        task = PrefillTask(seq_id=seq_id, prompt=list(tokens), pos=from_pos)
+        self._compute_chunk(task, task.remaining)
+        self.kv.advance_n(seq_id, need)
+        self.kv.table_version += 1       # device lens copy is now stale
+
+    def _spec_impl(self, params, pools, st, tables, lens, draft, *, T):
+        """Verify T = k+1 tokens per slot against the page pool in ONE
+        forward: write their KV at positions lens..lens+k (dead slots to
+        trash page 0), attend over the block tables with per-position
+        causal masks, then accept/latch on device. Returns
+        (tokens (T, B), produced (B,), done (B,), pools, st, lens)."""
+        cfg = self.cfg
+        ps = self.page_size
+        tokens_in = jnp.concatenate([st["tokens"][:, None], draft], axis=1)
+        x = jnp.take(params["embed"], tokens_in, axis=0)
+        positions = lens[:, None] + jnp.arange(T)[None, :]
+        live = st["active"][:, None]
+        page_slot = jnp.minimum(positions // ps, tables.shape[1] - 1)
+        page_idx = jnp.take_along_axis(tables, page_slot, axis=1)
+        page_idx = jnp.where(live, page_idx, 0)          # dead slots -> trash
+        off = jnp.where(live, positions % ps, 0)
+
+        def body(h, xs):
+            lp, kp, vp = xs
+
+            def write_attend(q, k, v):
+                kp2 = kp.at[page_idx, off].set(k.astype(kp.dtype))
+                vp2 = vp.at[page_idx, off].set(v.astype(vp.dtype))
+                kg = gather_kv(kp2, tables)
+                vg = gather_kv(vp2, tables)
+                a = _spec_block_attention(q, kg, vg, lens, kv_major=False)
+                return a, (kp2, vp2)
+
+            return _chunk_layer(h, lp, cfg, positions, write_attend)
+
+        h, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
+                                         pools["v"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self.model.logits(params, h)                  # (B, T, V)
+        targets, produced, done, st = _spec_accept_and_latch(st, logits,
+                                                             draft)
+        lens = lens + produced
+        return targets.T, produced, done, {"k": nk, "v": nv}, st, lens
+
+    def spec_verify(self, draft_tokens: np.ndarray, host_state=None):
+        """One speculative round's verification (page headroom must already
+        be reserved via ``spec_headroom``). Resolves copy-on-write for every
+        page the verify block writes, then runs verify + accept + residual
+        resample + truncate in one jitted call; logits never reach the host.
+        Returns (tokens (k+1, B), produced (B,), done (B,)) numpy arrays."""
+        T = draft_tokens.shape[1] + 1
+        self._resolve_cow(T)
+        self._refresh_tables(force=host_state is not None)
+        if host_state is not None:
+            self._dec_st = _upload_state(host_state)
+        assert self._dec_st is not None, \
+            "spec_verify needs host_state on the first call"
+        if T not in self._spec_fns:
+            self._spec_fns[T] = jax.jit(partial(self._spec_impl, T=T),
+                                        donate_argnums=(1, 2, 4))
+        tables_d, lens_d = self._dev_tables
+        out, produced, done, self.pools, self._dec_st, lens_d = \
+            self._spec_fns[T](self.params, self.pools, self._dec_st,
+                              tables_d, lens_d,
+                              jnp.asarray(np.ascontiguousarray(draft_tokens)))
         self._dev_tables = (tables_d, lens_d)
         produced_np = np.asarray(produced)
         for slot, sid in self.seq_of.items():

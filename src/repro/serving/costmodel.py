@@ -34,6 +34,19 @@ HOST_SYNC_OVERHEAD = 1.8e-3  # per-sync host transfer+sampling+scheduling
 STEP_OVERHEAD = DISPATCH_OVERHEAD + HOST_SYNC_OVERHEAD  # legacy K=1 total
 
 
+def expected_spec_tokens(accept_rate: float, k: int) -> float:
+    """Expected tokens emitted per speculative round: the accepted draft
+    prefix plus the guaranteed target token (the residual resample, or the
+    bonus token when all k drafts survive). With i.i.d. per-token acceptance
+    probability ``a`` this is ``sum_{j=0..k} a^j = (1 - a^(k+1)) / (1 - a)``,
+    saturating at ``k + 1`` when every draft is accepted."""
+    a = min(max(accept_rate, 0.0), 1.0)
+    k = max(int(k), 0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
 @dataclass
 class InstanceCost:
     """Per-phase timing for one model instance on ``chips`` chips.
@@ -75,14 +88,7 @@ class InstanceCost:
         device dispatch floor and the HBM/FLOP roofline term every token.
         K=1 reproduces the legacy host-driven path exactly.
         """
-        cfg = self.cfg
-        w_bytes = cfg.num_active_params * self.bytes_per_param
-        kv_per_tok = (cfg.attn_layer_count() * 2 * cfg.kv_dim
-                      * self.bytes_per_param)
-        kv_bytes = kv_per_tok * ctx * batch
-        t_mem = (w_bytes + kv_bytes) / (self.chips * self.hbm_bw)
-        flops = 2.0 * cfg.num_active_params * batch
-        t_c = flops / (self.chips * self.peak_flops * self.mfu)
+        t_mem, t_c = self._decode_roofline(batch, ctx)
         k = max(int(steps_per_sync), 1)
         host_sync = max(self.step_overhead - self.dispatch_overhead, 0.0)
         return max(t_mem, t_c) + self.dispatch_overhead + host_sync / k
@@ -90,3 +96,42 @@ class InstanceCost:
     def decode_tok_per_s(self, batch: int, ctx: int = 1024,
                          steps_per_sync: int = 1) -> float:
         return batch / self.decode_step_time(batch, ctx, steps_per_sync)
+
+    # -- speculative decoding ----------------------------------------------------
+    def _decode_roofline(self, batch: int, ctx: int,
+                         tokens_per_seq: int = 1) -> tuple[float, float]:
+        """(memory, compute) roofline terms for one decode-shaped forward
+        covering ``tokens_per_seq`` positions per sequence: the weights
+        stream once regardless (the whole point of batched verification),
+        compute scales with the positions."""
+        cfg = self.cfg
+        w_bytes = cfg.num_active_params * self.bytes_per_param
+        kv_per_tok = (cfg.attn_layer_count() * 2 * cfg.kv_dim
+                      * self.bytes_per_param)
+        kv_bytes = kv_per_tok * ctx * batch
+        t_mem = (w_bytes + kv_bytes) / (self.chips * self.hbm_bw)
+        flops = 2.0 * cfg.num_active_params * batch * tokens_per_seq
+        t_c = flops / (self.chips * self.peak_flops * self.mfu)
+        return t_mem, t_c
+
+    def spec_round_time(self, batch: int, draft: "InstanceCost",
+                        spec_tokens: int, ctx: int = 1024) -> float:
+        """Wall time of one draft-and-verify round mirroring the real
+        engine: k+1 draft steps in one fused call (device dispatch floor per
+        step, no host sync inside), then ONE target forward verifying all
+        k+1 positions (weights read once, compute scaled by k+1), then one
+        host sync for the round."""
+        k = max(int(spec_tokens), 1)
+        t_draft = (k + 1) * draft.decode_step_time(batch, ctx,
+                                                   steps_per_sync=k + 1)
+        t_mem, t_c = self._decode_roofline(batch, ctx, tokens_per_seq=k + 1)
+        host_sync = max(self.step_overhead - self.dispatch_overhead, 0.0)
+        t_verify = max(t_mem, t_c) + self.dispatch_overhead + host_sync
+        return t_draft + t_verify
+
+    def spec_decode_tok_per_s(self, batch: int, draft: "InstanceCost",
+                              spec_tokens: int, accept_rate: float,
+                              ctx: int = 1024) -> float:
+        tokens = expected_spec_tokens(accept_rate, spec_tokens)
+        return (batch * tokens
+                / self.spec_round_time(batch, draft, spec_tokens, ctx))

@@ -27,6 +27,13 @@ Throughput/latency features layered on the base loop:
   falls back to K=1 automatically whenever a prefill is in flight or the
   batch composition just changed, so chunked prefill and prefix caching
   compose unchanged; outputs are token-identical to the per-step path.
+* **Speculative decoding** (``spec_tokens`` = k > 0, with a draft model):
+  per round the draft's fused loop proposes k tokens and ONE batched
+  target forward verifies all k+1 positions, accepting via the seeded-
+  sampler exact-match test (see ``serving/sampler.py``) — so the target's
+  weights are read once per up-to-k+1 emitted tokens while greedy AND
+  seeded top-p streams stay token-identical to non-speculative decoding.
+  Both caches truncate to the accepted prefix each round.
 """
 from __future__ import annotations
 
@@ -37,7 +44,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.models import LM
-from repro.serving.backends import PagedBackend, PrefillTask, SlotBackend
+from repro.serving.backends import (ATTENTION_FAMILIES, PagedBackend,
+                                    PrefillTask, SlotBackend)
 from repro.serving.request import (InferenceRequest, RequestMetrics,
                                    RequestOutput)
 from repro.serving.sampler import (SEED_MOD, sample_token, sample_tokens,
@@ -70,6 +78,12 @@ class EngineConfig:
     # fused steps and the host unpacks K tokens per slot. Auto-falls back to
     # 1 while prefills are in flight or the batch composition changed.
     decode_steps_per_sync: int = 1
+    # speculative decoding: draft tokens proposed per round (0 = off). Needs
+    # a draft model passed to the engine; each round the draft's fused loop
+    # proposes k tokens and ONE target forward verifies all k+1 positions,
+    # accepting via the seeded-sampler acceptance test (token-identical to
+    # the non-speculative path for every sampling mode).
+    spec_tokens: int = 0
 
 
 @dataclass
@@ -77,10 +91,21 @@ class _Running:
     req: InferenceRequest
     metrics: RequestMetrics
     output_tokens: list = field(default_factory=list)
+    draft_task: PrefillTask | None = None   # speculative draft-cache prefill
+    # emitted-stream positions the draft cache holds valid KV for; falls
+    # behind cache_len whenever non-speculative rounds run (chunked-prefill
+    # interleave, headroom fallback) and is caught up before proposing
+    draft_len: int = 0
 
     @property
     def last_token(self) -> int:
         return self.output_tokens[-1]
+
+    @property
+    def cache_len(self) -> int:
+        """KV entries a backend holds for this sequence: every emitted token
+        except the last (which is fed, and written, by the next step)."""
+        return len(self.req.prompt_tokens) + len(self.output_tokens) - 1
 
 
 class _SlotStates:
@@ -118,7 +143,8 @@ class _SlotStates:
 
 class ContinuousBatchingEngine:
     def __init__(self, model: LM, params, cfg: EngineConfig | None = None,
-                 clock=None):
+                 clock=None, draft_model: LM | None = None,
+                 draft_params=None):
         self.model = model
         self.cfg = cfg or EngineConfig()
         self.clock = clock or _RealClock()
@@ -134,6 +160,32 @@ class ContinuousBatchingEngine:
             self.backend = SlotBackend(
                 model, params, max_slots=self.cfg.max_slots,
                 max_len=self.cfg.max_seq_len)
+        self.draft_backend = None
+        if self.cfg.spec_tokens > 0:
+            if draft_model is None:
+                raise ValueError("spec_tokens > 0 requires a draft model")
+            if not self.cfg.fused_decode:
+                raise ValueError("speculative decoding requires fused_decode")
+            if not getattr(self.backend, "supports_spec_decode", False) \
+                    or draft_model.cfg.family not in ATTENTION_FAMILIES:
+                raise ValueError("speculative decoding requires attention-"
+                                 "family target and draft models")
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError("draft and target must share a vocabulary")
+            # the draft keeps its KV alongside the target cache in a mirror
+            # backend of the same kind (prefix caching off: draft pages are
+            # private, rolled back every round)
+            if self.cfg.backend == "paged":
+                self.draft_backend = PagedBackend(
+                    draft_model, draft_params, max_slots=self.cfg.max_slots,
+                    max_len=self.cfg.max_seq_len,
+                    page_size=self.cfg.page_size,
+                    num_pages=self.cfg.num_pages,
+                    use_kernel=self.cfg.use_kernel)
+            else:
+                self.draft_backend = SlotBackend(
+                    draft_model, draft_params, max_slots=self.cfg.max_slots,
+                    max_len=self.cfg.max_seq_len)
         self.waiting: deque[InferenceRequest] = deque()
         # request_id -> (_Running, PrefillTask): admitted, prompt not yet
         # fully ingested (only populated when chunked prefill is on)
@@ -143,7 +195,9 @@ class ContinuousBatchingEngine:
         self.slots = _SlotStates(self.cfg.max_slots)
         self.stats = {"prefill_tokens": 0, "cached_prompt_tokens": 0,
                       "prefill_chunks": 0, "decode_tokens": 0, "steps": 0,
-                      "decode_syncs": 0, "finished": 0, "aborted": 0}
+                      "decode_syncs": 0, "finished": 0, "aborted": 0,
+                      "spec_rounds": 0, "spec_proposed": 0,
+                      "spec_accepted": 0}
 
     # -- queue management -------------------------------------------------------
     def add_request(self, req: InferenceRequest):
@@ -183,12 +237,25 @@ class ContinuousBatchingEngine:
 
     def saturated(self) -> bool:
         """No free capacity and a queue is forming (autoscaler signal)."""
-        return bool(self.waiting) and not self.backend.can_admit(
+        return bool(self.waiting) and not self._can_admit(
             len(self.waiting[0].prompt_tokens))
+
+    def _can_admit(self, n_prompt: int) -> bool:
+        """Admission needs capacity in the target backend AND, when
+        speculating, in the draft's mirror backend."""
+        if not self.backend.can_admit(n_prompt):
+            return False
+        return self.draft_backend is None \
+            or self.draft_backend.can_admit(n_prompt)
 
     def cache_stats(self) -> dict:
         """Prefix-cache counters from the backend (empty for slot backend)."""
         return self.backend.cache_stats()
+
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        p = self.stats["spec_proposed"]
+        return self.stats["spec_accepted"] / p if p else 0.0
 
     # -- engine iteration ---------------------------------------------------------
     def step(self) -> list[RequestOutput]:
@@ -205,7 +272,12 @@ class ContinuousBatchingEngine:
         if self.running:
             by_slot = {self.backend.slot(rid): run
                        for rid, run in self.running.items()}
-            if (self.cfg.fused_decode
+            if self.draft_backend is not None and not self.prefilling:
+                # speculative round; during chunked-prefill interleave we
+                # fall back to the plain fused path (which clamps K=1) so
+                # time-between-tokens stays bounded while prompts ingest
+                self._decode_spec(by_slot, finished)
+            elif (self.cfg.fused_decode
                     and getattr(self.backend, "supports_fused_decode", False)):
                 self._decode_fused(by_slot, finished)
             else:
@@ -263,6 +335,80 @@ class ContinuousBatchingEngine:
             if f:
                 finished.append(f)
 
+    def _draft_state(self) -> dict:
+        """Per-slot state for the draft's proposal loop: the target's
+        sampling params and seed fold (so draft proposals are the token the
+        target would sample whenever the logits agree), but no stop token
+        and no generation limit — the target's verdict, not the draft's,
+        finishes sequences."""
+        st = self.slots
+        return {"tokens": st.tokens, "n_gen": st.n_gen, "temps": st.temps,
+                "top_ps": st.top_ps, "seed_base": st.seed_base,
+                "stop_tok": np.full_like(st.stop_tok, -1),
+                "gen_limit": np.full_like(st.gen_limit,
+                                          np.iinfo(np.int32).max),
+                "active": st.active}
+
+    def _decode_spec(self, by_slot: dict, finished: list):
+        """One draft-and-verify round: the draft's fused loop proposes k
+        tokens per slot (k+1 steps, so the last proposal's KV is written
+        too), ONE target forward verifies all k+1 positions on device, and
+        both caches truncate to the accepted prefix. Greedy and seeded
+        top-p outputs are token-identical to the non-speculative path."""
+        st = self.slots
+        k = self.cfg.spec_tokens
+        lens_by_seq: dict[str, int] = {}
+        for run in by_slot.values():
+            lens_by_seq[run.req.request_id] = run.cache_len
+            # the verify block writes positions cache_len..cache_len+k
+            k = min(k, self.cfg.max_seq_len - 1 - run.cache_len)
+        k = min(k, self.backend.spec_headroom(max(k, 0)))
+        if k < 1:          # no room to speculate (pool tight / seqs at cap)
+            return self._decode_fused(by_slot, finished)
+        # resync the draft cache: non-speculative rounds (chunked-prefill
+        # interleave, headroom fallback) advance the emitted stream without
+        # it, so it first ingests the tokens it missed ...
+        for run in by_slot.values():
+            if run.draft_len < run.cache_len:
+                stream = run.req.prompt_tokens + run.output_tokens
+                self.draft_backend.spec_catch_up(
+                    run.req.request_id, stream[:run.cache_len],
+                    run.draft_len)
+                run.draft_len = run.cache_len
+        # ... then truncate-on-reject from the previous round, and propose:
+        # k+1 fused steps emit k usable proposals and leave the k-th
+        # proposal's KV written for the all-accepted case
+        self.draft_backend.reset_lens(lens_by_seq)
+        draft_toks, _, _ = self.draft_backend.fused_decode(
+            k + 1, self._draft_state())
+        k_used = min(k, draft_toks.shape[0] - 1)   # draft pool may clamp
+        draft = draft_toks[:k_used].T              # (max_slots, k_used)
+        out, produced, done = self.backend.spec_verify(
+            draft, st.host_state() if st.dirty else None)
+        st.dirty = False
+        self.stats["decode_syncs"] += 1
+        self.stats["spec_rounds"] += 1
+        for s, run in by_slot.items():
+            p = int(produced[s])
+            self.stats["spec_proposed"] += k_used
+            self.stats["spec_accepted"] += max(p - 1, 0)
+            for j in range(p):
+                run.output_tokens.append(int(out[j, s]))
+            st.tokens[s] = run.last_token
+            st.n_gen[s] += p
+            # the proposal loop wrote KV for exactly the accepted prefix
+            # (plus rejected rows past the rolled-back length)
+            run.draft_len = run.cache_len
+            self.stats["decode_tokens"] += p
+            f = self._maybe_finish(run)
+            if (f is not None) != bool(done[s]):
+                raise RuntimeError(
+                    f"spec decode divergence for {run.req.request_id}: "
+                    f"device done={bool(done[s])}, host finish="
+                    f"{f.finish_reason if f else None}")
+            if f:
+                finished.append(f)
+
     def run_to_completion(self) -> list[RequestOutput]:
         outs = []
         while self.has_work():
@@ -274,6 +420,13 @@ class ContinuousBatchingEngine:
         req = self.waiting.popleft()
         run = _Running(req=req, metrics=req._metrics)
         task = self.backend.start_prefill(req.request_id, req.prompt_tokens)
+        if self.draft_backend is not None:
+            # reserve the draft's slot/pages NOW so both backends see the
+            # same admit/free order (their slot indices stay equal); the
+            # draft's prompt is computed one-shot when the target's prefill
+            # completes
+            run.draft_task = self.draft_backend.start_prefill(
+                req.request_id, req.prompt_tokens)
         run.metrics.cached_prompt_tokens = task.cached_tokens
         self.stats["cached_prompt_tokens"] += task.cached_tokens
         return run, task
@@ -281,7 +434,7 @@ class ContinuousBatchingEngine:
     def _prefill_one_shot(self, finished: list):
         admitted = 0
         while (self.waiting and admitted < self.cfg.max_prefills_per_step
-               and self.backend.can_admit(len(self.waiting[0].prompt_tokens))):
+               and self._can_admit(len(self.waiting[0].prompt_tokens))):
             run, task = self._admit()
             logits, n = self.backend.prefill_chunk(task, None)
             self._account_chunk(run, n)
@@ -305,7 +458,7 @@ class ContinuousBatchingEngine:
         admitted = 0
         while (left > 0 and self.waiting
                and admitted < self.cfg.max_prefills_per_step
-               and self.backend.can_admit(len(self.waiting[0].prompt_tokens))):
+               and self._can_admit(len(self.waiting[0].prompt_tokens))):
             run, task = self._admit()
             admitted += 1
             logits, n = self.backend.prefill_chunk(task, left)
@@ -331,6 +484,14 @@ class ContinuousBatchingEngine:
         if f:
             finished.append(f)
         else:
+            if run.draft_task is not None:
+                # populate the draft's KV for the whole prompt in one shot
+                # (the draft is small; its logits are discarded on device)
+                self.draft_backend.prefill_chunk(run.draft_task, None)
+                run.draft_len = len(run.req.prompt_tokens)
+                assert (self.draft_backend.slot(run.req.request_id)
+                        == self.backend.slot(run.req.request_id)), \
+                    "draft/target slot assignment diverged"
             self._activate_slot(run)
 
     # -- slot state ---------------------------------------------------------------
@@ -361,6 +522,8 @@ class ContinuousBatchingEngine:
         self.slots.active[s] = False
         self.slots.dirty = True
         self.backend.free(request_id)
+        if self.draft_backend is not None:
+            self.draft_backend.free(request_id)
 
     # -- helpers ------------------------------------------------------------------
     def _sample_one(self, req, logits, step) -> int:

@@ -228,6 +228,20 @@ class PagedKVCache:
         sync: the device loop already wrote their KV)."""
         self._lens[seq_id] += n
 
+    def rollback_to(self, seq_id: str, length: int) -> None:
+        """Truncate-on-reject (speculative decoding): shrink a sequence's
+        logical length back to ``length``. Pages stay allocated — positions
+        past ``length`` are write headroom again and are rewritten before the
+        length ever crosses them, so no device-side cleanup is needed. Bumps
+        ``table_version`` so device-resident length vectors are re-uploaded.
+        """
+        cur = self._lens[seq_id]
+        assert 0 <= length <= cur, \
+            f"{seq_id}: rollback to {length} from {cur}"
+        if length != cur:
+            self._lens[seq_id] = length
+            self.table_version += 1
+
     def ensure_capacity(self, seq_id: str, ahead: int) -> int:
         """Append pages until the block table covers ``ahead`` tokens past
         the current length (best effort: stops early when the pool runs

@@ -77,3 +77,56 @@ def sample_token(logits, temperature, top_p, seed):
     return _sample_one(logits.astype(jnp.float32),
                        jnp.float32(temperature), jnp.float32(top_p),
                        jnp.int32(seed))
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: acceptance test + residual resampling
+# ---------------------------------------------------------------------------
+# The engine's sampler is DETERMINISTIC given (seed_base, n_gen): position i
+# of a sequence always samples the same token from the same logits. Under
+# that sampler the target distribution at each position is a point mass on
+# the seeded sample t_i, so the standard accept-with-prob-min(1, p/q) test
+# collapses to an exact-match test (accept the draft token iff it equals
+# t_i) and the residual distribution max(0, p - q) collapses to t_i itself —
+# "residual resampling" emits the target's own seeded sample at the first
+# mismatch. For greedy (temperature == 0) this is the classic argmax
+# acceptance rule. The payoff: speculative output streams are token-
+# identical to non-speculative decoding for EVERY sampling mode, not just
+# distributionally equivalent.
+
+
+def spec_targets(logits, temps, top_ps, seed_base, n_gen):
+    """Seeded target samples for a block of verify positions.
+
+    logits: (B, T, V) f32 — position j holds the target logits after feeding
+    verify token j; temps/top_ps: (B,); seed_base: (B,) uint32; n_gen: (B,)
+    tokens generated so far. Position j folds seed ``seed_base + n_gen + j``,
+    matching what the non-speculative loop would fold when emitting that
+    token. Returns (B, T) int32.
+    """
+    B, T, V = logits.shape
+    flat = logits.reshape(B * T, V).astype(jnp.float32)
+    n2 = n_gen[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    seeds = fold_seeds(jnp.repeat(seed_base, T), n2.reshape(-1))
+    out = sample_from_logits(flat, jnp.repeat(temps, T),
+                             jnp.repeat(top_ps, T), seeds)
+    return out.reshape(B, T)
+
+
+def spec_accept(targets, draft):
+    """Acceptance test: how much of the draft survives verification.
+
+    targets: (B, k+1) seeded target samples (see :func:`spec_targets`);
+    draft: (B, k) proposed tokens. Returns ``(emit, n_emit)``:
+    ``emit[b, j]`` marks verify position j as emittable (position 0 — the
+    guaranteed target token — always is; position j > 0 iff every draft
+    token before it matched), ``n_emit = 1 + accepted`` counts them. The
+    emitted token at the first mismatch is ``targets`` at that position —
+    the residual resample.
+    """
+    B = targets.shape[0]
+    match = (targets[:, :-1] == draft).astype(jnp.int32)
+    prefix = jnp.cumprod(match, axis=1)
+    emit = jnp.concatenate(
+        [jnp.ones((B, 1), jnp.int32), prefix], axis=1).astype(bool)
+    return emit, emit.sum(axis=1).astype(jnp.int32)

@@ -1,3 +1,11 @@
+"""Shared test fixtures: tiny-model / engine / request builders.
+
+The serving test modules (prefix cache, decode fast path, speculative
+decoding, cross-backend parity) all drive the same tiny reduced models
+through the same engine entry points; the builders live here ONCE,
+parameterized by backend (slots | paged), attention grouping (GQA | MHA)
+and sampling mode (greedy | seeded top-p).
+"""
 import os
 
 # Tests run single-device; ONLY launch/dryrun.py sets the 512-device flag.
@@ -6,3 +14,164 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import copy  # noqa: E402
+import dataclasses  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+# reduced() keeps each source arch's head grouping: llama3.2-3b reduces to
+# 4 query / 2 kv heads (GQA), qwen1.5-4b to 4 / 4 (MHA)
+GQA_ARCH = "llama3.2-3b"
+MHA_ARCH = "qwen1.5-4b"
+SSM_ARCH = "mamba2-130m"
+
+
+@pytest.fixture(scope="session")
+def lm_factory():
+    """Session-cached tiny-model builder:
+    ``lm_factory(arch, seed=0, **cfg_overrides) -> (cfg, model, params)``.
+    Params for a given (arch, seed, overrides) are built once per test
+    session, so every module shares the same tiny models."""
+    from repro.configs import REGISTRY, reduced
+    from repro.models import make_model
+
+    cache = {}
+
+    def build(arch=GQA_ARCH, *, seed=0, **overrides):
+        key = (arch, seed, tuple(sorted(overrides.items())))
+        if key not in cache:
+            cfg = reduced(REGISTRY[arch])
+            if overrides:
+                cfg = dataclasses.replace(cfg, **overrides)
+            model = make_model(cfg)
+            cache[key] = (cfg, model,
+                          model.init_params(jax.random.PRNGKey(seed)))
+        return cache[key]
+
+    return build
+
+
+@pytest.fixture(scope="session")
+def llama(lm_factory):
+    """Reduced llama3.2-3b (attention family, GQA): (cfg, model, params)."""
+    return lm_factory(GQA_ARCH)
+
+
+@pytest.fixture(scope="session")
+def qwen(lm_factory):
+    """Reduced qwen1.5-4b (attention family, MHA): (cfg, model, params)."""
+    return lm_factory(MHA_ARCH)
+
+
+@pytest.fixture(scope="session")
+def mamba(lm_factory):
+    """Reduced mamba2-130m (SSM family): (cfg, model, params)."""
+    return lm_factory(SSM_ARCH)
+
+
+# -- axis fixtures (parameterize a test by requesting them) -------------------
+
+@pytest.fixture(params=["slots", "paged"])
+def backend(request):
+    """Engine cache backend under test."""
+    return request.param
+
+
+@pytest.fixture(params=["gqa", "mha"])
+def grouped_lm(request, lm_factory):
+    """Attention grouping axis: a GQA and an MHA tiny model."""
+    return lm_factory(GQA_ARCH if request.param == "gqa" else MHA_ARCH)
+
+
+@pytest.fixture(params=["greedy", "topp"])
+def sampling(request):
+    """Sampling-mode axis as SamplingParams kwargs."""
+    return dict(temperature=0.0) if request.param == "greedy" \
+        else dict(temperature=0.8, top_p=0.9)
+
+
+# -- builder fixtures ---------------------------------------------------------
+
+@pytest.fixture
+def engine_factory():
+    """``engine_factory(model, params, draft=(dm, dp), **cfg_overrides)``
+    -> ContinuousBatchingEngine (paged, 4 slots, page 16 by default)."""
+    from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+
+    def build(model, params, *, draft=None, **overrides):
+        kw = dict(max_slots=4, max_seq_len=128, backend="paged",
+                  page_size=16)
+        kw.update(overrides)
+        dm, dp = draft if draft is not None else (None, None)
+        return ContinuousBatchingEngine(model, params, EngineConfig(**kw),
+                                        draft_model=dm, draft_params=dp)
+
+    return build
+
+
+@pytest.fixture
+def request_factory():
+    """``request_factory(vocab, n=5, ...)`` -> list[InferenceRequest] with
+    ramped prompt lengths / token budgets (the decode-path workload), or
+    fixed prompts via ``prompts=[...]``."""
+    from repro.serving.request import InferenceRequest, SamplingParams
+
+    def build(vocab, n=5, plen=18, max_tokens=22, temperature=0.0,
+              top_p=1.0, stop=None, seed0=0, rng_seed=7, prompts=None,
+              ramp=True):
+        rng = np.random.default_rng(rng_seed)
+        out = []
+        if prompts is not None:
+            for i, p in enumerate(prompts):
+                out.append(InferenceRequest(
+                    model="m", prompt_tokens=list(p), request_id=f"r{i}",
+                    sampling=SamplingParams(
+                        max_tokens=max_tokens, temperature=temperature,
+                        top_p=top_p, seed=seed0 + i, stop_token=stop)))
+            return out
+        for i in range(n):
+            out.append(InferenceRequest(
+                model="m",
+                prompt_tokens=rng.integers(
+                    2, vocab, size=plen + (i if ramp else 0)).tolist(),
+                request_id=f"r{i}",
+                sampling=SamplingParams(
+                    max_tokens=max_tokens + (i if ramp else 0),
+                    temperature=temperature, top_p=top_p, seed=seed0 + i,
+                    stop_token=stop)))
+        return out
+
+    return build
+
+
+@pytest.fixture
+def run_engine():
+    """Feed deep-copied requests, run to completion, return
+    ``({request_id: (tokens, finish_reason)}, engine)``."""
+
+    def run(eng, reqs, *, expect_all=True):
+        for r in copy.deepcopy(reqs):
+            eng.add_request(r)
+        outs = eng.run_to_completion()
+        if expect_all:
+            assert len(outs) == len(reqs)
+        return {o.request_id: (o.output_tokens, o.finish_reason)
+                for o in outs}, eng
+
+    return run
+
+
+@pytest.fixture
+def shared_prefix_prompts():
+    """Prompt lists sharing a page-aligned leading block (prefix-cache
+    workload)."""
+
+    def build(vocab, n, n_shared=40, n_tail=24, seed=0):
+        rng = np.random.default_rng(seed)
+        shared = rng.integers(2, vocab, size=n_shared).tolist()
+        return [shared + rng.integers(2, vocab, size=n_tail).tolist()
+                for _ in range(n)]
+
+    return build

@@ -1,57 +1,21 @@
 """Fused decode fast path: the device-resident decode+sample+stop loop must
 be token-identical to the legacy host-driven path on both backends, across
 sampling modes, sync intervals, and every finish reason — and must never
-transfer logits to the host (the transfer-counting hook asserts it)."""
-import copy
+transfer logits to the host (the transfer-counting hook asserts it).
 
-import jax
+Model/engine/request builders come from tests/conftest.py."""
 import numpy as np
 import pytest
 
-from repro.configs import REGISTRY, reduced
-from repro.models import make_model
 from repro.serving import backends
-from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
-from repro.serving.request import InferenceRequest, SamplingParams
 
 
-@pytest.fixture(scope="module")
-def llama():
-    cfg = reduced(REGISTRY["llama3.2-3b"])
-    model = make_model(cfg)
-    return cfg, model, model.init_params(jax.random.PRNGKey(0))
-
-
-@pytest.fixture(scope="module")
-def mamba():
-    cfg = reduced(REGISTRY["mamba2-130m"])
-    model = make_model(cfg)
-    return cfg, model, model.init_params(jax.random.PRNGKey(0))
-
-
-def _reqs(vocab, n=5, plen=18, max_tokens=22, temperature=0.0, top_p=1.0,
-          stop=None, seed0=0):
-    rng = np.random.default_rng(7)
-    out = []
-    for i in range(n):
-        out.append(InferenceRequest(
-            model="m",
-            prompt_tokens=rng.integers(2, vocab, size=plen + i).tolist(),
-            request_id=f"r{i}",
-            sampling=SamplingParams(max_tokens=max_tokens + i,
-                                    temperature=temperature, top_p=top_p,
-                                    seed=seed0 + i, stop_token=stop)))
-    return out
-
-
-def _run(model, params, reqs, **cfg_kw):
-    eng = ContinuousBatchingEngine(model, params, EngineConfig(**cfg_kw))
-    for r in copy.deepcopy(reqs):
-        eng.add_request(r)
-    outs = eng.run_to_completion()
-    assert len(outs) == len(reqs)
-    return {o.request_id: (o.output_tokens, o.finish_reason)
-            for o in outs}, eng
+@pytest.fixture
+def run(engine_factory, run_engine):
+    def _run(model, params, reqs, **cfg_kw):
+        eng = engine_factory(model, params, **cfg_kw)
+        return run_engine(eng, reqs)
+    return _run
 
 
 # ---------------------------------------------------------------------------
@@ -59,31 +23,29 @@ def _run(model, params, reqs, **cfg_kw):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("backend", ["slots", "paged"])
-@pytest.mark.parametrize("sampling", ["greedy", "topp"])
-def test_fused_matches_legacy(llama, backend, sampling):
+def test_fused_matches_legacy(llama, backend, sampling, request_factory,
+                              run):
     cfg, model, params = llama
     kw = dict(max_slots=3, max_seq_len=96, backend=backend, page_size=16)
-    samp = dict(temperature=0.0) if sampling == "greedy" else \
-        dict(temperature=0.8, top_p=0.9)
-    reqs = _reqs(cfg.vocab_size, **samp)
-    ref, _ = _run(model, params, reqs, fused_decode=False, **kw)
+    reqs = request_factory(cfg.vocab_size, **sampling)
+    ref, _ = run(model, params, reqs, fused_decode=False, **kw)
     for K in (1, 4):
-        got, _ = _run(model, params, reqs, fused_decode=True,
-                      decode_steps_per_sync=K, **kw)
+        got, _ = run(model, params, reqs, fused_decode=True,
+                     decode_steps_per_sync=K, **kw)
         assert got == ref, f"K={K} diverged from legacy"
 
 
-def test_fused_matches_legacy_ssm_backend(mamba):
+def test_fused_matches_legacy_ssm_backend(mamba, request_factory, run):
     cfg, model, params = mamba
     kw = dict(max_slots=2, max_seq_len=64, backend="slots")
-    reqs = _reqs(cfg.vocab_size, n=3, temperature=0.6, top_p=0.95)
-    ref, _ = _run(model, params, reqs, fused_decode=False, **kw)
-    got, _ = _run(model, params, reqs, fused_decode=True,
-                  decode_steps_per_sync=4, **kw)
+    reqs = request_factory(cfg.vocab_size, n=3, temperature=0.6, top_p=0.95)
+    ref, _ = run(model, params, reqs, fused_decode=False, **kw)
+    got, _ = run(model, params, reqs, fused_decode=True,
+                 decode_steps_per_sync=4, **kw)
     assert got == ref
 
 
-def test_fused_mid_loop_stop_token_exit(llama):
+def test_fused_mid_loop_stop_token_exit(llama, request_factory, run):
     """A stop token landing mid-K must truncate at exactly the same token
     as the per-step path (the device loop freezes the slot, the host
     reports reason='stop')."""
@@ -93,8 +55,8 @@ def test_fused_mid_loop_stop_token_exit(llama):
     # random model falls into short cycles, which would put the stop
     # token's first occurrence at position 0/1)
     samp = dict(max_tokens=24, temperature=0.9, top_p=0.95)
-    probe = _reqs(cfg.vocab_size, n=1, **samp)
-    ref, _ = _run(model, params, probe, fused_decode=False, **kw)
+    probe = request_factory(cfg.vocab_size, n=1, **samp)
+    ref, _ = run(model, params, probe, fused_decode=False, **kw)
     toks, reason = ref["r0"]
     assert reason == "length"
     first = {}
@@ -106,10 +68,10 @@ def test_fused_mid_loop_stop_token_exit(llama):
     if not cands:
         cands = sorted((j, t) for t, j in first.items() if j >= 1)
     j0, stop = cands[0]
-    reqs = _reqs(cfg.vocab_size, n=2, stop=stop, **samp)
-    ref_s, _ = _run(model, params, reqs, fused_decode=False, **kw)
-    got_s, _ = _run(model, params, reqs, fused_decode=True,
-                    decode_steps_per_sync=5, **kw)
+    reqs = request_factory(cfg.vocab_size, n=2, stop=stop, **samp)
+    ref_s, _ = run(model, params, reqs, fused_decode=False, **kw)
+    got_s, _ = run(model, params, reqs, fused_decode=True,
+                   decode_steps_per_sync=5, **kw)
     assert got_s == ref_s
     assert got_s["r0"][1] == "stop"
     assert got_s["r0"][0][-1] == stop
@@ -117,36 +79,36 @@ def test_fused_mid_loop_stop_token_exit(llama):
 
 
 @pytest.mark.parametrize("backend", ["slots", "paged"])
-def test_fused_max_tokens_and_seq_len_exits(llama, backend):
+def test_fused_max_tokens_and_seq_len_exits(llama, backend, request_factory,
+                                            run):
     cfg, model, params = llama
     kw = dict(max_slots=2, max_seq_len=26, backend=backend, page_size=16)
     # r0 (prompt 16, max_tokens 8) exits on max_tokens; r2 (prompt 18,
     # max_tokens 10) runs out of sequence room first: 26 - 18 = 8 < 10
-    reqs = _reqs(cfg.vocab_size, n=3, plen=16, max_tokens=8)
-    ref, _ = _run(model, params, reqs, fused_decode=False, **kw)
-    got, _ = _run(model, params, reqs, fused_decode=True,
-                  decode_steps_per_sync=16, **kw)
+    reqs = request_factory(cfg.vocab_size, n=3, plen=16, max_tokens=8)
+    ref, _ = run(model, params, reqs, fused_decode=False, **kw)
+    got, _ = run(model, params, reqs, fused_decode=True,
+                 decode_steps_per_sync=16, **kw)
     assert got == ref
     reasons = {rid: r for rid, (_, r) in got.items()}
     assert reasons["r0"] == "length"
     assert "max_seq_len" in reasons.values()
 
 
-def test_fused_composes_with_chunked_prefill_and_prefix_cache(llama):
+def test_fused_composes_with_chunked_prefill_and_prefix_cache(
+        llama, request_factory, run):
     cfg, model, params = llama
     kw = dict(max_slots=3, max_seq_len=128, backend="paged", page_size=16,
               chunked_prefill_budget=24, enable_prefix_cache=True)
     rng = np.random.default_rng(3)
     shared = rng.integers(2, cfg.vocab_size, size=32).tolist()
-    reqs = []
-    for i in range(5):
-        tail = rng.integers(2, cfg.vocab_size, size=10).tolist()
-        reqs.append(InferenceRequest(
-            model="m", prompt_tokens=shared + tail, request_id=f"r{i}",
-            sampling=SamplingParams(max_tokens=16, temperature=0.0)))
-    ref, er = _run(model, params, reqs, fused_decode=False, **kw)
-    got, eg = _run(model, params, reqs, fused_decode=True,
-                   decode_steps_per_sync=8, **kw)
+    prompts = [shared + rng.integers(2, cfg.vocab_size, size=10).tolist()
+               for _ in range(5)]
+    reqs = request_factory(cfg.vocab_size, prompts=prompts, max_tokens=16,
+                           seed0=0)
+    ref, er = run(model, params, reqs, fused_decode=False, **kw)
+    got, eg = run(model, params, reqs, fused_decode=True,
+                  decode_steps_per_sync=8, **kw)
     assert got == ref
     assert eg.cache_stats()["hit_tokens"] == er.cache_stats()["hit_tokens"]
     # chunked prefill actually interleaved (several chunks per admit)
@@ -158,20 +120,21 @@ def test_fused_composes_with_chunked_prefill_and_prefix_cache(llama):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("backend", ["slots", "paged"])
-def test_fused_path_transfers_no_logits(llama, backend):
+def test_fused_path_transfers_no_logits(llama, backend, request_factory,
+                                        run):
     cfg, model, params = llama
     kw = dict(max_slots=2, max_seq_len=64, backend=backend, page_size=16)
-    reqs = _reqs(cfg.vocab_size, n=3, max_tokens=12)
+    reqs = request_factory(cfg.vocab_size, n=3, max_tokens=12)
 
     backends.reset_transfer_stats()
-    _, eng = _run(model, params, reqs, fused_decode=True,
-                  decode_steps_per_sync=4, **kw)
+    _, eng = run(model, params, reqs, fused_decode=True,
+                 decode_steps_per_sync=4, **kw)
     assert backends.TRANSFER_STATS["decode_logits_transfers"] == 0
     assert backends.TRANSFER_STATS["decode_logits_bytes"] == 0
     assert eng.stats["decode_tokens"] > 0
 
     backends.reset_transfer_stats()
-    _, eng = _run(model, params, reqs, fused_decode=False, **kw)
+    _, eng = run(model, params, reqs, fused_decode=False, **kw)
     # legacy path pays one (max_slots, V) logits transfer per decode sync
     assert backends.TRANSFER_STATS["decode_logits_transfers"] == \
         eng.stats["decode_syncs"]
@@ -179,33 +142,33 @@ def test_fused_path_transfers_no_logits(llama, backend):
         eng.stats["decode_syncs"] * kw["max_slots"] * cfg.vocab_size * 4
 
 
-def test_multi_step_syncs_once_per_k_tokens(llama):
+def test_multi_step_syncs_once_per_k_tokens(llama, request_factory, run):
     """Steady state (no prefills in flight, stable composition): the host
     syncs once per K tokens, not per token."""
     cfg, model, params = llama
     kw = dict(max_slots=2, max_seq_len=96, backend="paged", page_size=16)
-    reqs = _reqs(cfg.vocab_size, n=2, plen=12, max_tokens=33)
+    reqs = request_factory(cfg.vocab_size, n=2, plen=12, max_tokens=33)
 
-    _, e1 = _run(model, params, reqs, fused_decode=True,
-                 decode_steps_per_sync=1, **kw)
-    _, e8 = _run(model, params, reqs, fused_decode=True,
-                 decode_steps_per_sync=8, **kw)
+    _, e1 = run(model, params, reqs, fused_decode=True,
+                decode_steps_per_sync=1, **kw)
+    _, e8 = run(model, params, reqs, fused_decode=True,
+                decode_steps_per_sync=8, **kw)
     assert e1.stats["decode_tokens"] == e8.stats["decode_tokens"]
     # K=8 must use several-fold fewer syncs (admission/finish steps still
     # fall back to K=1 by design)
     assert e8.stats["decode_syncs"] * 3 < e1.stats["decode_syncs"]
 
 
-def test_multi_step_keeps_k_under_saturation(llama):
+def test_multi_step_keeps_k_under_saturation(llama, request_factory, run):
     """A waiting backlog (slots full, queue forming) must NOT clamp K:
     queued requests can only admit at a sync boundary anyway, and the
     saturated regime is exactly where the multi-step win matters."""
     cfg, model, params = llama
     kw = dict(max_slots=2, max_seq_len=96, backend="paged", page_size=16)
-    reqs = _reqs(cfg.vocab_size, n=5, plen=12, max_tokens=24)
-    ref, e1 = _run(model, params, reqs, fused_decode=False, **kw)
-    got, e8 = _run(model, params, reqs, fused_decode=True,
-                   decode_steps_per_sync=8, **kw)
+    reqs = request_factory(cfg.vocab_size, n=5, plen=12, max_tokens=24)
+    ref, e1 = run(model, params, reqs, fused_decode=False, **kw)
+    got, e8 = run(model, params, reqs, fused_decode=True,
+                  decode_steps_per_sync=8, **kw)
     assert got == ref
     assert e8.stats["decode_syncs"] * 2 < e1.stats["decode_syncs"]
 
@@ -215,6 +178,7 @@ def test_multi_step_keeps_k_under_saturation(llama):
 # ---------------------------------------------------------------------------
 
 def test_sim_engine_decode_steps_per_sync():
+    from repro.configs import REGISTRY
     from repro.core.clock import EventLoop
     from repro.core.instances import SimEngine, SimRequest
     from repro.serving.costmodel import InstanceCost

@@ -1,0 +1,51 @@
+"""Cross-backend parity matrix: dense vs paged x greedy vs seeded top-p x
+MHA vs GQA x speculative on/off.
+
+One reference stream per (model, sampling) cell — the dense backend's
+legacy host-driven path — and every other combination must reproduce it
+token-for-token: the cache layout, the fused device loop, and the
+draft-and-verify round are all optimizations of the SAME sampler, never
+samplers of their own. Fused/speculative runs must also complete without a
+single device->host logits transfer (the PR 2 ``TRANSFER_STATS`` hook).
+"""
+import pytest
+
+from repro.serving import backends
+
+KW = dict(max_slots=3, max_seq_len=64, page_size=16)
+_REF = {}        # (arch, sampling) -> legacy dense reference stream
+
+
+@pytest.mark.parametrize("spec", [0, 3], ids=["spec-off", "spec-on"])
+def test_backend_sampling_grouping_spec_matrix(grouped_lm, sampling, spec,
+                                               backend, engine_factory,
+                                               request_factory, run_engine):
+    cfg, model, params = grouped_lm
+    kw = dict(KW)
+    reqs = request_factory(cfg.vocab_size, n=3, plen=12, max_tokens=10,
+                           **sampling)
+
+    # reference: dense backend, legacy host-driven decode (no fusion) —
+    # computed once per (model, sampling) cell and shared across the
+    # backend/spec axes
+    ref_key = (cfg.name, tuple(sorted(sampling.items())))
+    if ref_key not in _REF:
+        ref_eng = engine_factory(model, params, backend="slots",
+                                 fused_decode=False, **kw)
+        _REF[ref_key], _ = run_engine(ref_eng, reqs)
+    ref = _REF[ref_key]
+
+    backends.reset_transfer_stats()
+    eng = engine_factory(
+        model, params, backend=backend, spec_tokens=spec,
+        draft=(model, params) if spec else None,
+        decode_steps_per_sync=1 if spec else 4, **kw)
+    got, eng = run_engine(eng, reqs)
+    assert got == ref, (
+        f"{backend} spec={spec} diverged from the dense legacy reference")
+    # the device-resident paths never ship logits to the host
+    assert backends.TRANSFER_STATS["decode_logits_transfers"] == 0
+    assert backends.TRANSFER_STATS["decode_logits_bytes"] == 0
+    if spec:
+        assert eng.stats["spec_rounds"] > 0
+        assert eng.spec_acceptance_rate() > 0.5   # draft == target

@@ -1,13 +1,14 @@
 """Regression locks for the §Perf optimizations: the optimized code paths
 must stay numerically equivalent to their reference formulations, and the
-HLO analyzer must keep counting loop trips exactly."""
+HLO analyzer must keep counting loop trips exactly.
+
+Tiny models come from the session-scoped builders in tests/conftest.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import REGISTRY, reduced
-from repro.models import make_model
 from repro.models.layers import (decode_attention, decode_attention_appended)
 from repro.models.moe import init_moe, moe_ffn
 
@@ -147,13 +148,11 @@ def test_hlo_analysis_traffic_slice_aware():
     assert t < 32 * 1024, t
 
 
-def test_chunked_ce_matches_full_loss():
+def test_chunked_ce_matches_full_loss(mamba):
     """Blockwise cross-entropy (§Perf, big-vocab train cells) must match the
     full-logit loss and its gradients."""
     from repro.distributed.hints import ShardingHints, use_hints
-    cfg = reduced(REGISTRY["mamba2-130m"])
-    model = make_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    cfg, model, params = mamba
     key = jax.random.PRNGKey(1)
     batch = {
         "tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),

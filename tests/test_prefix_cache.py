@@ -4,48 +4,30 @@ The contract under test: turning on block-level KV reuse and/or chunked
 prefill must never change WHAT the engine generates — only how much prefill
 compute it spends and how it is scheduled. Greedy (temperature=0) outputs
 are therefore compared token-for-token against the cold one-shot baseline.
+
+Model/engine/request builders come from tests/conftest.py.
 """
-import jax
 import numpy as np
 import pytest
 
-from repro.configs import REGISTRY, reduced
-from repro.models import make_model
-from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
 from repro.serving.kv_cache import OutOfPages, PagedKVCache
 from repro.serving.request import InferenceRequest, SamplingParams
 
 PAGE = 16
 
 
-@pytest.fixture(scope="module")
-def lm():
-    cfg = reduced(REGISTRY["llama3.2-3b"])
-    model = make_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    return cfg, model, params
+@pytest.fixture
+def run_prompts(engine_factory, request_factory, run_engine):
+    """Greedy outputs for a list of prompts: (outputs dict, engine)."""
 
+    def _run(model, params, prompts, max_tokens=8, **cfg_kw):
+        eng = engine_factory(model, params, **cfg_kw)
+        reqs = request_factory(0, prompts=prompts, max_tokens=max_tokens,
+                               seed0=0)
+        outs, eng = run_engine(eng, reqs)
+        return {rid: toks for rid, (toks, _) in outs.items()}, eng
 
-def _engine(model, params, **overrides):
-    kw = dict(max_slots=4, max_seq_len=128, backend="paged", page_size=PAGE)
-    kw.update(overrides)
-    return ContinuousBatchingEngine(model, params, EngineConfig(**kw))
-
-
-def _run(eng, prompts, max_tokens=8):
-    for i, p in enumerate(prompts):
-        eng.add_request(InferenceRequest(
-            model="m", prompt_tokens=list(p), request_id=f"r{i}",
-            sampling=SamplingParams(max_tokens=max_tokens, temperature=0.0)))
-    outs = eng.run_to_completion()
-    return {o.request_id: o.output_tokens for o in outs}
-
-
-def _shared_prefix_prompts(vocab, n, n_shared=40, n_tail=24, seed=0):
-    rng = np.random.default_rng(seed)
-    shared = rng.integers(2, vocab, size=n_shared).tolist()
-    return [shared + rng.integers(2, vocab, size=n_tail).tolist()
-            for _ in range(n)]
+    return _run
 
 
 # ---------------------------------------------------------------------------
@@ -115,83 +97,105 @@ def test_out_of_pages_still_raises():
         kv.allocate("b", PAGE)
 
 
+def test_rollback_to_truncates_and_keeps_pages():
+    """Speculative truncate-on-reject: lengths shrink, the block table (the
+    pages) stays — rejected positions become write headroom again."""
+    kv = PagedKVCache(16, PAGE)
+    kv.allocate("a", PAGE + 4)
+    for _ in range(6):
+        kv.append_token("a")
+    pages = list(kv._tables["a"])
+    v0 = kv.table_version
+    kv.rollback_to("a", PAGE + 7)
+    assert kv.length("a") == PAGE + 7
+    assert kv._tables["a"] == pages
+    assert kv.table_version > v0            # device lens must be re-uploaded
+    kv.rollback_to("a", PAGE + 7)           # no-op: no version churn
+    assert kv.table_version == v0 + 1
+    with pytest.raises(AssertionError):
+        kv.rollback_to("a", PAGE + 8)       # cannot roll forward
+
+
 # ---------------------------------------------------------------------------
 # end-to-end output equivalence (the real invariant)
 # ---------------------------------------------------------------------------
 
-def test_prefix_reuse_outputs_match_cold_start(lm):
-    cfg, model, params = lm
-    prompts = _shared_prefix_prompts(cfg.vocab_size, 6)
-    cold = _run(_engine(model, params), prompts)
-    eng = _engine(model, params, enable_prefix_cache=True)
-    warm = _run(eng, prompts)
+def test_prefix_reuse_outputs_match_cold_start(llama, shared_prefix_prompts,
+                                               run_prompts):
+    cfg, model, params = llama
+    prompts = shared_prefix_prompts(cfg.vocab_size, 6)
+    cold, _ = run_prompts(model, params, prompts)
+    warm, eng = run_prompts(model, params, prompts,
+                            enable_prefix_cache=True)
     assert warm == cold
     assert eng.stats["cached_prompt_tokens"] > 0        # reuse actually fired
     assert eng.cache_stats()["hit_rate"] > 0.3
 
 
-def test_cow_divergence_outputs_match(lm):
+def test_cow_divergence_outputs_match(llama, run_prompts):
     """Page-aligned identical prompts force the full-prefix-hit + COW path;
     generations diverge afterwards (different seeds via step index) yet must
     match the cold baseline exactly."""
-    cfg, model, params = lm
+    cfg, model, params = llama
     rng = np.random.default_rng(7)
     p = rng.integers(2, cfg.vocab_size, size=2 * PAGE).tolist()
     prompts = [p, p, p]
-    cold = _run(_engine(model, params), prompts, max_tokens=6)
-    eng = _engine(model, params, enable_prefix_cache=True)
-    warm = _run(eng, prompts, max_tokens=6)
+    cold, _ = run_prompts(model, params, prompts, max_tokens=6)
+    warm, eng = run_prompts(model, params, prompts, max_tokens=6,
+                            enable_prefix_cache=True)
     assert warm == cold
     assert eng.cache_stats()["cow_copies"] >= 1
 
 
-def test_lru_eviction_under_page_pressure_end_to_end(lm):
-    cfg, model, params = lm
+def test_lru_eviction_under_page_pressure_end_to_end(llama, run_prompts):
+    cfg, model, params = llama
     rng = np.random.default_rng(3)
     prompts = [rng.integers(2, cfg.vocab_size, size=2 * PAGE).tolist()
                for _ in range(6)]
     # pool sized for ~2 sequences: later admissions must evict parked pages
-    eng = _engine(model, params, max_slots=2, num_pages=9,
-                  enable_prefix_cache=True)
-    warm = _run(eng, prompts, max_tokens=4)
-    cold = _run(_engine(model, params, max_slots=2, num_pages=9), prompts,
-                max_tokens=4)
+    warm, eng = run_prompts(model, params, prompts, max_tokens=4,
+                            max_slots=2, num_pages=9,
+                            enable_prefix_cache=True)
+    cold, _ = run_prompts(model, params, prompts, max_tokens=4,
+                          max_slots=2, num_pages=9)
     assert warm == cold
     assert eng.cache_stats()["evictions"] > 0
     assert eng.backend.kv.free_pages == 8               # nothing leaked
 
 
 @pytest.mark.parametrize("backend", ["paged", "slots"])
-def test_chunked_prefill_matches_one_shot(lm, backend):
-    cfg, model, params = lm
+def test_chunked_prefill_matches_one_shot(llama, backend, run_prompts):
+    cfg, model, params = llama
     rng = np.random.default_rng(5)
     prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
                for n in (24, 40, 33, 17)]
-    one_shot = _run(_engine(model, params, backend=backend), prompts)
-    eng = _engine(model, params, backend=backend, chunked_prefill_budget=16)
-    chunked = _run(eng, prompts)
+    one_shot, _ = run_prompts(model, params, prompts, backend=backend)
+    chunked, eng = run_prompts(model, params, prompts, backend=backend,
+                               chunked_prefill_budget=16)
     assert chunked == one_shot
     # prompts longer than the budget really did span multiple chunks
     assert eng.stats["prefill_chunks"] > len(prompts)
 
 
-def test_chunked_prefill_with_prefix_cache(lm):
-    cfg, model, params = lm
-    prompts = _shared_prefix_prompts(cfg.vocab_size, 5, seed=11)
-    cold = _run(_engine(model, params), prompts)
-    eng = _engine(model, params, enable_prefix_cache=True,
-                  chunked_prefill_budget=16)
-    both = _run(eng, prompts)
+def test_chunked_prefill_with_prefix_cache(llama, shared_prefix_prompts,
+                                           run_prompts):
+    cfg, model, params = llama
+    prompts = shared_prefix_prompts(cfg.vocab_size, 5, seed=11)
+    cold, _ = run_prompts(model, params, prompts)
+    both, eng = run_prompts(model, params, prompts,
+                            enable_prefix_cache=True,
+                            chunked_prefill_budget=16)
     assert both == cold
     assert eng.stats["cached_prompt_tokens"] > 0
 
 
-def test_chunked_prefill_interleaves_decode(lm):
+def test_chunked_prefill_interleaves_decode(llama, engine_factory):
     """While a long prompt ingests chunk-by-chunk, already-running sequences
     keep producing a token every step."""
-    cfg, model, params = lm
+    cfg, model, params = llama
     rng = np.random.default_rng(9)
-    eng = _engine(model, params, chunked_prefill_budget=8, max_seq_len=256)
+    eng = engine_factory(model, params, chunked_prefill_budget=8,
+                         max_seq_len=256)
     eng.add_request(InferenceRequest(
         model="m", prompt_tokens=rng.integers(2, cfg.vocab_size,
                                               size=8).tolist(),

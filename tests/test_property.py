@@ -212,6 +212,206 @@ def test_sharding_specs_always_divide():
 # ---------------------------------------------------------------------------
 
 
+class _EP:
+    """Stub endpoint with controllable hot/free/hosts state."""
+
+    def __init__(self, hot, free, hosts=True, need=1):
+        self._hot = hot
+        self._free = free
+        self._hosts = hosts
+        self.deployments = {"m": type("D", (), {
+            "nodes_per_instance": need})()}
+        self.scheduler = type("S", (), {
+            "available_nodes": lambda s=None, f=free: f})()
+
+    def hosts(self, model):
+        return self._hosts
+
+    def model_states(self, model):
+        return ["running"] if self._hot else []
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_federation_never_returns_unhealthy_under_flaps(data):
+    """Random endpoint states + random health flaps: select_endpoint NEVER
+    returns an unhealthy (or non-hosting) endpoint, and within the healthy
+    candidates it follows the §4.5 priority rules in registry order."""
+    from repro.core.federation import FederationError, FederationRouter
+
+    n = data.draw(st.integers(1, 5))
+    ids = [f"e{i}" for i in range(n)]
+    eps = {e: _EP(hot=data.draw(st.booleans(), label=f"hot_{e}"),
+                  free=data.draw(st.integers(0, 3), label=f"free_{e}"),
+                  hosts=data.draw(st.booleans(), label=f"hosts_{e}"))
+           for e in ids}
+    order = data.draw(st.permutations(ids))
+    router = FederationRouter(eps, {"m": order})
+    for _ in range(data.draw(st.integers(1, 6))):
+        flap = data.draw(st.sampled_from(ids))
+        router.set_healthy(flap, data.draw(st.booleans()))
+        healthy = [e for e in order
+                   if router._healthy.get(e, False) and eps[e]._hosts]
+        if not healthy:
+            with pytest.raises(FederationError):
+                router.select_endpoint("m")
+            continue
+        choice = router.select_endpoint("m")
+        assert choice in healthy                      # never unhealthy/dead
+        rule = router.decisions[-1][2]
+        hot = [e for e in healthy if eps[e]._hot]
+        free = [e for e in healthy if eps[e]._free >= 1]
+        if hot:
+            # rule 1 wins, at the FIRST hot endpoint in registry order
+            assert (choice, rule) == (hot[0], "active-instance")
+        elif free:
+            assert (choice, rule) == (free[0], "free-nodes")
+        else:
+            assert (choice, rule) == (healthy[0], "configured-order")
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_scheduler_never_loses_or_double_starts_jobs(data):
+    """Random submit/release/cancel/fail/restore/advance orderings: every
+    job starts at most once, nodes are conserved (free + held + down
+    partition the cluster), and no job is lost — each submitted job is
+    always queued, started, or terminally ended/failed/cancelled."""
+    from repro.core.scheduler import ClusterScheduler, JobState
+
+    num_nodes = data.draw(st.integers(1, 6))
+    loop = EventLoop(VirtualClock())
+    sched = ClusterScheduler(loop, "c", num_nodes,
+                             startup_delay=data.draw(
+                                 st.sampled_from([0.0, 1.0, 5.0])),
+                             backfill=data.draw(st.booleans()))
+    started: dict[int, int] = {}
+    terminal: set[int] = set()
+    jobs = []
+
+    def on_start(job):
+        started[job.job_id] = started.get(job.job_id, 0) + 1
+        assert job.job_id not in terminal, "started after ending"
+
+    for i in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.sampled_from(
+            ["submit", "release", "cancel", "fail", "restore", "advance"]))
+        if op == "submit":
+            jobs.append(sched.submit(
+                data.draw(st.integers(1, max(num_nodes, 1))), on_start,
+                walltime=data.draw(st.sampled_from([None, 2.0, 10.0]))))
+        elif op == "release" and jobs:
+            sched.release(data.draw(st.sampled_from(jobs)))
+        elif op == "cancel" and jobs:
+            sched.cancel(data.draw(st.sampled_from(jobs)))
+        elif op == "fail":
+            sched.fail_node(data.draw(st.integers(0, num_nodes - 1)))
+        elif op == "restore":
+            sched.restore_node(data.draw(st.integers(0, num_nodes - 1)))
+        else:
+            loop.run_until(loop.now() + data.draw(
+                st.sampled_from([0.5, 1.0, 7.0])))
+        # no double start
+        assert all(v == 1 for v in started.values())
+        # node conservation: free / held-by-live-jobs / down partition
+        free = set(sched._free_nodes)
+        held = [n for j in sched.jobs.values() for n in j.nodes]
+        down = set(sched._down_nodes)
+        assert len(held) == len(set(held))            # no node held twice
+        assert free.isdisjoint(held) and free.isdisjoint(down)
+        assert down.isdisjoint(held)
+        assert len(free) + len(held) + len(down) == num_nodes
+        # no job lost: every job is queued, holding nodes, or terminal —
+        # and terminal is TERMINAL (no resurrection out of ended/failed)
+        for j in jobs:
+            if j.state in (JobState.ENDED, JobState.FAILED):
+                assert not j.nodes
+                assert j not in sched._queue
+                terminal.add(j.job_id)
+            else:
+                assert j.job_id not in terminal, "left a terminal state"
+                if j.state == JobState.QUEUED:
+                    assert j in sched._queue
+                else:
+                    assert j.state in (JobState.STARTING, JobState.RUNNING)
+                    assert len(j.nodes) == j.num_nodes
+    # drain: restore the cluster and keep releasing running jobs — every
+    # job must reach a terminal state with at most one start (nothing is
+    # lost in the queue, nothing started twice)
+    for n_id in list(sched._down_nodes):
+        sched.restore_node(n_id)
+    for _ in range(len(jobs) + 1):
+        loop.run_until(loop.now() + 100.0)
+        for j in jobs:
+            if j.state in (JobState.STARTING, JobState.RUNNING):
+                sched.release(j)
+    loop.run_until(loop.now() + 100.0)
+    for j in jobs:
+        assert j.state in (JobState.ENDED, JobState.FAILED)
+        assert started.get(j.job_id, 0) <= 1
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_autoscaler_caps_cooldown_and_gating(data):
+    """AutoScaler can never over-provision: no scale-up beyond
+    max_instances, none without free nodes, none inside the cooldown
+    window, and none while the first instance is still cold — so a random
+    event ordering can never double-start instances for the same signal."""
+    from repro.core.autoscale import AutoScalePolicy, AutoScaler
+
+    class _Eng:
+        def __init__(self, queued, sat):
+            self.queue_depth = queued
+            self._sat = sat
+
+        def saturated(self):
+            return self._sat
+
+    class _Inst:
+        def __init__(self, state, queued, sat):
+            self.alive = state in ("queued", "starting", "running")
+            self.state = type("S", (), {"value": state})()
+            self.engine = _Eng(queued, sat)
+            self._pending = []
+
+    pol = AutoScalePolicy(max_instances=data.draw(st.integers(1, 4)),
+                          queue_threshold=data.draw(st.integers(1, 6)),
+                          cooldown=data.draw(st.sampled_from([5.0, 30.0])))
+    loop = EventLoop(VirtualClock())
+    scaler = AutoScaler(loop, pol)
+    instances = []
+    for _ in range(data.draw(st.integers(1, 30))):
+        op = data.draw(st.sampled_from(
+            ["spawn", "kill", "check", "advance"]))
+        if op == "spawn":
+            instances.append(_Inst(
+                data.draw(st.sampled_from(
+                    ["queued", "starting", "running", "released"])),
+                data.draw(st.integers(0, 10)), data.draw(st.booleans())))
+        elif op == "kill" and instances:
+            data.draw(st.sampled_from(instances)).alive = False
+        elif op == "advance":
+            loop.run_until(loop.now() + data.draw(
+                st.sampled_from([1.0, 10.0, 60.0])))
+        else:
+            free = data.draw(st.integers(0, 8))
+            need = data.draw(st.integers(1, 4))
+            up = scaler.should_scale_up("m", instances, free, need)
+            alive = [i for i in instances if i.alive]
+            hot = [i for i in alive if i.state.value == "running"]
+            if up:
+                assert len(alive) < pol.max_instances     # admin cap holds
+                assert free >= need                       # capacity exists
+                assert hot                                # first one is hot
+                last = scaler._last_scale.get("m", -1e18)
+                assert loop.now() - last >= pol.cooldown  # outside cooldown
+                scaler.record_scale("m", len(alive) + 1)
+                # immediately re-asking within the same instant must gate
+                assert not scaler.should_scale_up("m", instances, free,
+                                                  need)
+
+
 @given(free_a=st.integers(0, 4), free_b=st.integers(0, 4),
        hot_a=st.booleans(), hot_b=st.booleans())
 @settings(max_examples=30, deadline=None)
