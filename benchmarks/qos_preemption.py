@@ -1,0 +1,300 @@
+"""QoS scheduling benchmark (real engine, CPU, reduced config).
+
+Interactive latency under a saturating batch-class background flood, for
+three scheduling configurations of the SAME engine:
+
+* ``fcfs``            — the legacy single queue: interactive requests sit
+                        behind every queued batch request.
+* ``priority``        — interactive admits before queued batch work, but
+                        still waits for a running batch sequence to free a
+                        slot.
+* ``priority+preempt``— a blocked interactive arrival evicts a running
+                        batch sequence (its pages are published to the
+                        prefix cache and freed); the victim restores later
+                        by recompute-via-prefix-cache, so its work is not
+                        lost.
+
+The flood keeps every slot busy for the whole run, so interactive TTFT
+under FCFS measures the batch drain time — the pathology the scheduler
+refactor exists to fix. Acceptance (full mode): priority+preempt improves
+interactive p99 TTFT by >= 2x over FCFS while keeping total token
+throughput within 10%.
+
+Writes ``results/benchmarks/qos_preemption.json`` (smoke/fast runs write
+``qos_preemption.fast.json`` and relax the gates for shared CI runners).
+``python -m benchmarks.run --only qos_preemption`` or run directly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, print_table
+from repro.configs import REGISTRY, reduced
+from repro.models import make_model
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.request import InferenceRequest, SamplingParams
+
+ARCH = "llama3.2-3b"
+PAGE = 16
+SLOTS = 4
+OUT_PATH = os.path.join("results", "benchmarks", "qos_preemption.json")
+
+MODES = [
+    ("fcfs", dict(scheduling_policy="fcfs", enable_preemption=False)),
+    ("priority", dict(scheduling_policy="priority",
+                      enable_preemption=False)),
+    ("priority+preempt", dict(scheduling_policy="priority",
+                              enable_preemption=True)),
+]
+
+
+def _requests(vocab, *, n_batch, batch_gen, n_interactive, interactive_gen,
+              seed=0):
+    rng = np.random.default_rng(seed)
+    batch = [InferenceRequest(
+        model=ARCH, qos="batch",
+        prompt_tokens=rng.integers(2, vocab, size=32).tolist(),
+        request_id=f"b{i}",
+        sampling=SamplingParams(max_tokens=batch_gen, temperature=0.0))
+        for i in range(n_batch)]
+    interactive = [InferenceRequest(
+        model=ARCH, qos="interactive",
+        prompt_tokens=rng.integers(2, vocab, size=24).tolist(),
+        request_id=f"i{i}",
+        sampling=SamplingParams(max_tokens=interactive_gen, temperature=0.0))
+        for i in range(n_interactive)]
+    return batch, interactive
+
+
+def _mk_engine(model, params, max_seq, mode_kw):
+    # page pool sized at 2x the slot working set so a preempted victim's
+    # published pages can PARK in the prefix-cache LRU instead of being
+    # evicted by the very admission that displaced it — that headroom is
+    # what makes restore-via-prefix-cache near-free; chunked prefill keeps
+    # restore prefills from stalling the decode batch (bounded ITL)
+    pages_per_seq = -(-max_seq // PAGE)
+    cfg = EngineConfig(max_slots=SLOTS, max_seq_len=max_seq,
+                       backend="paged", page_size=PAGE,
+                       num_pages=2 * SLOTS * pages_per_seq + 1,
+                       chunked_prefill_budget=32,
+                       enable_prefix_cache=True, **mode_kw)
+    return ContinuousBatchingEngine(model, params, cfg)
+
+
+def _drive(eng, batch, interactive, arrive_every):
+    """Batch flood lands at t=0; one interactive request joins every
+    ``arrive_every`` engine steps. Returns wall time plus per-class TTFT
+    and interactive inter-token delivery gaps (both wall-clock seconds)."""
+    import copy
+    for r in copy.deepcopy(batch):
+        eng.add_request(r)
+    pending = list(copy.deepcopy(interactive))
+    ttft = {"batch": [], "interactive": []}
+    itl = []
+    seen: dict[str, int] = {}
+    last: dict[str, float] = {}
+    total_tokens = 0
+    steps = 0
+    t0 = time.perf_counter()
+    while eng.has_work() or pending:
+        # interactive arrivals start only after the flood has saturated
+        # the slots (steps > 0), one every ``arrive_every`` steps
+        if pending and steps > 0 and steps % arrive_every == 0:
+            eng.add_request(pending.pop(0))
+        fin = eng.step()
+        steps += 1
+        now = time.perf_counter()
+        live = {rid: (run, len(run.output_tokens))
+                for rid, run in eng.running.items()}
+        for o in fin:
+            run_len = len(o.output_tokens)
+            live[o.request_id] = (None, run_len)
+            ttft_s = o.metrics.first_token_time - o.metrics.arrival_time
+            cls = "interactive" if o.request_id.startswith("i") else "batch"
+            ttft[cls].append(ttft_s)
+        for rid, (_run, n) in live.items():
+            delta = n - seen.get(rid, 0)
+            if delta > 0:
+                total_tokens += delta
+                if rid.startswith("i"):
+                    # delivery gaps after the first token (TTFT is its own
+                    # metric; ITL should not double-count the queue wait)
+                    if rid in last:
+                        itl.append(now - last[rid])
+                    itl.extend([0.0] * (delta - 1))
+                last[rid] = now
+                seen[rid] = n
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "steps": steps, "total_tokens": total_tokens,
+            "tok_per_s": total_tokens / wall, "ttft": ttft,
+            "interactive_itl": itl}
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, float), q) * 1e3)  # -> ms
+
+
+def _warm_long_prefill(eng, vocab, max_seq):
+    """Compile the full-width chunked-prefill shapes at every context-page
+    bucket: one long prompt ingested 32 tokens per step walks the chunk
+    through all the (chunk=32, ctx bucket) jit combos a cache-missing
+    restore can hit mid-measurement."""
+    rng = np.random.default_rng(4)
+    plen = max_seq - PAGE
+    eng.add_request(InferenceRequest(
+        model=ARCH, qos="batch",
+        prompt_tokens=rng.integers(2, vocab, size=plen).tolist(),
+        request_id="warm-long",
+        sampling=SamplingParams(max_tokens=2, temperature=0.0)))
+    while eng.has_work():
+        eng.step()
+
+
+def _warm_restore_buckets(eng, vocab, batch_gen):
+    """Compile every restore-prefill shape the measured pass can hit: the
+    chunked-prefill jit specializes per power-of-two context-page bucket,
+    and a restore's context grows with the victim's emitted stream — so
+    preempt/restore one long sequence each time its history crosses into
+    a new bucket (an uncompiled bucket would otherwise land a multi-second
+    compile in the middle of the measured pass)."""
+    rng = np.random.default_rng(3)
+    req = InferenceRequest(
+        model=ARCH, qos="batch",
+        prompt_tokens=rng.integers(2, vocab, size=32).tolist(),
+        request_id="warm-restore",
+        sampling=SamplingParams(max_tokens=batch_gen, temperature=0.0))
+    eng.add_request(req)
+    seen_buckets = set()
+    while eng.has_work():
+        eng.step()
+        run = eng.running.get("warm-restore")
+        if run is None:
+            continue
+        pages = -(-run.cache_len // eng.cfg.page_size)
+        bucket = 1
+        while bucket < pages:
+            bucket *= 2
+        if bucket not in seen_buckets and run.cache_len > eng.cfg.page_size:
+            seen_buckets.add(bucket)
+            eng.preempt("warm-restore")
+
+
+def bench(model, params, vocab, *, n_batch, batch_gen, n_interactive,
+          interactive_gen, arrive_every):
+    max_seq = 32 + batch_gen + PAGE
+    results, rows = [], []
+    engines, counters = {}, {}
+    for name, mode_kw in MODES:
+        eng = _mk_engine(model, params, max_seq, mode_kw)
+        # warmup ON THE MEASURED ENGINE (jit caches live per backend
+        # instance): same generation lengths and arrival cadence so every
+        # prefill/restore ctx bucket this mode will hit is compiled,
+        # including the restore-prefill shapes preemption adds
+        wb, wi = _requests(vocab, n_batch=SLOTS, batch_gen=batch_gen,
+                           n_interactive=2,
+                           interactive_gen=interactive_gen, seed=1)
+        _drive(eng, wb, wi, arrive_every)
+        _warm_long_prefill(eng, vocab, max_seq)
+        if mode_kw.get("enable_preemption"):
+            _warm_restore_buckets(eng, vocab, batch_gen)
+        engines[name] = eng
+        counters[name] = dict(eng.stats)     # exclude warmup from counters
+    b, i = _requests(vocab, n_batch=n_batch, batch_gen=batch_gen,
+                     n_interactive=n_interactive,
+                     interactive_gen=interactive_gen, seed=2)
+    # best of four passes, ROUND-ROBIN across modes: shared-host
+    # contention drifts on a seconds scale, so running each mode's passes
+    # back-to-back would charge whole modes differently — interleaving
+    # spreads the drift evenly and the per-mode best compares like to like
+    passes = 4
+    best: dict[str, dict] = {}
+    for _ in range(passes):
+        for name, eng in engines.items():
+            r = _drive(eng, b, i, arrive_every)
+            if name not in best or r["tok_per_s"] > best[name]["tok_per_s"]:
+                best[name] = r
+    for name, mode_kw in MODES:
+        eng = engines[name]
+        r = best[name]
+        r["mode"] = name
+        for k in ("preemptions", "restores", "restore_cached_tokens"):
+            r[k] = (eng.stats[k] - counters[name][k]) // passes
+        ti = r["ttft"]["interactive"]
+        r["interactive"] = {
+            "p50_ttft_ms": _pct(ti, 50), "p99_ttft_ms": _pct(ti, 99),
+            "p50_itl_ms": _pct(r["interactive_itl"], 50),
+            "p99_itl_ms": _pct(r["interactive_itl"], 99)}
+        r["batch_p50_ttft_ms"] = _pct(r["ttft"]["batch"], 50)
+        del r["ttft"], r["interactive_itl"]
+        results.append(r)
+        rows.append([name, f"{r['interactive']['p50_ttft_ms']:.0f}",
+                     f"{r['interactive']['p99_ttft_ms']:.0f}",
+                     f"{r['interactive']['p99_itl_ms']:.1f}",
+                     f"{r['tok_per_s']:.0f}", r["preemptions"]])
+        csv_line(f"qos_preemption/{name}",
+                 r["interactive"]["p99_ttft_ms"] * 1e3,
+                 f"tok_s={r['tok_per_s']:.0f}")
+    print_table(
+        f"QoS under batch flood ({ARCH} reduced, B={SLOTS}, "
+        f"{n_batch}x{batch_gen} batch vs {n_interactive}x{interactive_gen} "
+        f"interactive)",
+        ["mode", "int p50 TTFT ms", "int p99 TTFT ms", "int p99 ITL ms",
+         "total tok/s", "preempts"],
+        rows, widths=[18, 15, 15, 14, 12, 8])
+    return results
+
+
+def main(fast: bool = False, smoke: bool = False) -> dict:
+    cfg = reduced(REGISTRY[ARCH])
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    if smoke or fast:
+        kw = dict(n_batch=6, batch_gen=48, n_interactive=3,
+                  interactive_gen=8, arrive_every=6)
+    else:
+        kw = dict(n_batch=8, batch_gen=192, n_interactive=8,
+                  interactive_gen=10, arrive_every=12)
+    results = bench(model, params, cfg.vocab_size, **kw)
+    by = {r["mode"]: r for r in results}
+    pre = by["priority+preempt"]
+    fcfs = by["fcfs"]
+    ttft_speedup = (fcfs["interactive"]["p99_ttft_ms"]
+                    / pre["interactive"]["p99_ttft_ms"])
+    thpt_ratio = pre["tok_per_s"] / fcfs["tok_per_s"]
+    out = {"arch": ARCH, "batch_slots": SLOTS, "page_size": PAGE, **kw,
+           "modes": results,
+           "p99_ttft_speedup_preempt_vs_fcfs": ttft_speedup,
+           "throughput_ratio_preempt_vs_fcfs": thpt_ratio}
+    path = OUT_PATH.replace(".json", ".fast.json") if (fast or smoke) \
+        else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {path}  (interactive p99 TTFT: preempt "
+          f"{ttft_speedup:.1f}x better than FCFS; throughput ratio "
+          f"{thpt_ratio:.2f})")
+    # acceptance: the 2x / within-10% claims hold for the committed
+    # full-mode artifact; reduced smoke runs keep headroom for loaded
+    # shared CI runners (shorter floods leave preemption less to win)
+    ttft_floor = 1.3 if (smoke or fast) else 2.0
+    thpt_floor = 0.7 if (smoke or fast) else 0.9
+    if ttft_speedup < ttft_floor:
+        raise SystemExit(
+            f"preemption interactive p99 TTFT speedup is "
+            f"{ttft_speedup:.2f}x (expected >= {ttft_floor}x)")
+    if thpt_ratio < thpt_floor:
+        raise SystemExit(
+            f"preemption cut total throughput to {thpt_ratio:.2f}x of "
+            f"FCFS (floor {thpt_floor}x)")
+    if pre["preemptions"] < 1:
+        raise SystemExit("preemption mode never actually preempted")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@
   prefix_cache  (real)  KV prefix reuse + chunked-prefill ITL, JSON output
   decode_loop   (real)  fused decode fast path vs legacy, JSON output
   spec_decode   (real)  draft-and-verify speculative decoding, JSON output
+  qos_preemption (real) interactive TTFT under a batch flood: FCFS vs
+                        priority vs priority+preemption, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
@@ -23,8 +25,8 @@ import time
 import traceback
 
 from benchmarks import (autoscale, batch_mode, concurrency, decode_loop,
-                        engine_step, external_api, prefix_cache, rate_sweep,
-                        roofline, spec_decode)
+                        engine_step, external_api, prefix_cache,
+                        qos_preemption, rate_sweep, roofline, spec_decode)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -36,12 +38,14 @@ SUITES = {
     "prefix_cache": prefix_cache.main,
     "decode_loop": decode_loop.main,
     "spec_decode": spec_decode.main,
+    "qos_preemption": qos_preemption.main,
     "roofline": roofline.main,
 }
 
 # real-engine suites with self-enforced acceptance thresholds: these are
 # the ones a perf-path regression breaks, so CI runs exactly these
-SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode"]
+SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode",
+                "qos_preemption"]
 
 
 def main() -> None:
@@ -65,7 +69,8 @@ def main() -> None:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         t0 = time.time()
         kw = {"fast": args.fast or args.smoke}
-        if args.smoke and name in ("decode_loop", "spec_decode"):
+        if args.smoke and name in ("decode_loop", "spec_decode",
+                                   "qos_preemption"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

@@ -1,8 +1,11 @@
 """Federated serving (paper §4.5): two clusters, one agnostic API.
 
 Demonstrates the priority-based endpoint selection (active instance >
-free nodes > configured order), auto-scaling under burst load, and
-fail-over when a whole cluster drops out.
+free nodes > configured order, load tie-break within a rule),
+auto-scaling under burst load, fail-over when a whole cluster drops out,
+and QoS classes: interactive requests jump a batch flood on a
+priority-scheduled deployment (with preemption, they evict running batch
+work and the victims restore via the prefix cache).
 
 Run:  PYTHONPATH=src python examples/federated_serving.py
 """
@@ -16,7 +19,12 @@ MODEL = LLAMA70B.name
 system = build_system(
     {
         "sophia": {MODEL: default_deployment(
-            LLAMA70B, max_instances=2, storage_bw=40e9, scale_cooldown=5.0)},
+            LLAMA70B, max_instances=2, storage_bw=40e9, scale_cooldown=5.0,
+            # QoS: interactive admits before batch; blocked interactive
+            # arrivals may evict running batch work (restores are charged
+            # a prefix-cache-discounted re-prefill, hit rate 0.9)
+            scheduling_policy="priority", enable_preemption=True,
+            restore_hit_rate=0.9)},
         "polaris": {MODEL: default_deployment(
             LLAMA70B, max_instances=2, storage_bw=40e9, scale_cooldown=5.0)},
     },
@@ -52,3 +60,40 @@ print(f"after sophia outage: served by {fut.result()['endpoint']} "
 
 # 5) /jobs view across the federation
 print("federation /jobs:", system.gateway.jobs_status())
+
+# 6) QoS: restore sophia, take polaris down (so everything lands on the
+#    priority-scheduled cluster) and flood it with batch-class work, then
+#    submit one interactive request mid-flood — the deployment preempts a
+#    batch victim, so the interactive answer returns while the flood is
+#    still draining
+system.health.mark_up("sophia-ep")
+system.health.mark_down("polaris-ep")
+system.loop.run_until(system.loop.now() + 15.0)
+t0 = system.loop.now()
+batch_futs = [system.gateway.submit(token, {
+    "request_id": f"flood-{j}", "model": MODEL, "prompt_tokens": 256,
+    "max_tokens": 1500, "qos": "batch"}) for j in range(96)]
+interactive = {}
+
+
+def ask_interactive():
+    # prompt/max_tokens differ from every earlier request so the gateway
+    # response cache cannot short-circuit the engine
+    interactive["fut"] = system.gateway.submit(token, {
+        "request_id": "chat-1", "model": MODEL, "prompt_tokens": 72,
+        "max_tokens": 24, "qos": "interactive"})
+    interactive["t"] = system.loop.now()
+
+
+system.loop.call_at(t0 + 20.0, ask_interactive)       # mid-flood
+system.loop.run_until_idle()
+assert interactive["fut"].error is None
+recs = {r.request_id: r for r in system.metrics.records}
+flood_e2e = sorted(recs[f"flood-{j}"].e2e for j in range(96)
+                   if f"flood-{j}" in recs)
+preempts = sum(i.engine.total_preemptions
+               for i in system.endpoints["sophia-ep"].instances[MODEL])
+print(f"QoS: interactive e2e {recs['chat-1'].e2e:.2f}s vs batch median "
+      f"{flood_e2e[len(flood_e2e) // 2]:.1f}s "
+      f"(sophia preemptions={preempts}, decision detail: "
+      f"{next(d for d in reversed(system.router.decisions) if 'qos=interactive' in d[3])[3]})")

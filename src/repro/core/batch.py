@@ -61,7 +61,7 @@ class BatchService:
             job.state = BatchState.FAILED
             job.future.set_error(ValueError("empty batch"))
             return job
-        ep_id = endpoint_id or self.router.select_endpoint(model)
+        ep_id = endpoint_id or self.router.select_endpoint(model, qos="batch")
         ep = self.endpoints[ep_id]
         dep = ep.deployments[model]
         job.state = BatchState.QUEUED
@@ -90,9 +90,15 @@ class BatchService:
                 job.state = BatchState.IN_PROGRESS
 
         for r in requests:
+            # batch jobs carry the batch QoS class end-to-end: on a shared
+            # online engine (priority/preemption policies) they yield to
+            # interactive traffic; on this dedicated instance the tag is
+            # inert but keeps the accounting uniform
             sreq = SimRequest(request_id=r["request_id"],
                               prompt_tokens=int(r["prompt_tokens"]),
-                              max_tokens=int(r["max_tokens"]))
+                              max_tokens=int(r["max_tokens"]),
+                              qos=r.get("qos", "batch"),
+                              priority=int(r.get("priority", 0)))
             inst.submit(sreq, on_first, on_done)
         return job
 

@@ -40,6 +40,10 @@ class ModelDeployment:
     spec_tokens: int = 0                   # draft tokens per speculative round
     spec_accept_rate: float = 0.8          # steady-state draft acceptance
     draft_cost: InstanceCost | None = None  # draft model (required for spec)
+    # QoS scheduling mirror (see repro.serving.scheduler)
+    scheduling_policy: str = "fcfs"        # fcfs | priority | edf
+    enable_preemption: bool = False        # evict batch for blocked urgent
+    restore_hit_rate: float = 1.0          # prefix-cache share of a restore
 
 
 class ComputeEndpoint:
@@ -97,7 +101,10 @@ class ComputeEndpoint:
         sreq = SimRequest(request_id=payload["request_id"],
                           prompt_tokens=int(payload["prompt_tokens"]),
                           max_tokens=int(payload["max_tokens"]),
-                          user=payload.get("user", "anonymous"))
+                          user=payload.get("user", "anonymous"),
+                          qos=payload.get("qos", "interactive"),
+                          priority=int(payload.get("priority", 0)),
+                          deadline=payload.get("deadline"))
         self._inflight[sreq.request_id] = (model, sreq, fut)
         self._dispatch(model, sreq, fut)
         return fut
@@ -163,6 +170,9 @@ class ComputeEndpoint:
             spec_tokens=dep.spec_tokens,
             spec_accept_rate=dep.spec_accept_rate,
             draft_cost=dep.draft_cost,
+            scheduling_policy=dep.scheduling_policy,
+            enable_preemption=dep.enable_preemption,
+            restore_hit_rate=dep.restore_hit_rate,
             on_released=self._on_instance_gone,
             on_failed=self._on_instance_failed,
             on_hot=self._on_instance_hot)

@@ -5,6 +5,14 @@
   2. else an endpoint whose cluster has enough free nodes to start one;
   3. else the FIRST endpoint configured for the model (registry order).
 
+Within rules 1 and 2 ties are broken by cluster load — shallowest
+scheduler queue first, then most available nodes, then registry
+(configuration) order — so a hot-but-drowning cluster no longer wins over
+an equally hot idle one just by being listed first. Each decision records
+``(model, endpoint, rule, detail)`` with the tie-break inputs (and the
+request's QoS class when the caller supplies one) for the /jobs audit
+trail.
+
 Endpoint health (faults.py) filters dead endpoints out before the scan.
 """
 from __future__ import annotations
@@ -23,7 +31,9 @@ class FederationRouter:
         self.endpoints = endpoints
         self.registry = registry
         self._healthy: dict[str, bool] = {e: True for e in endpoints}
-        self.decisions: list[tuple[str, str, str]] = []   # (model, ep, rule)
+        # (model, endpoint, rule, detail) — detail holds the tie-break
+        # inputs (queue depth / free nodes) and the request's QoS class
+        self.decisions: list[tuple[str, str, str, str]] = []
 
     # -- health feed (from HealthMonitor) ----------------------------------------
     def set_healthy(self, endpoint_id: str, healthy: bool):
@@ -37,27 +47,53 @@ class FederationRouter:
             raise FederationError(f"no healthy endpoint hosts {model!r}")
         return eps
 
+    def _load_key(self, e: str) -> tuple[int, int]:
+        sched = self.endpoints[e].scheduler
+        return (sched.queue_depth(), -sched.available_nodes())
+
+    def _pick(self, cands: list[str]) -> tuple[str, str]:
+        """Tie-break within a rule: shallowest scheduler queue, then most
+        free nodes, then registry order (strict < keeps the scan stable)."""
+        best = cands[0]
+        for e in cands[1:]:
+            if self._load_key(e) < self._load_key(best):
+                best = e
+        qd, neg_free = self._load_key(best)
+        return best, f"queue_depth={qd},free_nodes={-neg_free}"
+
+    def _record(self, model: str, ep: str, rule: str, detail: str,
+                qos: str | None) -> str:
+        if qos:
+            detail = f"{detail},qos={qos}" if detail else f"qos={qos}"
+        self.decisions.append((model, ep, rule, detail))
+        return ep
+
     # -- the §4.5 algorithm ---------------------------------------------------------
-    def select_endpoint(self, model: str, exclude=()) -> str:
+    def select_endpoint(self, model: str, exclude=(),
+                        qos: str | None = None) -> str:
         eps = self._candidates(model)
         if exclude:
             eps = [e for e in eps if e not in exclude] or eps
-        # rule 1: model already running or queued somewhere
-        for e in eps:
-            states = self.endpoints[e].model_states(model)
-            if any(s in ("running", "starting", "queued") for s in states):
-                self.decisions.append((model, e, "active-instance"))
-                return e
-        # rule 2: a cluster with available nodes
+        # rule 1: model already running or queued somewhere; ties broken
+        # by cluster load (queue depth, then free nodes)
+        active = [e for e in eps
+                  if any(s in ("running", "starting", "queued")
+                         for s in self.endpoints[e].model_states(model))]
+        if active:
+            pick, detail = self._pick(active)
+            return self._record(model, pick, "active-instance", detail, qos)
+        # rule 2: a cluster with available nodes, same tie-break
+        free = []
         for e in eps:
             ep = self.endpoints[e]
             need = ep.deployments[model].nodes_per_instance
             if ep.scheduler.available_nodes() >= need:
-                self.decisions.append((model, e, "free-nodes"))
-                return e
+                free.append(e)
+        if free:
+            pick, detail = self._pick(free)
+            return self._record(model, pick, "free-nodes", detail, qos)
         # rule 3: first configured endpoint
-        self.decisions.append((model, eps[0], "configured-order"))
-        return eps[0]
+        return self._record(model, eps[0], "configured-order", "", qos)
 
     # -- /jobs view across the federation -----------------------------------------
     def jobs_status(self) -> dict:

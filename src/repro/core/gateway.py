@@ -223,17 +223,22 @@ class InferenceGateway:
                 hit = self.cache.get(ck)
                 if hit is not None:
                     return finish_ok(dict(hit), cached=True)
+                qos = request.get("qos", "interactive")
                 payload = {"request_id": rid, "model": model,
                            "user": ident.user,
                            "prompt_tokens": request["prompt_tokens"],
-                           "max_tokens": request["max_tokens"]}
+                           "max_tokens": request["max_tokens"],
+                           "qos": qos,
+                           "priority": int(request.get("priority", 0)),
+                           "deadline": request.get("deadline")}
                 fn = "embed" if api == "embeddings" else "generate"
                 state = {"done": False}
 
                 def dispatch(exclude=()):
                     try:
                         ep = self.router.select_endpoint(model,
-                                                         exclude=exclude)
+                                                         exclude=exclude,
+                                                         qos=qos)
                     except Exception as e:
                         if not exclude:
                             finish_err(e)

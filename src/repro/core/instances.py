@@ -9,18 +9,23 @@ import itertools
 from dataclasses import dataclass, field
 from enum import Enum
 
-from repro.serving.costmodel import InstanceCost, expected_spec_tokens
+from repro.serving.costmodel import (InstanceCost, expected_spec_tokens,
+                                     restore_tokens)
+from repro.serving.scheduler import class_rank
 
 _inst_ids = itertools.count(1)
 
 
 @dataclass
 class SimRequest:
-    """Control-plane view of a request: token counts only."""
+    """Control-plane view of a request: token counts + QoS tags."""
     request_id: str
     prompt_tokens: int
     max_tokens: int
     user: str = "anonymous"
+    qos: str = "interactive"          # workload class (interactive | batch)
+    priority: int = 0                 # intra-class (lower = more urgent)
+    deadline: float | None = None     # absolute TTFT deadline (loop time)
 
 
 class InstanceState(str, Enum):
@@ -66,6 +71,14 @@ class SimEngine:
       ``benchmarks/spec_decode.py``. Rounds fall back to plain decode steps
       whenever a prefill is in flight or the composition changed — the same
       rule as the real engine's ``_decode_spec`` fallback.
+    * ``scheduling_policy`` / ``enable_preemption`` / ``restore_hit_rate``
+      — the QoS mirror of ``repro.serving.scheduler``: 'priority' admits
+      interactive before batch (then intra-class priority, then arrival),
+      'edf' admits by earliest TTFT deadline; with preemption on, a
+      blocked more-urgent arrival evicts the most recently admitted
+      less-urgent running sequence, whose re-admission charges a restore
+      prefill of ``restore_tokens(held, restore_hit_rate)`` tokens — the
+      recompute-via-prefix-cache cost term of the real engine's restore.
     """
 
     def __init__(self, loop, cost: InstanceCost, max_slots: int = 48,
@@ -74,7 +87,10 @@ class SimEngine:
                  chunked_prefill_budget: int | None = None,
                  decode_steps_per_sync: int = 1,
                  spec_tokens: int = 0, spec_accept_rate: float = 0.8,
-                 draft_cost: InstanceCost | None = None):
+                 draft_cost: InstanceCost | None = None,
+                 scheduling_policy: str = "fcfs",
+                 enable_preemption: bool = False,
+                 restore_hit_rate: float = 1.0):
         self.loop = loop
         self.cost = cost
         self.max_slots = max_slots
@@ -88,32 +104,46 @@ class SimEngine:
         self.draft_cost = draft_cost
         if self.spec_tokens and draft_cost is None:
             raise ValueError("spec_tokens > 0 requires draft_cost")
+        if scheduling_policy not in ("fcfs", "priority", "edf"):
+            raise ValueError(f"unknown scheduling policy "
+                             f"{scheduling_policy!r}")
+        self.scheduling_policy = scheduling_policy
+        self.enable_preemption = enable_preemption
+        self.restore_hit_rate = restore_hit_rate
         self.queue: list[tuple[SimRequest, object, object]] = []
         self.running: list[dict] = []
+        # preempted victims awaiting re-admission (restore): running-dicts
+        # with their produced-token state preserved
+        self._preempted_q: list[dict] = []
+        self._seq = itertools.count()
+        self._seq_of: dict[str, int] = {}     # request_id -> arrival order
         self._step_ev = None
         self._step_k = 1
         self._composition_changed = False
         self.total_output_tokens = 0
         self.total_finished = 0
         self.total_cached_tokens = 0
+        self.total_restore_cached_tokens = 0
+        self.total_preemptions = 0
         self.halted = False
 
     # -- load signals ----------------------------------------------------------
     @property
     def load(self) -> int:
-        return len(self.queue) + len(self.running)
+        return len(self.queue) + len(self._preempted_q) + len(self.running)
 
     @property
     def queue_depth(self) -> int:
-        return len(self.queue)
+        return len(self.queue) + len(self._preempted_q)
 
     def saturated(self) -> bool:
-        return len(self.running) >= self.max_slots and bool(self.queue)
+        return len(self.running) >= self.max_slots and self.queue_depth > 0
 
     # -- ops -----------------------------------------------------------------------
     def submit(self, sreq: SimRequest, on_first_token, on_done):
         if self.halted:
             raise RuntimeError("engine halted")
+        self._seq_of[sreq.request_id] = next(self._seq)
         self.queue.append((sreq, on_first_token, on_done))
         if self.on_busy:
             self.on_busy()
@@ -127,21 +157,94 @@ class SimEngine:
             self.loop.cancel(self._step_ev)
             self._step_ev = None
         inflight = [r["req"] for r in self.running] + \
+            [r["req"] for r in self._preempted_q] + \
             [q[0] for q in self.queue]
         self.running.clear()
+        self._preempted_q.clear()
         self.queue.clear()
+        self._seq_of.clear()
         return inflight
 
-    # -- internals ------------------------------------------------------------
-    def _kick(self):
-        if self._step_ev is None and not self.halted:
-            self._schedule_step()
+    # -- QoS scheduling mirror --------------------------------------------------
+    def _key(self, sreq: SimRequest, seq: int) -> tuple:
+        """Admission order: FCFS = arrival; priority = (class, priority,
+        arrival); EDF = (deadline, arrival) with None sorting last."""
+        if self.scheduling_policy == "priority":
+            return (class_rank(sreq.qos), sreq.priority, seq)
+        if self.scheduling_policy == "edf":
+            d = float("inf") if sreq.deadline is None else sreq.deadline
+            return (d, seq)
+        return (seq,)
 
-    def _schedule_step(self):
-        admitted = False
-        while self.queue and len(self.running) < self.max_slots:
-            sreq, on_first, on_done = self.queue.pop(0)
-            admitted = True
+    def _urgency(self, sreq: SimRequest) -> float:
+        if self.scheduling_policy == "priority":
+            return class_rank(sreq.qos)
+        if self.scheduling_policy == "edf":
+            return float("inf") if sreq.deadline is None else sreq.deadline
+        return 0.0
+
+    def _next_waiting(self):
+        """(key, kind, idx) of the most urgent waiting entry, or None.
+        Preempted victims keep their original arrival order, so they sort
+        ahead of later arrivals of the same class."""
+        best = None
+        for idx, e in enumerate(self._preempted_q):
+            k = self._key(e["req"], e["seq"])
+            if best is None or k < best[0]:
+                best = (k, "restore", idx)
+        for idx, (sreq, _f, _d) in enumerate(self.queue):
+            k = self._key(sreq, self._seq_of[sreq.request_id])
+            if best is None or k < best[0]:
+                best = (k, "fresh", idx)
+        return best
+
+    def _pick_victim(self, head: SimRequest) -> dict | None:
+        """Most recently admitted running entry strictly less urgent than
+        ``head`` (mid-prefill entries are not preemptible — restoring them
+        would just repeat the same prefill)."""
+        for e in reversed(self.running):
+            if e["prefill_left"] > 0:
+                continue
+            if self._urgency(e["req"]) > self._urgency(head):
+                return e
+        return None
+
+    def _admit_one(self) -> bool:
+        pick = self._next_waiting()
+        if pick is None:
+            return False
+        if len(self.running) >= self.max_slots:
+            if not (self.enable_preemption
+                    and self.scheduling_policy != "fcfs"):
+                return False
+            head = (self._preempted_q[pick[2]]["req"] if pick[1] == "restore"
+                    else self.queue[pick[2]][0])
+            victim = self._pick_victim(head)
+            if victim is None:
+                return False
+            self.running.remove(victim)
+            victim["preemptions"] = victim.get("preemptions", 0) + 1
+            self.total_preemptions += 1
+            self._composition_changed = True
+            self._preempted_q.append(victim)
+            pick = self._next_waiting()      # indices moved; re-resolve
+        _key, kind, idx = pick
+        if kind == "restore":
+            e = self._preempted_q.pop(idx)
+            # restore = recompute-via-prefix-cache prefill of the tokens
+            # the cache does not cover (costmodel.restore_tokens). Tracked
+            # apart from the prompt prefix-cache discount — the real
+            # engine's RequestMetrics keeps cached_prompt_tokens and
+            # restore_cached_tokens distinct too
+            held = e["req"].prompt_tokens + e["produced"]
+            restore = restore_tokens(held, self.restore_hit_rate)
+            e["prefill_left"] = restore
+            self.total_restore_cached_tokens += max(held - restore, 0)
+            e["restore_cached"] = e.get("restore_cached", 0) \
+                + max(held - restore, 0)
+            self.running.append(e)
+        else:
+            sreq, on_first, on_done = self.queue.pop(idx)
             # warm-cache discount: matched prefix tokens cost no compute;
             # at least one token is always recomputed (its logits seed
             # sampling), mirroring PagedKVCache.allocate_with_prefix
@@ -151,7 +254,21 @@ class SimEngine:
             self.running.append({"req": sreq, "produced": 0,
                                  "prefill_left": eff, "chunks": 0,
                                  "cached": sreq.prompt_tokens - eff,
+                                 # the arrival order moves into the entry;
+                                 # _seq_of must not grow with engine age
+                                 "seq": self._seq_of.pop(sreq.request_id),
                                  "on_first": on_first, "on_done": on_done})
+        return True
+
+    # -- internals ------------------------------------------------------------
+    def _kick(self):
+        if self._step_ev is None and not self.halted:
+            self._schedule_step()
+
+    def _schedule_step(self):
+        admitted = False
+        while self._admit_one():
+            admitted = True
         if not self.running:
             self._step_ev = None
             if self.on_idle:
@@ -224,6 +341,9 @@ class SimEngine:
                     r["on_done"]({"request_id": r["req"].request_id,
                                   "output_tokens": r["produced"],
                                   "cached_prompt_tokens": r["cached"],
+                                  "restore_cached_tokens":
+                                      r.get("restore_cached", 0),
+                                  "preemptions": r.get("preemptions", 0),
                                   "prefill_chunks": r["chunks"],
                                   "finish_time": now})
             else:
@@ -244,7 +364,10 @@ class ModelInstance:
                  chunked_prefill_budget: int | None = None,
                  decode_steps_per_sync: int = 1,
                  spec_tokens: int = 0, spec_accept_rate: float = 0.8,
-                 draft_cost: InstanceCost | None = None):
+                 draft_cost: InstanceCost | None = None,
+                 scheduling_policy: str = "fcfs",
+                 enable_preemption: bool = False,
+                 restore_hit_rate: float = 1.0):
         self.loop = loop
         self.model_name = model_name
         self.cost = cost
@@ -270,7 +393,10 @@ class ModelInstance:
                                 decode_steps_per_sync=decode_steps_per_sync,
                                 spec_tokens=spec_tokens,
                                 spec_accept_rate=spec_accept_rate,
-                                draft_cost=draft_cost)
+                                draft_cost=draft_cost,
+                                scheduling_policy=scheduling_policy,
+                                enable_preemption=enable_preemption,
+                                restore_hit_rate=restore_hit_rate)
         self.hot_since = None
         self.created = loop.now()
         self.job = scheduler.submit(num_nodes, on_start=self._nodes_ready,

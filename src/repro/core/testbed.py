@@ -70,6 +70,9 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
                        prefix_cache_hit_rate: float = 0.0,
                        chunked_prefill_budget: int | None = None,
                        decode_steps_per_sync: int = 1,
+                       scheduling_policy: str = "fcfs",
+                       enable_preemption: bool = False,
+                       restore_hit_rate: float = 1.0,
                        hw: dict | None = None) -> ModelDeployment:
     """``hw``: optional InstanceCost overrides, e.g. A100 constants
     ``dict(peak_flops=312e12, hbm_bw=1555e9)`` for paper-validation runs."""
@@ -84,6 +87,9 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
         prefix_cache_hit_rate=prefix_cache_hit_rate,
         chunked_prefill_budget=chunked_prefill_budget,
         decode_steps_per_sync=decode_steps_per_sync,
+        scheduling_policy=scheduling_policy,
+        enable_preemption=enable_preemption,
+        restore_hit_rate=restore_hit_rate,
         autoscale=AutoScalePolicy(max_instances=max_instances,
                                   cooldown=scale_cooldown),
     )

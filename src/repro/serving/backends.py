@@ -527,6 +527,10 @@ class SlotBackend:
         slot = self.slot_of.pop(seq_id)
         self.free_slots.append(slot)
 
+    def publish(self, seq_id: str, tokens: list) -> None:
+        """Preemption hook: the slot backend has no content-addressed cache
+        to publish into — a preempted sequence restores by full recompute."""
+
     def slot(self, seq_id: str) -> int:
         return self.slot_of[seq_id]
 
@@ -570,6 +574,13 @@ class PagedBackend:
         self._chunk = jax.jit(self._chunk_prefill_impl, donate_argnums=(2,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._cow = jax.jit(self._cow_impl, donate_argnums=(0,))
+        # swap-in upload (preemption restore): write saved page KV back
+        # into freshly allocated pages; specializes per page count
+        self._swap = jax.jit(
+            lambda pools, table, k, v: {
+                "k": pools["k"].at[:, table].set(k),
+                "v": pools["v"].at[:, table].set(v)},
+            donate_argnums=(0,))
         self._fused = {}            # K -> jitted multi-step decode+sample fn
         self._spec_fns = {}         # T -> jitted verify+accept fn
         self._dec_st = None         # device-resident per-slot decode state
@@ -1042,6 +1053,45 @@ class PagedBackend:
         self.decoding.discard(seq_id)
         self.free_slots.append(slot)
         self.kv.free(seq_id)
+
+    # -- preemption support ------------------------------------------------------
+    def publish(self, seq_id: str, tokens: list) -> None:
+        """Register a preempted sequence's full pages (prompt AND decoded
+        tokens) in the content index before they are freed: they park in
+        the LRU and the restore prefill content-matches them back, so a
+        preempt/restore round trip recomputes only the partial tail page.
+        No-op when the prefix cache is disabled."""
+        self.kv.commit_prefix(seq_id, tokens)
+
+    def swap_out(self, seq_id: str) -> dict:
+        """Copy a sequence's computed KV pages to host memory (the swap
+        restore path, for when a prefix-cache hit cannot be counted on).
+        Only the pages covering the sequence's logical length are saved —
+        trailing headroom pages hold no committed KV. The caller frees the
+        sequence afterwards; ``swap_in`` restores into fresh pages."""
+        n_tokens = self.kv.length(seq_id)
+        n_pages = self.kv.pages_needed(n_tokens)
+        table = np.array(self.kv._tables[seq_id][:n_pages], np.int32)
+        return {"k": np.asarray(self.pools["k"][:, table]),
+                "v": np.asarray(self.pools["v"][:, table]),
+                "n_tokens": n_tokens}
+
+    def swap_in(self, seq_id: str, n_tokens: int, blob: dict) -> None:
+        """Rebind a swapped-out sequence: reserve a slot, allocate fresh
+        pages, upload the saved KV, and rejoin the decode set — no
+        recompute. ``n_tokens`` must equal the blob's saved length."""
+        assert n_tokens == blob["n_tokens"], \
+            f"{seq_id}: swap blob holds {blob['n_tokens']} tokens, " \
+            f"restore asked for {n_tokens}"
+        slot = self.free_slots.pop()
+        self.slot_of[seq_id] = slot
+        self.seq_of[slot] = seq_id
+        pages = self.kv.allocate(seq_id, n_tokens)
+        self.pools = self._swap(self.pools,
+                                jnp.asarray(np.array(pages, np.int32)),
+                                jnp.asarray(blob["k"]),
+                                jnp.asarray(blob["v"]))
+        self.decoding.add(seq_id)
 
     def slot(self, seq_id: str) -> int:
         return self.slot_of[seq_id]

@@ -29,9 +29,21 @@ from repro.configs.base import ModelConfig
 
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
 HBM_BW = 819e9               # bytes/s / chip
+HOST_IO_BW = 64e9            # bytes/s device<->host staging (KV swap path)
 DISPATCH_OVERHEAD = 2e-4     # per-step kernel dispatch/collective floor
 HOST_SYNC_OVERHEAD = 1.8e-3  # per-sync host transfer+sampling+scheduling
 STEP_OVERHEAD = DISPATCH_OVERHEAD + HOST_SYNC_OVERHEAD  # legacy K=1 total
+
+
+def restore_tokens(n_tokens: int, cache_hit_rate: float) -> int:
+    """Prompt-stream tokens a preemption *restore* prefill must recompute:
+    the fraction the prefix cache does not cover, never less than one (the
+    allocator always leaves the final position to recompute — mirrors
+    ``PagedKVCache.allocate_with_prefix``). The real engine's
+    recompute-via-prefix-cache restore hits the pages the victim published
+    on eviction, so a warm restore recomputes only the partial tail page."""
+    h = min(max(cache_hit_rate, 0.0), 1.0)
+    return max(int(round(n_tokens * (1.0 - h))), 1)
 
 
 def expected_spec_tokens(accept_rate: float, k: int) -> float:
@@ -66,6 +78,7 @@ class InstanceCost:
     # amortized by multi-step decode — the remainder is host-sync cost
     step_overhead: float = STEP_OVERHEAD
     dispatch_overhead: float = DISPATCH_OVERHEAD
+    host_io_bw: float = HOST_IO_BW   # KV swap-out/in staging bandwidth
 
     # -- model load (cold start component) -------------------------------------
     def load_time(self) -> float:
@@ -77,6 +90,23 @@ class InstanceCost:
         flops = 2.0 * self.cfg.num_active_params * prompt_tokens * batch
         t_c = flops / (self.chips * self.peak_flops * self.mfu)
         return max(t_c, self.step_overhead)
+
+    # -- preemption (QoS scheduling) ---------------------------------------------
+    def restore_time(self, n_tokens: int,
+                     cache_hit_rate: float = 1.0) -> float:
+        """Service time to restore a preempted sequence of ``n_tokens`` by
+        recompute-via-prefix-cache: a prefill of whatever the cache does
+        not cover (see :func:`restore_tokens`)."""
+        return self.prefill_time(restore_tokens(n_tokens, cache_hit_rate))
+
+    def swap_time(self, n_tokens: int) -> float:
+        """One leg of the host swap restore path: stage a sequence's KV
+        pages across the device<->host link (charged once on swap-out and
+        once on swap-in; no recompute)."""
+        cfg = self.cfg
+        kv_per_tok = (cfg.attn_layer_count() * 2 * cfg.kv_dim
+                      * self.bytes_per_param)
+        return kv_per_tok * n_tokens / self.host_io_bw
 
     # -- decode ------------------------------------------------------------------
     def decode_step_time(self, batch: int, ctx: int = 1024,

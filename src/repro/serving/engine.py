@@ -34,11 +34,23 @@ Throughput/latency features layered on the base loop:
   weights are read once per up-to-k+1 emitted tokens while greedy AND
   seeded top-p streams stay token-identical to non-speculative decoding.
   Both caches truncate to the accepted prefix each round.
+* **Pluggable scheduling + preemption** (``scheduling_policy``,
+  ``enable_preemption``): admission/ordering/eviction decisions live in
+  ``serving/scheduler.py`` (FCFS — the legacy behavior, bit-identical;
+  priority/QoS with per-class token budgets; EDF on TTFT deadlines). With
+  preemption on, a policy may evict a running lower-urgency sequence:
+  its pages are published to the prefix cache and freed (COW/refcount
+  aware), and the victim re-enters the queue to be *restored* by
+  recompute-via-prefix-cache — a chunked prefill of its emitted stream
+  that mostly hits the pages it just published — or, with
+  ``preempt_swap``, by a host swap-out/in round trip that needs no
+  recompute. Restored sequences keep their sampling state (seeds fold on
+  ``n_gen``), so outputs stay token-identical to an uninterrupted run.
 """
 from __future__ import annotations
 
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -50,6 +62,7 @@ from repro.serving.request import (InferenceRequest, RequestMetrics,
                                    RequestOutput)
 from repro.serving.sampler import (SEED_MOD, sample_token, sample_tokens,
                                    seed_base)
+from repro.serving.scheduler import SchedulingPolicy, make_policy
 
 
 class _RealClock:
@@ -84,6 +97,19 @@ class EngineConfig:
     # accepting via the seeded-sampler acceptance test (token-identical to
     # the non-speculative path for every sampling mode).
     spec_tokens: int = 0
+    # admission/ordering/eviction policy: 'fcfs' (legacy behavior,
+    # bit-identical), 'priority' (QoS classes + per-class token budgets),
+    # 'edf' (earliest TTFT deadline first), or a SchedulingPolicy instance
+    scheduling_policy: object = "fcfs"
+    # allow the policy to evict running lower-urgency sequences (their KV
+    # pages are reclaimed; the victim requeues and restores later)
+    enable_preemption: bool = False
+    # restore preempted sequences from a host KV copy (swap-out/in) instead
+    # of recompute-via-prefix-cache (paged backend only)
+    preempt_swap: bool = False
+    # per-class in-flight token budgets for the priority policy, e.g.
+    # {"batch": 2048}; ignored by other policies
+    qos_token_budgets: dict | None = None
 
 
 @dataclass
@@ -96,6 +122,10 @@ class _Running:
     # behind cache_len whenever non-speculative rounds run (chunked-prefill
     # interleave, headroom fallback) and is caught up before proposing
     draft_len: int = 0
+    # preemption state: True while a restore prefill re-ingests the emitted
+    # stream; swap_blob holds the host KV copy on the swap path
+    restoring: bool = False
+    swap_blob: dict | None = None
 
     @property
     def last_token(self) -> int:
@@ -186,7 +216,17 @@ class ContinuousBatchingEngine:
                 self.draft_backend = SlotBackend(
                     draft_model, draft_params, max_slots=self.cfg.max_slots,
                     max_len=self.cfg.max_seq_len)
-        self.waiting: deque[InferenceRequest] = deque()
+        if self.cfg.preempt_swap and self.cfg.backend != "paged":
+            raise ValueError("preempt_swap requires backend='paged'")
+        kwargs = {}
+        if self.cfg.scheduling_policy == "priority" \
+                and self.cfg.qos_token_budgets:
+            kwargs["token_budgets"] = self.cfg.qos_token_budgets
+        self.policy: SchedulingPolicy = make_policy(
+            self.cfg.scheduling_policy, **kwargs)
+        # request_id -> _Running of preempted sequences awaiting restore
+        # (their requests sit in the policy queue like fresh arrivals)
+        self._preempted: dict[str, _Running] = {}
         # request_id -> (_Running, PrefillTask): admitted, prompt not yet
         # fully ingested (only populated when chunked prefill is on)
         self.prefilling: "OrderedDict[str, tuple[_Running, PrefillTask]]" = \
@@ -197,35 +237,36 @@ class ContinuousBatchingEngine:
                       "prefill_chunks": 0, "decode_tokens": 0, "steps": 0,
                       "decode_syncs": 0, "finished": 0, "aborted": 0,
                       "spec_rounds": 0, "spec_proposed": 0,
-                      "spec_accepted": 0}
+                      "spec_accepted": 0, "preemptions": 0, "restores": 0,
+                      "restore_cached_tokens": 0, "swap_outs": 0,
+                      "swap_ins": 0}
 
     # -- queue management -------------------------------------------------------
     def add_request(self, req: InferenceRequest):
         m = RequestMetrics(arrival_time=req.arrival_time or self.clock.now(),
                            queued_time=self.clock.now())
         req._metrics = m
-        self.waiting.append(req)
+        self.policy.add(req)
 
     def abort(self, request_id: str) -> bool:
-        for i, r in enumerate(self.waiting):
-            if r.request_id == request_id:
-                del self.waiting[i]
+        req = self.policy.remove(request_id)
+        if req is not None:
+            # a queued preempted victim also drops its saved state
+            self._preempted.pop(request_id, None)
+            self.stats["aborted"] += 1
+            return True
+        for pool in (self.prefilling, self.running):
+            if request_id in pool:
+                entry = pool.pop(request_id)
+                run = entry[0] if isinstance(entry, tuple) else entry
+                self._release_slot(request_id)
+                self.policy.on_released(run.req)
                 self.stats["aborted"] += 1
                 return True
-        if request_id in self.prefilling:
-            self._release_slot(request_id)
-            del self.prefilling[request_id]
-            self.stats["aborted"] += 1
-            return True
-        if request_id in self.running:
-            self._release_slot(request_id)
-            del self.running[request_id]
-            self.stats["aborted"] += 1
-            return True
         return False
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.prefilling or self.running)
+        return bool(len(self.policy) or self.prefilling or self.running)
 
     @property
     def num_running(self) -> int:
@@ -233,20 +274,59 @@ class ContinuousBatchingEngine:
 
     @property
     def num_waiting(self) -> int:
-        return len(self.waiting)
+        return len(self.policy)
+
+    @property
+    def waiting(self) -> list:
+        """Queued requests in the policy's admission order (read-only)."""
+        return self.policy.snapshot()
 
     def saturated(self) -> bool:
         """No free capacity and a queue is forming (autoscaler signal)."""
-        return bool(self.waiting) and not self._can_admit(
-            len(self.waiting[0].prompt_tokens))
+        if not len(self.policy):
+            return False
+        head = self.policy.peek()
+        if head is None:        # queue non-empty but over a class budget
+            return True
+        return not self._can_admit(self._admit_len(head))
+
+    def _admit_len(self, req: InferenceRequest) -> int:
+        """Tokens the admission prefill must cover: the prompt, or — for a
+        preempted victim being restored — its whole emitted stream minus
+        the last token (whose KV the next decode step writes)."""
+        run = self._preempted.get(req.request_id)
+        if run is None:
+            return len(req.prompt_tokens)
+        return len(req.prompt_tokens) + len(run.output_tokens) - 1
 
     def _can_admit(self, n_prompt: int) -> bool:
         """Admission needs capacity in the target backend AND, when
-        speculating, in the draft's mirror backend."""
+        speculating, in the draft's mirror backend. With preemption on,
+        an admission must also leave enough free pages for the decode
+        appends already due this step — otherwise re-admitting a victim
+        right after a page-pressure eviction would hand its freed pages
+        straight back and starve the surviving sequences' appends. (Gated
+        on ``enable_preemption`` so legacy FCFS admission timing is
+        untouched.)"""
         if not self.backend.can_admit(n_prompt):
             return False
+        if self.cfg.enable_preemption:
+            kv = getattr(self.backend, "kv", None)
+            if kv is not None and kv.pages_needed(n_prompt + 1) \
+                    + self._appends_due() > kv.free_pages:
+                return False
         return self.draft_backend is None \
             or self.draft_backend.can_admit(n_prompt)
+
+    def _appends_due(self) -> int:
+        """Pages the next decode step must claim for its KV appends (0 for
+        the slot backend: its cache is pre-sized)."""
+        kv = getattr(self.backend, "kv", None)
+        if kv is None:
+            return 0
+        return sum(1 for sid in self.backend.decoding
+                   if kv.pages_needed(kv.length(sid) + 1)
+                   > kv.pages_held(sid))
 
     def cache_stats(self) -> dict:
         """Prefix-cache counters from the backend (empty for slot backend)."""
@@ -257,10 +337,87 @@ class ContinuousBatchingEngine:
         p = self.stats["spec_proposed"]
         return self.stats["spec_accepted"] / p if p else 0.0
 
+    # -- preemption ---------------------------------------------------------------
+    def preempt(self, request_id: str) -> bool:
+        """Evict a RUNNING sequence: publish its computed pages to the
+        prefix cache (or swap its KV to the host), free its slot/pages, and
+        requeue it for a later restore. Returns False if the request is not
+        currently running (mid-prefill sequences are not preemptible —
+        their restore would just repeat the same prefill)."""
+        run = self.running.pop(request_id, None)
+        if run is None:
+            return False
+        stream = run.req.prompt_tokens + run.output_tokens
+        if self.cfg.preempt_swap and hasattr(self.backend, "swap_out"):
+            run.swap_blob = self.backend.swap_out(request_id)
+            self.stats["swap_outs"] += 1
+        else:
+            # register the victim's full pages in the content index so the
+            # restore prefill content-matches them out of the LRU
+            self.backend.publish(request_id, stream[:run.cache_len])
+        self._release_slot(request_id)
+        self.policy.on_released(run.req)
+        run.metrics.preemptions += 1
+        self.stats["preemptions"] += 1
+        self._preempted[request_id] = run
+        self.policy.requeue(run.req)
+        return True
+
+    def _page_deficit(self) -> int:
+        """Pages the next decode step needs beyond what the pool can claim
+        (0 for the slot backend: it never runs out mid-decode)."""
+        kv = getattr(self.backend, "kv", None)
+        if kv is None:
+            return 0
+        return max(0, self._appends_due() - kv.free_pages)
+
+    def _admissible_ever(self, n_tokens: int) -> bool:
+        """Whether an admission of ``n_tokens`` could EVER fit an empty
+        engine — preempting for one that cannot would thrash forever."""
+        if n_tokens >= self.cfg.max_seq_len:
+            return False
+        kv = getattr(self.backend, "kv", None)
+        if kv is not None and kv.pages_needed(n_tokens + 1) > kv.num_pages - 1:
+            return False
+        return True
+
+    def _maybe_preempt(self):
+        """Policy-driven eviction, two triggers: the pool cannot cover the
+        next decode step's page appends (pressure), or the queue head is
+        blocked on capacity while lower-urgency sequences run."""
+        if not self.cfg.enable_preemption:
+            return
+        view = [(rid, run.req, len(run.output_tokens),
+                 run.metrics.preemptions)
+                for rid, run in self.running.items()]
+        deficit = self._page_deficit()
+        # pressure needs at least two running sequences: shedding the sole
+        # runner frees pages nothing else can use (and would livelock a
+        # sequence whose stream simply outgrew the pool)
+        while deficit > 0 and len(view) > 1:
+            victim = self.policy.select_victim(None, view)
+            if victim is None or not self.preempt(victim):
+                break
+            view = [e for e in view if e[0] != victim]
+            deficit = self._page_deficit()
+        head = self.policy.peek()
+        if head is None:
+            return
+        n = self._admit_len(head)
+        if self._can_admit(n) or not self._admissible_ever(n):
+            return
+        victim = self.policy.select_victim(head, view)
+        if victim is not None:
+            self.preempt(victim)
+
     # -- engine iteration ---------------------------------------------------------
     def step(self) -> list[RequestOutput]:
         self.stats["steps"] += 1
         finished: list[RequestOutput] = []
+
+        # 0) policy-driven eviction (page pressure / blocked urgent head):
+        # freed pages are claimable by this same step's admissions
+        self._maybe_preempt()
 
         # 1) prefill: whole prompts (legacy) or up to the chunk budget
         if self.cfg.chunked_prefill_budget > 0:
@@ -416,8 +573,12 @@ class ContinuousBatchingEngine:
         return outs
 
     # -- prefill scheduling -------------------------------------------------------
-    def _admit(self) -> tuple[_Running, PrefillTask]:
-        req = self.waiting.popleft()
+    def _admit(self) -> tuple[_Running, PrefillTask | None]:
+        req = self.policy.pop()
+        self.policy.on_admitted(req)
+        run = self._preempted.pop(req.request_id, None)
+        if run is not None:
+            return self._admit_restore(run)
         run = _Running(req=req, metrics=req._metrics)
         task = self.backend.start_prefill(req.request_id, req.prompt_tokens)
         if self.draft_backend is not None:
@@ -431,15 +592,52 @@ class ContinuousBatchingEngine:
         self.stats["cached_prompt_tokens"] += task.cached_tokens
         return run, task
 
+    def _admit_restore(self, run: _Running) -> tuple[_Running, PrefillTask | None]:
+        """Re-admit a preempted victim. Swap path: upload the saved host KV
+        and rejoin the decode batch immediately (no recompute). Recompute
+        path: a prefill of the emitted stream minus its last token — whose
+        leading pages usually content-match what the victim published on
+        eviction, so only the partial tail page actually computes."""
+        rid = run.req.request_id
+        run.restoring = True
+        hist = (run.req.prompt_tokens + run.output_tokens)[:-1]
+        if run.swap_blob is not None:
+            self.backend.swap_in(rid, len(hist), run.swap_blob)
+            run.swap_blob = None
+            self.stats["swap_ins"] += 1
+            if self.draft_backend is not None:
+                run.draft_task = self.draft_backend.start_prefill(rid, hist)
+            self._finish_restore(run)
+            return run, None
+        task = self.backend.start_prefill(rid, hist)
+        if self.draft_backend is not None:
+            run.draft_task = self.draft_backend.start_prefill(rid, hist)
+        run.metrics.restore_cached_tokens += task.cached_tokens
+        self.stats["restore_cached_tokens"] += task.cached_tokens
+        return run, task
+
+    def _finish_ingest(self, run: _Running, logits, finished: list):
+        """A prompt (or a restore's emitted stream) is fully in the cache:
+        rejoin the decode batch — sampling a first token for fresh
+        admissions, resuming the saved stream for restores."""
+        if run.restoring:
+            self._finish_restore(run)
+        else:
+            self._finish_prefill(run, logits, finished)
+
     def _prefill_one_shot(self, finished: list):
         admitted = 0
-        while (self.waiting and admitted < self.cfg.max_prefills_per_step
-               and self._can_admit(len(self.waiting[0].prompt_tokens))):
+        while admitted < self.cfg.max_prefills_per_step:
+            head = self.policy.peek()
+            if head is None or not self._can_admit(self._admit_len(head)):
+                break
             run, task = self._admit()
+            admitted += 1
+            if task is None:                  # swap-in restore: no prefill
+                continue
             logits, n = self.backend.prefill_chunk(task, None)
             self._account_chunk(run, n)
-            self._finish_prefill(run, logits, finished)
-            admitted += 1
+            self._finish_ingest(run, logits, finished)
 
     def _prefill_chunked(self, finished: list):
         budget = self.cfg.chunked_prefill_budget
@@ -454,18 +652,21 @@ class ContinuousBatchingEngine:
             self._account_chunk(run, n)
             if logits is not None:
                 del self.prefilling[rid]
-                self._finish_prefill(run, logits, finished)
+                self._finish_ingest(run, logits, finished)
         admitted = 0
-        while (left > 0 and self.waiting
-               and admitted < self.cfg.max_prefills_per_step
-               and self._can_admit(len(self.waiting[0].prompt_tokens))):
+        while left > 0 and admitted < self.cfg.max_prefills_per_step:
+            head = self.policy.peek()
+            if head is None or not self._can_admit(self._admit_len(head)):
+                break
             run, task = self._admit()
             admitted += 1
+            if task is None:                  # swap-in restore: no prefill
+                continue
             logits, n = self.backend.prefill_chunk(task, left)
             left -= n
             self._account_chunk(run, n)
             if logits is not None:
-                self._finish_prefill(run, logits, finished)
+                self._finish_ingest(run, logits, finished)
             else:
                 self.prefilling[run.req.request_id] = (run, task)
 
@@ -493,6 +694,24 @@ class ContinuousBatchingEngine:
                         == self.backend.slot(run.req.request_id)), \
                     "draft/target slot assignment diverged"
             self._activate_slot(run)
+
+    def _finish_restore(self, run: _Running):
+        """A preempted victim's KV is whole again (swap-in or restore
+        prefill): rejoin the decode batch with the SAME sampling state —
+        ``n_gen`` picks up where it left off, so seeds fold identically
+        and the stream stays token-identical to an uninterrupted run. No
+        token is sampled here (the restore prefill's logits are for a
+        position whose token was already emitted)."""
+        rid = run.req.request_id
+        run.restoring = False
+        self.running[rid] = run
+        self.stats["restores"] += 1
+        if run.draft_task is not None:
+            self.draft_backend.prefill_chunk(run.draft_task, None)
+            run.draft_len = run.cache_len
+            assert (self.draft_backend.slot(rid) == self.backend.slot(rid)), \
+                "draft/target slot assignment diverged"
+        self._activate_slot(run)
 
     # -- slot state ---------------------------------------------------------------
     def _activate_slot(self, run: _Running):
@@ -549,6 +768,7 @@ class ContinuousBatchingEngine:
         run.metrics.finish_time = self.clock.now()
         self._release_slot(run.req.request_id)
         del self.running[run.req.request_id]
+        self.policy.on_released(run.req)
         self.stats["finished"] += 1
         return RequestOutput(request_id=run.req.request_id,
                              output_tokens=run.output_tokens, finished=True,

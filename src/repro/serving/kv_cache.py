@@ -269,6 +269,10 @@ class PagedKVCache:
     def length(self, seq_id: str) -> int:
         return self._lens[seq_id]
 
+    def pages_held(self, seq_id: str) -> int:
+        """Block-table size (committed pages + decode headroom)."""
+        return len(self._tables[seq_id])
+
     def ref_count(self, page: int) -> int:
         return self._ref.get(page, 0)
 

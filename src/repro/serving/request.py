@@ -26,6 +26,12 @@ class InferenceRequest:
     user: str = "anonymous"
     arrival_time: float = 0.0
     api_endpoint: str = "chat/completions"    # chat/completions|completions|embeddings
+    # QoS routing/scheduling fields, threaded gateway -> engine (see
+    # serving/scheduler.py): workload class, intra-class priority (lower =
+    # more urgent), and absolute TTFT deadline (clock time; None = none)
+    qos: str = "interactive"                  # interactive | batch
+    priority: int = 0
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         if not self.request_id:
@@ -40,6 +46,8 @@ class RequestMetrics:
     finish_time: float = 0.0
     cached_prompt_tokens: int = 0  # prompt tokens served from the prefix cache
     prefill_chunks: int = 0        # engine steps this prompt's ingest spanned
+    preemptions: int = 0           # times this request was evicted mid-run
+    restore_cached_tokens: int = 0  # restore-prefill tokens the cache covered
 
     @property
     def ttft(self):

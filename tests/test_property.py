@@ -142,6 +142,104 @@ def test_prefix_cache_allocator_invariants(data):
 
 
 # ---------------------------------------------------------------------------
+# real-engine invariants under admit/abort/preempt/step churn
+# ---------------------------------------------------------------------------
+
+
+_TINY = {}
+
+
+def _tiny_lm():
+    """Lazy module-level tiny model (hypothesis forbids function-scoped
+    fixtures inside @given bodies; one build serves every example)."""
+    if not _TINY:
+        import jax
+        from repro.configs import REGISTRY, reduced
+        from repro.models import make_model
+        cfg = reduced(REGISTRY["llama3.2-3b"])
+        model = make_model(cfg)
+        _TINY["m"] = (cfg, model, model.init_params(jax.random.PRNGKey(0)))
+    return _TINY["m"]
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_engine_invariants_under_churn(data):
+    """Random admit/abort/preempt/step sequences against the REAL paged
+    engine, across scheduling policies: live slots never exceed
+    ``max_slots``, page refcounts exactly count owning block tables (the
+    {referenced, LRU, free} partition holds), and every non-aborted
+    request is emitted exactly once — none lost, none duplicated."""
+    from collections import Counter
+
+    from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+    from repro.serving.request import InferenceRequest, SamplingParams
+
+    cfg, model, params = _tiny_lm()
+    policy = data.draw(st.sampled_from(["fcfs", "priority", "edf"]))
+    eng = ContinuousBatchingEngine(model, params, EngineConfig(
+        max_slots=2, max_seq_len=48, backend="paged", page_size=8,
+        enable_prefix_cache=data.draw(st.booleans(), label="prefix_cache"),
+        chunked_prefill_budget=data.draw(st.sampled_from([0, 6])),
+        scheduling_policy=policy,
+        enable_preemption=data.draw(st.booleans(), label="preempt")))
+    rng = np.random.default_rng(0)
+    added, aborted, emitted = {}, set(), {}
+
+    def check():
+        assert len(eng.running) + len(eng.prefilling) <= eng.cfg.max_slots
+        kv = eng.backend.kv
+        owned = Counter(p for t in kv._tables.values() for p in t)
+        for p, n in owned.items():
+            assert kv.ref_count(p) == n
+        assert set(kv._free).isdisjoint(owned)
+        assert set(kv._lru).isdisjoint(owned)
+        assert (len(kv._free) + len(kv._lru) + len(set(owned))
+                == kv.num_pages - 1)
+
+    def drain_outputs(outs):
+        for o in outs:
+            emitted[o.request_id] = emitted.get(o.request_id, 0) + 1
+
+    n_req = 0
+    for _ in range(data.draw(st.integers(3, 14))):
+        op = data.draw(st.sampled_from(
+            ["add", "step", "step", "abort", "preempt"]))
+        if op == "add":
+            rid = f"r{n_req}"
+            n_req += 1
+            plen = data.draw(st.integers(2, 12))
+            req = InferenceRequest(
+                model="m", request_id=rid,
+                prompt_tokens=rng.integers(
+                    2, cfg.vocab_size, size=plen).tolist(),
+                qos=data.draw(st.sampled_from(["interactive", "batch"])),
+                deadline=data.draw(st.sampled_from([None, 1.0, 9.9])),
+                sampling=SamplingParams(
+                    max_tokens=data.draw(st.integers(1, 6))))
+            eng.add_request(req)
+            added[rid] = req
+        elif op == "abort" and added:
+            rid = data.draw(st.sampled_from(sorted(added)))
+            if eng.abort(rid):
+                aborted.add(rid)
+        elif op == "preempt" and eng.running:
+            eng.preempt(data.draw(st.sampled_from(sorted(eng.running))))
+        elif op == "step":
+            drain_outputs(eng.step())
+        check()
+    for _ in range(400):
+        if not eng.has_work():
+            break
+        drain_outputs(eng.step())
+        check()
+    assert not eng.has_work(), "engine failed to drain"
+    assert set(emitted) == set(added) - aborted     # none lost
+    assert all(v == 1 for v in emitted.values())    # none emitted twice
+    assert eng.stats["finished"] == len(emitted)
+
+
+# ---------------------------------------------------------------------------
 # gateway rate limiter
 # ---------------------------------------------------------------------------
 
@@ -213,16 +311,17 @@ def test_sharding_specs_always_divide():
 
 
 class _EP:
-    """Stub endpoint with controllable hot/free/hosts state."""
+    """Stub endpoint with controllable hot/free/queue/hosts state."""
 
-    def __init__(self, hot, free, hosts=True, need=1):
+    def __init__(self, hot, free, hosts=True, need=1, queued=0):
         self._hot = hot
         self._free = free
         self._hosts = hosts
         self.deployments = {"m": type("D", (), {
             "nodes_per_instance": need})()}
         self.scheduler = type("S", (), {
-            "available_nodes": lambda s=None, f=free: f})()
+            "available_nodes": lambda s=None, f=free: f,
+            "queue_depth": lambda s=None, q=queued: q})()
 
     def hosts(self, model):
         return self._hosts
@@ -231,19 +330,29 @@ class _EP:
         return ["running"] if self._hot else []
 
 
+def _least_loaded(eps, cands):
+    """The rule-1/2 tie-break winner: shallowest scheduler queue, then
+    most free nodes, then candidate (registry) order."""
+    return min(cands, key=lambda e: (eps[e].scheduler.queue_depth(),
+                                     -eps[e].scheduler.available_nodes(),
+                                     cands.index(e)))
+
+
 @given(st.data())
 @settings(max_examples=40, deadline=None)
 def test_federation_never_returns_unhealthy_under_flaps(data):
     """Random endpoint states + random health flaps: select_endpoint NEVER
     returns an unhealthy (or non-hosting) endpoint, and within the healthy
-    candidates it follows the §4.5 priority rules in registry order."""
+    candidates it follows the §4.5 priority rules with the load tie-break
+    (queue depth, then free nodes, then registry order)."""
     from repro.core.federation import FederationError, FederationRouter
 
     n = data.draw(st.integers(1, 5))
     ids = [f"e{i}" for i in range(n)]
     eps = {e: _EP(hot=data.draw(st.booleans(), label=f"hot_{e}"),
                   free=data.draw(st.integers(0, 3), label=f"free_{e}"),
-                  hosts=data.draw(st.booleans(), label=f"hosts_{e}"))
+                  hosts=data.draw(st.booleans(), label=f"hosts_{e}"),
+                  queued=data.draw(st.integers(0, 2), label=f"queued_{e}"))
            for e in ids}
     order = data.draw(st.permutations(ids))
     router = FederationRouter(eps, {"m": order})
@@ -262,12 +371,16 @@ def test_federation_never_returns_unhealthy_under_flaps(data):
         hot = [e for e in healthy if eps[e]._hot]
         free = [e for e in healthy if eps[e]._free >= 1]
         if hot:
-            # rule 1 wins, at the FIRST hot endpoint in registry order
-            assert (choice, rule) == (hot[0], "active-instance")
+            # rule 1 wins, at the least-loaded hot endpoint
+            assert (choice, rule) == (_least_loaded(eps, hot),
+                                      "active-instance")
         elif free:
-            assert (choice, rule) == (free[0], "free-nodes")
+            assert (choice, rule) == (_least_loaded(eps, free), "free-nodes")
         else:
             assert (choice, rule) == (healthy[0], "configured-order")
+        if rule != "configured-order":
+            # the tie-break inputs are recorded in the decision detail
+            assert "queue_depth=" in router.decisions[-1][3]
 
 
 @given(st.data())
@@ -416,30 +529,22 @@ def test_autoscaler_caps_cooldown_and_gating(data):
        hot_a=st.booleans(), hot_b=st.booleans())
 @settings(max_examples=30, deadline=None)
 def test_federation_priority_rules(free_a, free_b, hot_a, hot_b):
-    class EP:
-        def __init__(self, hot, free):
-            self._hot = hot
-            self._free = free
-            self.deployments = {"m": type("D", (), {
-                "nodes_per_instance": 1})()}
-            self.scheduler = type("S", (), {
-                "available_nodes": lambda s=None, f=free: f})()
-
-        def hosts(self, model):
-            return True
-
-        def model_states(self, model):
-            return ["running"] if self._hot else []
-
     from repro.core.federation import FederationRouter
-    eps = {"a": EP(hot_a, free_a), "b": EP(hot_b, free_b)}
+    eps = {"a": _EP(hot_a, free_a), "b": _EP(hot_b, free_b)}
     router = FederationRouter(eps, {"m": ["a", "b"]})
     choice = router.select_endpoint("m")
     rule = router.decisions[-1][2]
-    if hot_a:
+    if hot_a and hot_b:
+        # rule-1 tie: equal (zero) queue depth, so free nodes decide
+        want = "b" if free_b > free_a else "a"
+        assert choice == want and rule == "active-instance"
+    elif hot_a:
         assert choice == "a" and rule == "active-instance"
     elif hot_b:
         assert choice == "b" and rule == "active-instance"
+    elif free_a >= 1 and free_b >= 1:
+        want = "b" if free_b > free_a else "a"
+        assert choice == want and rule == "free-nodes"
     elif free_a >= 1:
         assert choice == "a" and rule == "free-nodes"
     elif free_b >= 1:
