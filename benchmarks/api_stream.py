@@ -1,0 +1,140 @@
+"""/v1 streaming benchmark: what the typed API layer makes VISIBLE.
+
+Before this layer the gateway returned one completion-time future — TTFT
+and inter-token latency existed only inside the engine. This suite drives
+the same DES deployment twice (non-streamed vs ``stream=true``) and
+reports the gateway-observed streaming latencies, then exercises the
+disconnect path (client cancel mid-stream frees the engine slot).
+
+Acceptance gates (``smoke=True``, run by CI):
+  * streamed and non-streamed requests produce identical token counts;
+  * every streamed request records gateway-side TTFT strictly before its
+    completion time, with at least 2 frames;
+  * cancelling a stream mid-flight aborts the engine-side sequence.
+
+Virtual-clock DES: results are deterministic, no wall-clock sensitivity.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+
+from benchmarks.common import (DEP_70B, GLOBUS_HOP, LLAMA70B, csv_line,
+                               first_system, make_workload, print_table,
+                               warm_up)
+from repro.api import FirstClient, StreamAssembler, errors
+
+
+def _drive(n: int, stream: bool):
+    sysd = first_system(LLAMA70B, dep_kw=DEP_70B)
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("bench"))
+    wl = make_workload(n, rate=4.0, seed=17)
+    done, asms = {}, {}
+
+    def submit(w):
+        kw = dict(model=LLAMA70B.name, prompt_tokens=w.prompt_tokens,
+                  max_tokens=w.max_tokens, request_id=w.request_id)
+        if stream:
+            fut, asm = client.stream(**kw)
+            asms[w.request_id] = asm
+        else:
+            fut = client.chat(**kw)
+        fut.add_done_callback(
+            lambda f, w=w: done.__setitem__(w.request_id, f))
+
+    for w in wl:
+        sysd.loop.call_at(w.arrival, submit, w)
+    sysd.loop.run_until_idle()
+    assert all(f.error is None for f in done.values())
+    toks = {rid: f.result().usage.completion_tokens
+            for rid, f in done.items()}
+    return sysd, toks, asms
+
+
+def run_cancel_probe() -> dict:
+    """One long stream cancelled mid-flight: the engine slot must free."""
+    sysd = first_system(LLAMA70B, dep_kw=DEP_70B)
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("bench"))
+    fut, asm = client.stream(model=LLAMA70B.name, prompt_tokens=128,
+                             max_tokens=5000, request_id="probe")
+    sysd.loop.call_after(GLOBUS_HOP * 2 + 30.0,
+                         lambda: client.cancel("probe"))
+    sysd.loop.run_until_idle()
+    inst = sysd.endpoints["sophia-ep"].instances[LLAMA70B.name][0]
+    return {"cancelled": isinstance(fut.error, errors.RequestCancelled),
+            "frames_before_cancel": len(asm.deltas),
+            "engine_load_after": inst.engine.load,
+            "engine_aborted": inst.engine.total_aborted}
+
+
+def main(fast: bool = False, smoke: bool = False) -> dict:
+    n = 16 if (fast or smoke) else 64
+    _, ref_toks, _ = _drive(n, stream=False)
+    sysd, stream_toks, asms = _drive(n, stream=True)
+
+    recs = {r.request_id: r for r in sysd.metrics.records if r.streamed}
+    ttfts = sorted(r.ttft for r in recs.values())
+    e2es = sorted(r.e2e for r in recs.values())
+    gaps = sorted(g for r in recs.values() for g in r.itl)
+    s = sysd.metrics.summary()
+    probe = run_cancel_probe()
+
+    rows = [
+        ["requests", n, ""],
+        ["parity (tokens)", "ok" if stream_toks == ref_toks else "MISMATCH",
+         "streamed == non-streamed"],
+        ["median TTFT", f"{statistics.median(ttfts):.2f}s",
+         "gateway-observed, hop included"],
+        ["median e2e", f"{statistics.median(e2es):.2f}s", ""],
+        ["median ITL", f"{s.get('stream_median_itl_s', 0):.3f}s",
+         "per stream frame"],
+        ["p99 ITL", f"{s.get('stream_p99_itl_s', 0):.3f}s", ""],
+        ["cancel probe", "ok" if probe["cancelled"] else "FAILED",
+         f"{probe['frames_before_cancel']} frames then disconnect"],
+    ]
+    print_table("/v1 streaming at the gateway (DES, Llama-70B)",
+                ["metric", "value", "note"], rows, widths=[18, 14, 30])
+
+    out = {
+        "requests": n,
+        "parity_ok": stream_toks == ref_toks,
+        "median_ttft_s": statistics.median(ttfts),
+        "median_e2e_s": statistics.median(e2es),
+        "median_itl_s": s.get("stream_median_itl_s", 0.0),
+        "p99_itl_s": s.get("stream_p99_itl_s", 0.0),
+        "min_frames": min(r.stream_frames for r in recs.values()),
+        "cancel_probe": probe,
+    }
+    csv_line("api_stream/parity", 0.0,
+             f"parity={out['parity_ok']};ttft={out['median_ttft_s']:.2f}")
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "benchmarks",
+                        f"api_stream{'.fast' if (fast or smoke) else ''}"
+                        ".json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.abspath(path)}")
+
+    # acceptance gates — deterministic on the virtual clock, safe for CI
+    if not out["parity_ok"]:
+        raise SystemExit("GATE FAILED: streamed tokens != non-streamed")
+    if out["min_frames"] < 2:
+        raise SystemExit("GATE FAILED: a streamed request saw < 2 frames")
+    bad_ttft = [rid for rid, r in recs.items()
+                if not (0 < r.ttft < r.e2e)]
+    if bad_ttft:
+        raise SystemExit(f"GATE FAILED: TTFT not before completion for "
+                         f"{bad_ttft}")
+    if not probe["cancelled"] or probe["engine_load_after"] != 0 \
+            or probe["engine_aborted"] != 1:
+        raise SystemExit(f"GATE FAILED: cancel probe {probe}")
+    print("api_stream gates passed")
+    return out
+
+
+if __name__ == "__main__":
+    main()

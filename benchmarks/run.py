@@ -11,6 +11,8 @@
   spec_decode   (real)  draft-and-verify speculative decoding, JSON output
   qos_preemption (real) interactive TTFT under a batch flood: FCFS vs
                         priority vs priority+preemption, JSON output
+  api_stream    (DES)   /v1 token streaming at the gateway: parity,
+                        TTFT/ITL, cancel propagation, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
@@ -24,8 +26,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (autoscale, batch_mode, concurrency, decode_loop,
-                        engine_step, external_api, prefix_cache,
+from benchmarks import (api_stream, autoscale, batch_mode, concurrency,
+                        decode_loop, engine_step, external_api, prefix_cache,
                         qos_preemption, rate_sweep, roofline, spec_decode)
 
 SUITES = {
@@ -39,13 +41,14 @@ SUITES = {
     "decode_loop": decode_loop.main,
     "spec_decode": spec_decode.main,
     "qos_preemption": qos_preemption.main,
+    "api_stream": api_stream.main,
     "roofline": roofline.main,
 }
 
 # real-engine suites with self-enforced acceptance thresholds: these are
 # the ones a perf-path regression breaks, so CI runs exactly these
 SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode",
-                "qos_preemption"]
+                "qos_preemption", "api_stream"]
 
 
 def main() -> None:
@@ -70,7 +73,7 @@ def main() -> None:
         t0 = time.time()
         kw = {"fast": args.fast or args.smoke}
         if args.smoke and name in ("decode_loop", "spec_decode",
-                                   "qos_preemption"):
+                                   "qos_preemption", "api_stream"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

@@ -14,6 +14,7 @@ import tempfile
 import jax
 import numpy as np
 
+from repro.api import FirstClient
 from repro.configs import REGISTRY, reduced
 from repro.core.testbed import LLAMA70B, build_system, default_deployment
 from repro.models import make_model
@@ -22,16 +23,18 @@ from repro.serving.offline import run_batch
 from repro.serving.request import InferenceRequest, SamplingParams
 
 # ---------------------------------------------------------------------------
-# write the JSONL input file
+# write the NDJSON input file (OpenAI batch line shape: custom_id + body)
 # ---------------------------------------------------------------------------
 rng = np.random.default_rng(7)
 jsonl = os.path.join(tempfile.gettempdir(), "first_batch_input.jsonl")
 with open(jsonl, "w") as f:
     for i in range(500):
         f.write(json.dumps({
-            "request_id": f"b{i}",
-            "prompt_tokens": int(rng.integers(16, 512)),
-            "max_tokens": int(rng.integers(16, 256)),
+            "custom_id": f"b{i}",
+            "method": "POST", "url": "/v1/completions",
+            "body": {"model": LLAMA70B.name,
+                     "prompt_tokens": int(rng.integers(16, 512)),
+                     "max_tokens": int(rng.integers(16, 256))},
         }) + "\n")
 print(f"wrote {jsonl}")
 
@@ -40,18 +43,22 @@ print(f"wrote {jsonl}")
 # ---------------------------------------------------------------------------
 system = build_system(
     {"sophia": {LLAMA70B.name: default_deployment(LLAMA70B)}})
+client = FirstClient(system.gateway, system.token_for("alice"))
 with open(jsonl) as f:
-    requests = [json.loads(line) for line in f]
-job = system.batch.submit_batch(LLAMA70B.name, requests)
-print("submitted:", system.batch.status(job.batch_id))
+    items = [json.loads(line) for line in f]
+fut = client.create_batch(items)
 system.loop.run_until(120.0)        # cold start in progress
-print("while loading:", system.batch.status(job.batch_id))
+bid = fut.result().id
+print("while loading:", client.batch_status(bid).to_dict())
 system.loop.run_until_idle()
-st = system.batch.status(job.batch_id)
-dur = job.finish_time - job.submit_time
-print(f"completed: {st['completed']} requests, {st['output_tokens']} tokens "
-      f"in {dur:.0f}s -> {st['output_tokens']/dur:.0f} tok/s "
-      f"(cold start {job.start_time - job.submit_time:.0f}s amortized)")
+st = client.batch_status(bid)
+dur = st.completed_at - st.created_at
+results = client.batch_results(bid)
+usage0 = results[0]["response"].usage
+print(f"completed: {st.completed} requests, {st.output_tokens} tokens "
+      f"in {dur:.0f}s -> {st.output_tokens/dur:.0f} tok/s "
+      f"(cold start {st.in_progress_at - st.created_at:.0f}s amortized); "
+      f"per-request result[0] usage={usage0.to_dict()}")
 
 # ---------------------------------------------------------------------------
 # data plane: the real offline engine (reduced model, CPU)

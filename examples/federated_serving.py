@@ -9,6 +9,7 @@ work and the victims restore via the prefix cache).
 
 Run:  PYTHONPATH=src python examples/federated_serving.py
 """
+from repro.api import FirstClient
 from repro.core.gateway import GatewayConfig
 from repro.core.testbed import (LLAMA70B, build_system, default_deployment,
                                 drive_workload, warm_up)
@@ -51,11 +52,10 @@ print(f"burst of 400: {s['req_per_s']:.1f} req/s, "
 # 4) sophia outage -> health monitor reroutes to polaris transparently
 system.health.mark_down("sophia-ep")
 system.loop.run_until(system.loop.now() + 15.0)
-token = system.token_for("alice")
-fut = system.gateway.submit(token, {"model": MODEL, "prompt_tokens": 64,
-                                    "max_tokens": 32})
+client = FirstClient(system.gateway, system.token_for("alice"))
+fut = client.chat(model=MODEL, prompt_tokens=64, max_tokens=32)
 system.loop.run_until_idle()
-print(f"after sophia outage: served by {fut.result()['endpoint']} "
+print(f"after sophia outage: served by {fut.result().endpoint_id} "
       f"(rule: {system.router.decisions[-1][2]})")
 
 # 5) /jobs view across the federation
@@ -70,18 +70,19 @@ system.health.mark_up("sophia-ep")
 system.health.mark_down("polaris-ep")
 system.loop.run_until(system.loop.now() + 15.0)
 t0 = system.loop.now()
-batch_futs = [system.gateway.submit(token, {
-    "request_id": f"flood-{j}", "model": MODEL, "prompt_tokens": 256,
-    "max_tokens": 1500, "qos": "batch"}) for j in range(96)]
+batch_futs = [client.chat(model=MODEL, request_id=f"flood-{j}",
+                          prompt_tokens=256, max_tokens=1500, qos="batch")
+              for j in range(96)]
 interactive = {}
 
 
 def ask_interactive():
-    # prompt/max_tokens differ from every earlier request so the gateway
-    # response cache cannot short-circuit the engine
-    interactive["fut"] = system.gateway.submit(token, {
-        "request_id": "chat-1", "model": MODEL, "prompt_tokens": 72,
-        "max_tokens": 24, "qos": "interactive"})
+    # the interactive request STREAMS: its gateway-observed TTFT shows the
+    # preemption actually worked while the flood is still draining
+    fut, asm = client.stream(model=MODEL, request_id="chat-1",
+                             prompt_tokens=72, max_tokens=24,
+                             qos="interactive")
+    interactive["fut"], interactive["asm"] = fut, asm
     interactive["t"] = system.loop.now()
 
 
@@ -93,7 +94,9 @@ flood_e2e = sorted(recs[f"flood-{j}"].e2e for j in range(96)
                    if f"flood-{j}" in recs)
 preempts = sum(i.engine.total_preemptions
                for i in system.endpoints["sophia-ep"].instances[MODEL])
-print(f"QoS: interactive e2e {recs['chat-1'].e2e:.2f}s vs batch median "
-      f"{flood_e2e[len(flood_e2e) // 2]:.1f}s "
+asm = interactive["asm"]
+print(f"QoS: interactive TTFT {asm.ttft - interactive['t']:.2f}s / e2e "
+      f"{recs['chat-1'].e2e:.2f}s over {len(asm.deltas)} stream frames vs "
+      f"batch median {flood_e2e[len(flood_e2e) // 2]:.1f}s "
       f"(sophia preemptions={preempts}, decision detail: "
       f"{next(d for d in reversed(system.router.decisions) if 'qos=interactive' in d[3])[3]})")

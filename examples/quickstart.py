@@ -11,6 +11,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
+from repro.api import FirstClient
 from repro.configs import REGISTRY, reduced
 from repro.core.testbed import LLAMA70B, build_system, default_deployment
 from repro.models import make_model
@@ -18,32 +19,33 @@ from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
 from repro.serving.request import InferenceRequest, SamplingParams
 
 # ---------------------------------------------------------------------------
-# 1) control plane: a 70B deployment on a 24-node cluster
+# 1) control plane: a 70B deployment on a 24-node cluster, typed /v1 client
 # ---------------------------------------------------------------------------
 print("== control plane (DES) ==")
 system = build_system(
     {"sophia": {LLAMA70B.name: default_deployment(LLAMA70B)}})
-token = system.token_for("alice")
+client = FirstClient(system.gateway, system.token_for("alice"))
 
 # first request: cold start (queue -> node acquisition -> weight load)
-fut = system.gateway.submit(token, {
-    "model": LLAMA70B.name, "prompt_tokens": 256, "max_tokens": 64})
+fut = client.chat(model=LLAMA70B.name, prompt_tokens=256, max_tokens=64)
 system.loop.run_until(30.0)
-print("while loading, /jobs reports:", system.gateway.jobs_status())
+print("while loading, /jobs reports:", client.jobs())
 system.loop.run_until_idle()
-r = fut.result()
+r = fut.result()                    # typed ChatCompletionResponse
 print(f"cold request done at t={system.loop.now():.1f}s "
-      f"({r['output_tokens']} tokens from {r['endpoint']})")
+      f"(usage={r.usage.to_dict()} from {r.endpoint_id})")
 
-# second request: the node is HOT -> low latency (temperature>0 bypasses
-# the gateway's deterministic-response cache)
+# second request: the node is HOT and the client STREAMS — TTFT and
+# inter-token latency are visible at the API boundary now
 t0 = system.loop.now()
-fut = system.gateway.submit(token, {
-    "model": LLAMA70B.name, "prompt_tokens": 300, "max_tokens": 64,
-    "temperature": 0.7})
+fut, stream = client.stream(model=LLAMA70B.name, prompt_tokens=300,
+                            max_tokens=64, temperature=0.7)
 system.loop.run_until_idle()
-print(f"hot request served in {system.loop.now() - t0:.2f}s "
-      f"(vs ~{90:.0f}s cold)")
+gaps = stream.inter_token_gaps
+print(f"hot request streamed in {system.loop.now() - t0:.2f}s (vs ~90s "
+      f"cold): TTFT {stream.ttft - t0:.2f}s, "
+      f"{len(stream.deltas)} frames, median ITL "
+      f"{sorted(gaps)[len(gaps) // 2]:.3f}s")
 
 # ---------------------------------------------------------------------------
 # 2) data plane: real model, real engine, greedy decoding
@@ -59,14 +61,25 @@ engine = ContinuousBatchingEngine(
                                 chunked_prefill_budget=32))
 rng = np.random.default_rng(0)
 system_prompt = rng.integers(2, cfg.vocab_size, size=32).tolist()
+from repro.api import StreamAssembler, to_inference_request
+from repro.api.schemas import CompletionRequest
+
+streams = {}
 for i in range(6):
     # shared system prompt + unique tail: after the first request the
     # prefix cache serves the shared pages without recomputing them
     prompt = system_prompt + rng.integers(2, cfg.vocab_size, size=8).tolist()
-    engine.add_request(InferenceRequest(
-        model=cfg.name, prompt_tokens=prompt, request_id=f"req-{i}",
-        sampling=SamplingParams(max_tokens=16, temperature=0.0)))
+    # typed /v1 request -> engine request; every request streams
+    req = CompletionRequest(model=cfg.name, prompt_tokens=prompt,
+                            request_id=f"req-{i}", max_tokens=16,
+                            temperature=0.0, stream=True).validate()
+    streams[req.request_id] = StreamAssembler()
+    engine.add_request(to_inference_request(req),
+                       on_delta=streams[req.request_id])
 outs = engine.run_to_completion()
+assert all(streams[o.request_id].tokens == o.output_tokens for o in outs), \
+    "streamed frames must reassemble to the exact output"
+
 for o in sorted(outs, key=lambda o: o.request_id):
     print(f"{o.request_id}: {o.num_output_tokens} tokens "
           f"({o.finish_reason}) -> {o.output_tokens[:8]}...")

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.api import schemas
+from repro.api.errors import RequestCancelled
 from repro.core.autoscale import AutoScaler, AutoScalePolicy
 from repro.core.clock import Future
 from repro.core.instances import InstanceState, ModelInstance, SimRequest
@@ -20,6 +22,38 @@ from repro.serving.costmodel import InstanceCost
 
 class ComputeError(Exception):
     pass
+
+
+class StreamChannel:
+    """The gateway's live back-channel for one task (the DES analogue of a
+    held-open SSE connection): first-token notifications and incremental
+    ``StreamDelta`` frames ride it back with one network-hop latency each,
+    independent of the task's completion future."""
+
+    def __init__(self, loop, latency: float, on_first_token=None,
+                 on_delta=None):
+        self.loop = loop
+        self.latency = latency
+        self.on_first_token = on_first_token
+        self.on_delta = on_delta
+        self._idx = 0
+
+    def first_token(self, request_id: str, t: float):
+        if self.on_first_token is not None:
+            self.loop.call_after(self.latency, self.on_first_token,
+                                 request_id, t)
+
+    def delta(self, request_id: str, n_tokens: int, t: float,
+              offset: int = 0, finished: bool = False,
+              finish_reason: str = ""):
+        if self.on_delta is None:
+            return
+        frame = schemas.StreamDelta(id=request_id, index=self._idx,
+                                    n_tokens=n_tokens, offset=offset,
+                                    created=t, finished=finished,
+                                    finish_reason=finish_reason)
+        self._idx += 1
+        self.loop.call_after(self.latency, self.on_delta, frame)
 
 
 @dataclass
@@ -56,12 +90,15 @@ class ComputeEndpoint:
         self.instances: dict[str, list[ModelInstance]] = \
             {m: [] for m in deployments}
         self._functions: dict[str, object] = {}
-        self._inflight: dict[str, tuple] = {}   # request_id -> (model, sreq, fut)
+        # request_id -> (model, sreq, fut, channel) while a task is here
+        self._inflight: dict[str, tuple] = {}
         self._autoscalers = {m: AutoScaler(loop, d.autoscale)
                              for m, d in deployments.items()}
-        self.stats = {"tasks": 0, "restarts": 0, "requeued": 0}
+        self.stats = {"tasks": 0, "restarts": 0, "requeued": 0,
+                      "aborted": 0}
         self.register_function("generate", self._fn_generate)
         self.register_function("embed", self._fn_embed)
+        self.register_function("abort", self._fn_abort)
         self.autoscale_interval = 5.0
         self._autoscale_tick()
 
@@ -69,7 +106,8 @@ class ComputeEndpoint:
     def register_function(self, name: str, fn):
         self._functions[name] = fn
 
-    def execute(self, fn_name: str, payload: dict) -> Future:
+    def execute(self, fn_name: str, payload: dict,
+                channel: StreamChannel | None = None) -> Future:
         fn = self._functions.get(fn_name)
         if fn is None:
             fut = Future()
@@ -77,7 +115,7 @@ class ComputeEndpoint:
                 f"function {fn_name!r} is not registered on {self.endpoint_id}"))
             return fut
         self.stats["tasks"] += 1
-        return fn(payload)
+        return fn(payload, channel)
 
     # -- status (for /jobs and federation) -----------------------------------------
     def model_states(self, model: str) -> list[str]:
@@ -91,29 +129,52 @@ class ComputeEndpoint:
         return sum(i.load for i in self.instances.get(model, []) if i.alive)
 
     # -- handlers --------------------------------------------------------------------
-    def _fn_generate(self, payload: dict) -> Future:
+    def _fn_generate(self, payload: dict,
+                     channel: StreamChannel | None = None) -> Future:
         fut = Future()
-        model = payload["model"]
+        req = schemas.from_wire(payload)     # typed /v1 request off the wire
+        model = req.model
         if model not in self.deployments:
             fut.set_error(ComputeError(
                 f"model {model!r} not deployed on {self.endpoint_id}"))
             return fut
-        sreq = SimRequest(request_id=payload["request_id"],
-                          prompt_tokens=int(payload["prompt_tokens"]),
-                          max_tokens=int(payload["max_tokens"]),
-                          user=payload.get("user", "anonymous"),
-                          qos=payload.get("qos", "interactive"),
-                          priority=int(payload.get("priority", 0)),
-                          deadline=payload.get("deadline"))
-        self._inflight[sreq.request_id] = (model, sreq, fut)
-        self._dispatch(model, sreq, fut)
+        sreq = SimRequest(request_id=req.request_id,
+                          prompt_tokens=req.prompt_token_count,
+                          max_tokens=int(req.max_tokens),
+                          user=req.user or "anonymous",
+                          qos=req.qos,
+                          priority=req.priority,
+                          deadline=req.deadline,
+                          stream=bool(req.stream))
+        self._inflight[sreq.request_id] = (model, sreq, fut, channel)
+        self._dispatch(model, sreq, fut, channel)
         return fut
 
-    def _fn_embed(self, payload: dict) -> Future:
+    def _fn_embed(self, payload: dict,
+                  channel: StreamChannel | None = None) -> Future:
         # embeddings are one-step tasks: model as generate with 1 output token
-        payload = dict(payload)
-        payload["max_tokens"] = 1
-        return self._fn_generate(payload)
+        return self._fn_generate(payload, channel)
+
+    def _fn_abort(self, payload: dict,
+                  channel: StreamChannel | None = None) -> Future:
+        """Pre-registered cancellation: a client disconnect (or a losing
+        hedge) propagates here and frees the engine slot immediately."""
+        fut = Future()
+        rid = payload.get("request_id", "")
+        entry = self._inflight.pop(rid, None)
+        if entry is None:                    # already finished (or unknown)
+            fut.set_result({"request_id": rid, "aborted": False})
+            return fut
+        model, sreq, task_fut, _chan = entry
+        for inst in self.instances.get(model, []):
+            if inst.alive and inst.abort(rid):
+                break
+        self.stats["aborted"] += 1
+        if not task_fut.done():
+            task_fut.set_error(RequestCancelled(
+                f"request {rid} aborted on {self.endpoint_id}"))
+        fut.set_result({"request_id": rid, "aborted": True})
+        return fut
 
     # -- instance management ------------------------------------------------------
     def _autoscale_tick(self):
@@ -179,7 +240,8 @@ class ComputeEndpoint:
         self.instances[model].append(inst)
         return inst
 
-    def _dispatch(self, model: str, sreq: SimRequest, fut: Future):
+    def _dispatch(self, model: str, sreq: SimRequest, fut: Future,
+                  channel: StreamChannel | None = None):
         alive = self._alive_instances(model)
         if not alive:
             inst = self._spawn_instance(model)
@@ -201,15 +263,27 @@ class ComputeEndpoint:
 
         def on_first(t):
             first_holder["t"] = t
+            if channel is not None:
+                channel.first_token(sreq.request_id, t)
 
         def on_done(result):
             self._inflight.pop(sreq.request_id, None)
             result = dict(result)
             result["first_token_time"] = first_holder.get("t", result["finish_time"])
             result["endpoint"] = self.endpoint_id
-            fut.set_result(result)
+            if channel is not None and sreq.stream:
+                channel.delta(sreq.request_id, 0, result["finish_time"],
+                              offset=result.get("output_tokens", 0),
+                              finished=True, finish_reason="length")
+            if not fut.done():               # aborted tasks already errored
+                fut.set_result(result)
 
-        inst.submit(sreq, on_first, on_done)
+        on_delta = None
+        if channel is not None and sreq.stream:
+            def on_delta(n, t, offset=0):
+                channel.delta(sreq.request_id, n, t, offset=offset)
+
+        inst.submit(sreq, on_first, on_done, on_delta)
 
     # -- fault tolerance ------------------------------------------------------------
     def _on_instance_gone(self, inst: ModelInstance, inflight):
@@ -230,8 +304,9 @@ class ComputeEndpoint:
             if entry is None:
                 continue
             self.stats["requeued"] += 1
-            _, sreq, fut = entry
-            self.loop.call_after(0.0, self._dispatch, model, sreq, fut)
+            _, sreq, fut, channel = entry
+            self.loop.call_after(0.0, self._dispatch, model, sreq, fut,
+                                 channel)
 
 
 class _Relay:
@@ -292,12 +367,20 @@ class ComputeClient:
     def endpoints(self) -> dict[str, ComputeEndpoint]:
         return self._endpoints
 
-    def submit(self, endpoint_id: str, fn_name: str, payload: dict) -> Future:
+    def submit(self, endpoint_id: str, fn_name: str, payload: dict,
+               on_first_token=None, on_delta=None) -> Future:
+        """``on_first_token(request_id, t)`` / ``on_delta(StreamDelta)``:
+        optional live back-channel callbacks; events ride back with one
+        ``result_latency`` hop each, ahead of the completion future."""
         fut = Future()
         ep = self._endpoints.get(endpoint_id)
         if ep is None:
             fut.set_error(ComputeError(f"unknown endpoint {endpoint_id!r}"))
             return fut
+        channel = None
+        if on_first_token is not None or on_delta is not None:
+            channel = StreamChannel(self.loop, self.result_latency,
+                                    on_first_token, on_delta)
         hop = self.dispatch_latency
         if endpoint_id not in self._connected or not self.connection_cache:
             hop += self.connection_setup       # Optimization 2: cache this
@@ -308,7 +391,7 @@ class ComputeClient:
                                       self.tasks_in_cloud)
 
         def _deliver():
-            inner = ep.execute(fn_name, payload)
+            inner = ep.execute(fn_name, payload, channel)
 
             def _back(f):
                 def _resolve():
@@ -332,4 +415,20 @@ class ComputeClient:
             self.relay.submit(_hop_out)
         else:
             _hop_out()
+        return fut
+
+    def cancel(self, endpoint_id: str, request_id: str) -> Future:
+        """Propagate a client disconnect (or losing hedge) to the endpoint's
+        pre-registered 'abort' function — one dispatch hop away."""
+        fut = Future()
+        ep = self._endpoints.get(endpoint_id)
+        if ep is None:
+            fut.set_error(ComputeError(f"unknown endpoint {endpoint_id!r}"))
+            return fut
+
+        def _deliver():
+            ep.execute("abort", {"v": "v1", "request_id": request_id}) \
+                .chain(fut)
+
+        self.loop.call_after(self.dispatch_latency, _deliver)
         return fut

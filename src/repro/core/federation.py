@@ -17,11 +17,16 @@ Endpoint health (faults.py) filters dead endpoints out before the scan.
 """
 from __future__ import annotations
 
+from repro.api.errors import OverloadedError
 from repro.core.compute import ComputeEndpoint
 
 
-class FederationError(Exception):
-    pass
+class FederationError(OverloadedError):
+    """No healthy endpoint can serve the model right now. Part of the /v1
+    taxonomy as ``overloaded`` (HTTP 503): the model is configured, but the
+    federation cannot place the request — clients should back off and
+    retry. (A model missing from the registry entirely is the gateway's
+    ``model_not_found``.)"""
 
 
 class FederationRouter:
@@ -97,13 +102,23 @@ class FederationRouter:
 
     # -- /jobs view across the federation -----------------------------------------
     def jobs_status(self) -> dict:
+        """Per-model instance states, each entry annotated with the
+        tie-break signals the §4.5 selection actually uses (cluster queue
+        depth / free nodes) plus the endpoint's health flag."""
         out = {}
         for model, eps in self.registry.items():
             entries = []
             for e in eps:
                 if e in self.endpoints:
-                    for s in self.endpoints[e].model_states(model):
-                        entries.append({"endpoint": e, "state": s})
+                    ep = self.endpoints[e]
+                    qd, neg_free = self._load_key(e)
+                    for s in ep.model_states(model):
+                        entries.append({"endpoint": e, "state": s,
+                                        "healthy": self._healthy.get(e,
+                                                                     False),
+                                        "queue_depth": qd,
+                                        "free_nodes": -neg_free,
+                                        "load": ep.load_for(model)})
             out[model] = entries or [{"endpoint": eps[0] if eps else "?",
                                       "state": "cold"}]
         return out

@@ -5,6 +5,23 @@ Optimization-2 introspection cache), request validation, per-user rate
 limiting, response caching, conversion of API requests into compute tasks,
 activity logging, and the /jobs status endpoint.
 
+The public surface is the typed /v1 contract (``repro.api``): ``submit``
+accepts a typed request (or a legacy dict, parsed through the same
+schemas), resolves its future with a typed response carrying OpenAI
+``usage`` accounting, and rejects with the stable ``APIError`` taxonomy —
+``rate_limit_error`` denials compute a retry-after from the token bucket,
+capacity exhaustion is ``overloaded``, unknown models are
+``model_not_found``.
+
+Streaming: a ``stream=true`` request takes an ``on_delta`` callback and
+receives incremental ``StreamDelta`` frames as the engine emits tokens —
+so first-token and inter-token latency are OBSERVED AT THE GATEWAY
+(recorded per-request in ``MetricsLog``), not inferred from completion
+records. ``cancel()`` propagates a client disconnect to the endpoint's
+pre-registered abort function, freeing the engine slot. Hedged duplicates
+race to the FIRST TOKEN: the loser is cancelled through the same abort
+path instead of running to completion.
+
 The worker pool models the Gunicorn/Uvicorn capacity. Three paper
 optimizations are config toggles so benchmarks can ablate them:
   * Optimization 1 — ``poll_interval=0`` uses futures; ``>0`` polls task
@@ -20,17 +37,22 @@ from __future__ import annotations
 
 import itertools
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 
-from repro.core.auth import AccessPolicy, AuthError, CachingAuthClient, Identity
+from repro.api import schemas
+from repro.api.errors import (APIError, AuthenticationError,
+                              InvalidRequestError, ModelNotFoundError,
+                              OverloadedError, RateLimitError,
+                              RequestCancelled)
+from repro.core.auth import AccessPolicy, AuthError, CachingAuthClient
 from repro.core.clock import Future
 from repro.core.metrics import MetricsLog
 
-VALID_ENDPOINTS = ("chat/completions", "completions", "embeddings")
+VALID_ENDPOINTS = schemas.VALID_ENDPOINTS
 
-
-class GatewayError(Exception):
-    pass
+# legacy alias: pre-/v1 callers caught GatewayError; every error the
+# gateway raises now is an APIError subclass
+GatewayError = APIError
 
 
 @dataclass
@@ -45,7 +67,8 @@ class GatewayConfig:
     max_queue: int = 1_000_000
     # straggler mitigation (off by default): if a dispatched request has not
     # completed after this many seconds, hedge a duplicate to a DIFFERENT
-    # endpoint; first completion wins (inference is idempotent)
+    # endpoint; the duplicates race to the FIRST TOKEN and the loser is
+    # cancelled (its engine slot frees instead of decoding to completion)
     hedge_after: float | None = None
 
 
@@ -57,22 +80,34 @@ class RateLimiter:
         self.rate = rate
         self.burst = burst
         self._state: dict[str, tuple[float, float]] = {}   # user -> (tokens, t)
+        self.denied = 0
 
-    def allow(self, user: str) -> bool:
+    def acquire(self, user: str) -> tuple[bool, float]:
+        """(allowed, retry_after): on denial, retry_after is the time until
+        the bucket accrues the next whole request token."""
         if self.rate == float("inf"):
-            return True
+            return True, 0.0
         now = self.loop.now()
         tokens, t = self._state.get(user, (self.burst, now))
         tokens = min(self.burst, tokens + (now - t) * self.rate)
         if tokens < 1.0:
             self._state[user] = (tokens, now)
-            return False
+            self.denied += 1
+            return False, (1.0 - tokens) / self.rate
         self._state[user] = (tokens - 1.0, now)
-        return True
+        return True, 0.0
+
+    def allow(self, user: str) -> bool:
+        return self.acquire(user)[0]
 
 
 class ResponseCache:
-    """LRU cache for deterministic (temperature=0) repeated requests."""
+    """LRU cache for deterministic (temperature=0) repeated requests.
+
+    Keys REQUIRE a content identity (an explicit ``prompt_hash`` or a hash
+    of materialized token ids): two different prompts that merely share a
+    token count must never share an entry, so count-only DES requests are
+    uncacheable by construction."""
 
     def __init__(self, size: int):
         self.size = size
@@ -81,11 +116,14 @@ class ResponseCache:
         self.misses = 0
 
     @staticmethod
-    def key(req: dict):
-        if req.get("temperature", 0.0) != 0.0:
+    def key(req):
+        """``req`` is a typed /v1 request."""
+        if req.temperature != 0.0:
             return None
-        return (req["model"], req.get("prompt_hash", req.get("prompt_tokens")),
-                req.get("max_tokens"))
+        content = req.content_hash
+        if content is None:          # no content identity -> not cacheable
+            return None
+        return (req.model, req.endpoint, content, req.max_tokens)
 
     def get(self, key):
         if key is None:
@@ -156,7 +194,8 @@ class InferenceGateway:
     def __init__(self, loop, auth: CachingAuthClient, router, compute,
                  policy: AccessPolicy | None = None,
                  config: GatewayConfig | None = None,
-                 metrics: MetricsLog | None = None):
+                 metrics: MetricsLog | None = None,
+                 batch=None):
         self.loop = loop
         self.auth = auth
         self.router = router
@@ -164,6 +203,7 @@ class InferenceGateway:
         self.policy = policy or AccessPolicy()
         self.config = config or GatewayConfig()
         self.metrics = metrics or MetricsLog()
+        self.batch = batch                 # BatchService for /v1/batches
         self.pool = WorkerPool(loop, self.config.workers,
                                self.config.request_cpu_time,
                                self.config.max_queue)
@@ -172,135 +212,320 @@ class InferenceGateway:
         self.cache = ResponseCache(self.config.response_cache_size)
         self._ids = itertools.count(1)
         self.hedges = 0
+        # request_id -> in-flight race state (for cancel / hedging)
+        self._active: dict[str, dict] = {}
 
     # -- public API -------------------------------------------------------------
-    def submit(self, token: str, request: dict) -> Future:
-        """request: {model, prompt_tokens, max_tokens, api (optional),
-        user hint ignored — identity comes from the token}."""
+    def submit(self, token: str, request, on_delta=None) -> Future:
+        """Serve one /v1 request. ``request`` is a typed
+        ``repro.api.schemas`` request (or a legacy dict, parsed through the
+        same schemas — unknown endpoints / malformed fields reject with
+        ``invalid_request_error``). With ``stream=true``, ``on_delta``
+        receives incremental ``StreamDelta`` frames; the returned future
+        still resolves with the full typed response."""
         fut = Future()
-        rid = request.get("request_id") or f"gw-{next(self._ids)}"
-        request = dict(request, request_id=rid)
+        try:
+            if isinstance(request, dict):
+                request = schemas.parse_request(request)
+            else:
+                request = request.validate()
+        except APIError as e:
+            self.metrics.on_reject(e.code)
+            fut.set_error(e)
+            return fut
+        rid = request.request_id or f"gw-{next(self._ids)}"
+        request = replace(request, request_id=rid)
         arrival = self.loop.now()
 
-        api = request.get("api", "chat/completions")
-        if api not in VALID_ENDPOINTS:
-            fut.set_error(GatewayError(f"unknown endpoint {api!r}"))
-            return fut
-        if not self._validate(request):
-            fut.set_error(GatewayError("invalid request payload"))
+        registry = getattr(self.router, "registry", None)
+        if registry is not None and request.model not in registry:
+            self.metrics.on_reject(ModelNotFoundError.code)
+            fut.set_error(ModelNotFoundError(
+                f"model {request.model!r} is not configured on any "
+                "endpoint"))
             return fut
 
         def handler(release):
-            def finish_ok(result, cached=False):
-                self.metrics.on_finish(
-                    rid, self.loop.now(), result.get("output_tokens", 0),
-                    cached=cached,
-                    cached_prompt_tokens=result.get("cached_prompt_tokens",
-                                                    0),
-                    prefill_chunks=result.get("prefill_chunks", 0))
-                if self.config.blocking_workers:
-                    release()
-                fut.set_result(result)
-
-            def finish_err(err):
-                self.metrics.on_finish(rid, self.loop.now(), ok=False,
-                                       error=str(err))
-                release()
-                fut.set_error(err)
-
-            def after_auth(ident):
-                if isinstance(ident, AuthError):
-                    return finish_err(ident)
-                model = request["model"]
-                self.metrics.on_arrival(rid, ident.user, model, arrival,
-                                        request.get("prompt_tokens", 0))
-                if not self.policy.allowed(ident, model):
-                    return finish_err(GatewayError(
-                        f"user {ident.user} lacks access to {model}"))
-                if not self.rate.allow(ident.user):
-                    return finish_err(GatewayError("rate limited"))
-                ck = self.cache.key(request)
-                hit = self.cache.get(ck)
-                if hit is not None:
-                    return finish_ok(dict(hit), cached=True)
-                qos = request.get("qos", "interactive")
-                payload = {"request_id": rid, "model": model,
-                           "user": ident.user,
-                           "prompt_tokens": request["prompt_tokens"],
-                           "max_tokens": request["max_tokens"],
-                           "qos": qos,
-                           "priority": int(request.get("priority", 0)),
-                           "deadline": request.get("deadline")}
-                fn = "embed" if api == "embeddings" else "generate"
-                state = {"done": False}
-
-                def dispatch(exclude=()):
-                    try:
-                        ep = self.router.select_endpoint(model,
-                                                         exclude=exclude,
-                                                         qos=qos)
-                    except Exception as e:
-                        if not exclude:
-                            finish_err(e)
-                        return None
-                    self.metrics.on_dispatch(rid, ep, self.loop.now())
-                    pl = dict(payload) if exclude else payload
-                    if exclude:     # hedge copies get distinct task ids
-                        pl["request_id"] = f"{rid}~hedge"
-                    task = self.compute.submit(ep, fn, pl)
-
-                    def on_task(f):
-                        if state["done"]:
-                            return              # a racer already finished
-                        state["done"] = True
-                        if f.error is not None:
-                            return finish_err(f.error)
-                        res = f.result()
-                        self.metrics.on_first_token(
-                            rid, res.get("first_token_time",
-                                         self.loop.now()))
-                        self.cache.put(ck, res)
-                        finish_ok(res)
-
-                    if self.config.poll_interval > 0:
-                        self._poll(task, on_task)   # pre-Optimization-1 mode
-                    else:
-                        task.add_done_callback(on_task)
-                    return ep
-
-                first_ep = dispatch()
-                # Optimization 3: async workers release after dispatch
-                if not self.config.blocking_workers:
-                    release()
-                if first_ep is not None and self.config.hedge_after:
-                    def maybe_hedge():
-                        if not state["done"]:
-                            self.hedges += 1
-                            dispatch(exclude=(first_ep,))
-
-                    self.loop.call_after(self.config.hedge_after,
-                                         maybe_hedge, daemon=True)
-
-            self.auth.validate(token, after_auth)
+            self._handle(release, token, request, fut, arrival, on_delta)
 
         if not self.pool.submit(handler):
-            fut.set_error(GatewayError("gateway queue full"))
+            self.metrics.on_reject(OverloadedError.code)
+            fut.set_error(OverloadedError(
+                f"gateway queue full ({self.pool.max_queue} waiting)"))
         return fut
 
+    def cancel(self, request_id: str) -> bool:
+        """Client disconnect: abort the in-flight request everywhere it was
+        dispatched (engine slots free immediately) and reject its future
+        with ``request_cancelled``."""
+        state = self._active.pop(request_id, None)
+        if state is None or state["done"]:
+            return False
+        state["done"] = True
+        for ep, task_rid in state["dispatched"]:
+            self.compute.cancel(ep, task_rid)
+        self.metrics.on_finish(request_id, self.loop.now(), ok=False,
+                               error="client disconnected",
+                               error_code=RequestCancelled.code)
+        state["release"]()
+        state["fut"].set_error(RequestCancelled(
+            f"request {request_id} cancelled by the client"))
+        return True
+
+    # -- request pipeline -------------------------------------------------------
+    def _handle(self, release, token, request, fut, arrival, on_delta):
+        rid = request.request_id
+        state = {"done": False, "winner": None, "dispatched": [],
+                 "out_idx": 0, "delivered": 0, "fut": fut,
+                 "release": release}
+
+        def finish_ok(resp, cached=False):
+            self._active.pop(rid, None)
+            resp.cached = cached
+            if cached:
+                resp.id = rid          # the hit serves THIS request
+            if cached and request.stream and on_delta is not None:
+                # a response-cache hit streams back as one burst frame +
+                # the finish frame (no engine was involved)
+                now = self.loop.now()
+                on_delta(schemas.StreamDelta(
+                    id=rid, index=0, n_tokens=resp.usage.completion_tokens,
+                    created=now))
+                on_delta(schemas.StreamDelta(
+                    id=rid, index=1, n_tokens=0, created=now, finished=True,
+                    finish_reason="length"))
+            self.metrics.on_finish(
+                rid, self.loop.now(), resp.usage.completion_tokens,
+                cached=cached,
+                cached_prompt_tokens=resp.usage.cached_tokens,
+                prefill_chunks=resp.prefill_chunks)
+            if self.config.blocking_workers:
+                release()
+            fut.set_result(resp)
+
+        def finish_err(err):
+            self._active.pop(rid, None)
+            code = err.code if isinstance(err, APIError) else ""
+            self.metrics.on_finish(rid, self.loop.now(), ok=False,
+                                   error=str(err), error_code=code)
+            release()
+            fut.set_error(err)
+
+        def after_auth(ident):
+            if isinstance(ident, AuthError):
+                return finish_err(AuthenticationError(str(ident)))
+            model = request.model
+            self.metrics.on_arrival(rid, ident.user, model, arrival,
+                                    request.prompt_token_count)
+            if not self.policy.allowed(ident, model):
+                return finish_err(AuthenticationError(
+                    f"user {ident.user} lacks access to {model}"))
+            allowed, wait = self.rate.acquire(ident.user)
+            if not allowed:
+                self.metrics.on_reject(RateLimitError.code)
+                return finish_err(RateLimitError(
+                    f"user {ident.user} exceeded "
+                    f"{self.rate.rate:g} req/s", retry_after=wait))
+            req = replace(request, user=ident.user)
+            ck = self.cache.key(req)
+            hit = self.cache.get(ck)
+            if hit is not None:
+                return finish_ok(hit.copy(), cached=True)
+            self._active[rid] = state
+            fn = "embed" if req.endpoint == "embeddings" else "generate"
+            # the live back-channel carries first-token events whenever a
+            # race needs deciding (hedging) or the client asked to stream
+            want_events = req.stream or bool(self.config.hedge_after)
+
+            def on_first_event(ep):
+                def cb(_task_rid, t_engine):
+                    if state["done"]:
+                        return
+                    if state["winner"] is None:
+                        state["winner"] = ep
+                        self.metrics.on_first_token(rid, self.loop.now())
+                        self._cancel_losers(state, ep)
+                    # losing racers are cancelled; their events are dropped
+                return cb
+
+            def on_delta_event(ep):
+                def cb(frame):
+                    if state["done"] and not frame.finished:
+                        return
+                    if state["winner"] is None:
+                        state["winner"] = ep
+                        self._cancel_losers(state, ep)
+                    if ep != state["winner"]:
+                        return
+                    if frame.n_tokens:
+                        # dedupe by stream offset: a fault-tolerance
+                        # requeue restarts generation from token 0, so
+                        # drop (or trim) re-emitted positions — the
+                        # client never sees a token twice
+                        end = frame.offset + frame.n_tokens
+                        fresh = end - max(frame.offset, state["delivered"])
+                        if fresh <= 0:
+                            return
+                        if fresh < frame.n_tokens:
+                            toks = frame.tokens[-fresh:] \
+                                if frame.tokens is not None else None
+                            frame = replace(frame, n_tokens=fresh,
+                                            tokens=toks,
+                                            offset=end - fresh)
+                        state["delivered"] = end
+                    # renumber: the client sees ONE contiguous stream even
+                    # if endpoint-side restarts re-emitted frames
+                    frame = replace(frame, id=rid, index=state["out_idx"])
+                    state["out_idx"] += 1
+                    if not frame.finished:
+                        self.metrics.on_delta(rid, self.loop.now(),
+                                              frame.n_tokens)
+                    if on_delta is not None:
+                        on_delta(frame)
+                return cb
+
+            def dispatch(exclude=()):
+                try:
+                    ep = self.router.select_endpoint(model, exclude=exclude,
+                                                     qos=req.qos)
+                except Exception as e:           # noqa: BLE001
+                    # FederationError already carries the 'overloaded' code
+                    if not exclude:
+                        finish_err(e)
+                    return None
+                self.metrics.on_dispatch(rid, ep, self.loop.now())
+                wire_req = req if not exclude else \
+                    replace(req, request_id=f"{rid}~hedge")
+                task = self.compute.submit(
+                    ep, fn, schemas.to_wire(wire_req),
+                    on_first_token=(on_first_event(ep) if want_events
+                                    else None),
+                    on_delta=(on_delta_event(ep) if req.stream else None))
+                state["dispatched"].append((ep, wire_req.request_id))
+
+                def on_task(f):
+                    if state["done"]:
+                        return              # a racer already finished
+                    if state["winner"] is not None \
+                            and ep != state["winner"]:
+                        return              # the loser was cancelled
+                    if f.error is not None:
+                        if isinstance(f.error, RequestCancelled):
+                            return
+                        state["done"] = True
+                        return finish_err(f.error)
+                    state["done"] = True
+                    res = f.result()
+                    if not req.stream and not want_events:
+                        # no live channel: fall back to the engine-side
+                        # first-token stamp off the completion record
+                        self.metrics.on_first_token(
+                            rid, res.get("first_token_time", self.loop.now()))
+                    resp = schemas.response_from_result(req, res, arrival)
+                    self.cache.put(ck, resp)
+                    finish_ok(resp)
+
+                if self.config.poll_interval > 0:
+                    self._poll(task, on_task)   # pre-Optimization-1 mode
+                else:
+                    task.add_done_callback(on_task)
+                return ep
+
+            first_ep = dispatch()
+            # Optimization 3: async workers release after dispatch
+            if not self.config.blocking_workers:
+                release()
+            if first_ep is not None and self.config.hedge_after:
+                def maybe_hedge():
+                    if not state["done"] and state["winner"] is None:
+                        self.hedges += 1
+                        dispatch(exclude=(first_ep,))
+
+                self.loop.call_after(self.config.hedge_after,
+                                     maybe_hedge, daemon=True)
+
+        self.auth.validate(token, after_auth)
+
+    def _cancel_losers(self, state: dict, winner_ep):
+        """First-token-wins: abort every dispatched duplicate that is not
+        the winner, freeing its engine slot mid-decode."""
+        for ep, task_rid in state["dispatched"]:
+            if ep != winner_ep:
+                self.compute.cancel(ep, task_rid)
+                self.metrics.on_hedge_cancelled()
+
+    # -- /v1/batches ------------------------------------------------------------
+    def create_batch(self, token: str, request) -> Future:
+        """Submit an OpenAI-shaped batch (``BatchRequest`` or a list of
+        item dicts); resolves with the initial ``BatchStatus``."""
+        fut = Future()
+        if self.batch is None:
+            fut.set_error(InvalidRequestError(
+                "this gateway has no batch service attached"))
+            return fut
+        try:
+            if isinstance(request, dict):
+                request = schemas.BatchRequest.from_dict(request)
+            elif isinstance(request, list):
+                request = schemas.BatchRequest(
+                    items=[schemas.BatchItem.from_dict(it)
+                           if isinstance(it, dict) else it
+                           for it in request])
+            request = request.validate()
+            if not request.items:
+                raise InvalidRequestError("empty batch", param="items")
+        except APIError as e:
+            self.metrics.on_reject(e.code)
+            fut.set_error(e)
+            return fut
+
+        def after_auth(ident):
+            if isinstance(ident, AuthError):
+                return fut.set_error(AuthenticationError(str(ident)))
+            model = request.model
+            if not self.policy.allowed(ident, model):
+                return fut.set_error(AuthenticationError(
+                    f"user {ident.user} lacks access to {model}"))
+            registry = getattr(self.router, "registry", None)
+            if registry is not None and model not in registry:
+                return fut.set_error(ModelNotFoundError(
+                    f"model {model!r} is not configured on any endpoint"))
+            job = self.batch.create(request, user=ident.user)
+            fut.set_result(job.batch_status())
+
+        self.auth.validate(token, after_auth)
+        return fut
+
+    def batch_status(self, batch_id: str):
+        """Poll /v1/batches/{id}."""
+        if self.batch is None:
+            raise InvalidRequestError("no batch service attached")
+        return self.batch.status(batch_id)
+
+    def batch_results(self, batch_id: str) -> list:
+        """Retrieve per-request results/errors of a finished batch."""
+        if self.batch is None:
+            raise InvalidRequestError("no batch service attached")
+        return self.batch.results(batch_id)
+
+    # -- status -----------------------------------------------------------------
     def jobs_status(self) -> dict:
-        """The /jobs endpoint (paper §4.3)."""
-        return self.router.jobs_status()
+        """The /jobs endpoint (paper §4.3): per-model instance states from
+        the federation plus the gateway's own admission-control counters."""
+        out = self.router.jobs_status()
+        out["_gateway"] = {
+            "workers_busy": self.pool.busy,
+            "queue_depth": len(self.pool.queue),
+            "max_depth": self.pool.max_depth,
+            "rejected_queue_full": self.pool.rejected,
+            "rate_limited": self.rate.denied,
+            "rejections": dict(self.metrics.rejections),
+            "hedges": self.hedges,
+            "hedges_cancelled": self.metrics.hedges_cancelled,
+        }
+        return out
 
     # -- helpers ---------------------------------------------------------------
-    @staticmethod
-    def _validate(request: dict) -> bool:
-        try:
-            return (request["model"]
-                    and int(request["prompt_tokens"]) >= 0
-                    and int(request["max_tokens"]) >= 1)
-        except (KeyError, TypeError, ValueError):
-            return False
-
     def _poll(self, task: Future, cb):
         """Pre-Optimization-1 result retrieval: check task status every
         ``poll_interval`` seconds."""

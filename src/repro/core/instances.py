@@ -26,6 +26,7 @@ class SimRequest:
     qos: str = "interactive"          # workload class (interactive | batch)
     priority: int = 0                 # intra-class (lower = more urgent)
     deadline: float | None = None     # absolute TTFT deadline (loop time)
+    stream: bool = False              # emit per-sync token deltas
 
 
 class InstanceState(str, Enum):
@@ -110,7 +111,8 @@ class SimEngine:
         self.scheduling_policy = scheduling_policy
         self.enable_preemption = enable_preemption
         self.restore_hit_rate = restore_hit_rate
-        self.queue: list[tuple[SimRequest, object, object]] = []
+        # (sreq, on_first_token, on_done, on_delta) waiting entries
+        self.queue: list[tuple] = []
         self.running: list[dict] = []
         # preempted victims awaiting re-admission (restore): running-dicts
         # with their produced-token state preserved
@@ -125,6 +127,7 @@ class SimEngine:
         self.total_cached_tokens = 0
         self.total_restore_cached_tokens = 0
         self.total_preemptions = 0
+        self.total_aborted = 0
         self.halted = False
 
     # -- load signals ----------------------------------------------------------
@@ -140,14 +143,42 @@ class SimEngine:
         return len(self.running) >= self.max_slots and self.queue_depth > 0
 
     # -- ops -----------------------------------------------------------------------
-    def submit(self, sreq: SimRequest, on_first_token, on_done):
+    def submit(self, sreq: SimRequest, on_first_token, on_done,
+               on_delta=None):
+        """``on_delta(n_tokens, t, offset)`` — optional per-sync token
+        stream: fired every engine step this request emits tokens in, with
+        ``offset`` the stream position of the burst's first token (the DES
+        mirror of the real engine's StreamDelta channel)."""
         if self.halted:
             raise RuntimeError("engine halted")
         self._seq_of[sreq.request_id] = next(self._seq)
-        self.queue.append((sreq, on_first_token, on_done))
+        self.queue.append((sreq, on_first_token, on_done, on_delta))
         if self.on_busy:
             self.on_busy()
         self._kick()
+
+    def abort(self, request_id: str) -> bool:
+        """Drop a request wherever it lives (queued, preempted, running);
+        its slot frees at once. Client disconnects and losing hedges land
+        here via the endpoint's pre-registered 'abort' function."""
+        for i, e in enumerate(self.queue):
+            if e[0].request_id == request_id:
+                del self.queue[i]
+                self._seq_of.pop(request_id, None)
+                self.total_aborted += 1
+                return True
+        for i, e in enumerate(self._preempted_q):
+            if e["req"].request_id == request_id:
+                del self._preempted_q[i]
+                self.total_aborted += 1
+                return True
+        for i, e in enumerate(self.running):
+            if e["req"].request_id == request_id:
+                del self.running[i]
+                self._composition_changed = True
+                self.total_aborted += 1
+                return True
+        return False
 
     def halt(self) -> list[SimRequest]:
         """Stop serving (failure/release); returns in-flight requests for
@@ -192,7 +223,7 @@ class SimEngine:
             k = self._key(e["req"], e["seq"])
             if best is None or k < best[0]:
                 best = (k, "restore", idx)
-        for idx, (sreq, _f, _d) in enumerate(self.queue):
+        for idx, (sreq, *_cbs) in enumerate(self.queue):
             k = self._key(sreq, self._seq_of[sreq.request_id])
             if best is None or k < best[0]:
                 best = (k, "fresh", idx)
@@ -244,7 +275,7 @@ class SimEngine:
                 + max(held - restore, 0)
             self.running.append(e)
         else:
-            sreq, on_first, on_done = self.queue.pop(idx)
+            sreq, on_first, on_done, on_delta = self.queue.pop(idx)
             # warm-cache discount: matched prefix tokens cost no compute;
             # at least one token is always recomputed (its logits seed
             # sampling), mirroring PagedKVCache.allocate_with_prefix
@@ -257,7 +288,8 @@ class SimEngine:
                                  # the arrival order moves into the entry;
                                  # _seq_of must not grow with engine age
                                  "seq": self._seq_of.pop(sreq.request_id),
-                                 "on_first": on_first, "on_done": on_done})
+                                 "on_first": on_first, "on_done": on_done,
+                                 "on_delta": on_delta})
         return True
 
     # -- internals ------------------------------------------------------------
@@ -334,6 +366,8 @@ class SimEngine:
             self.total_output_tokens += take
             if first and r["on_first"]:
                 r["on_first"](now)
+            if take and r.get("on_delta"):
+                r["on_delta"](take, now, r["produced"] - take)
             if r["produced"] >= r["req"].max_tokens:
                 self.total_finished += 1
                 self._composition_changed = True   # next sync runs K=1
@@ -415,8 +449,8 @@ class ModelInstance:
             return
         self.state = InstanceState.HOT
         self.hot_since = self.loop.now()
-        for sreq, on_first, on_done in self._pending:
-            self.engine.submit(sreq, on_first, on_done)
+        for sreq, on_first, on_done, on_delta in self._pending:
+            self.engine.submit(sreq, on_first, on_done, on_delta)
         self._pending.clear()
         if self.on_hot:
             self.on_hot(self)
@@ -439,15 +473,28 @@ class ModelInstance:
     def load(self) -> int:
         return len(self._pending) + self.engine.load
 
-    def submit(self, sreq: SimRequest, on_first_token, on_done):
+    def submit(self, sreq: SimRequest, on_first_token, on_done,
+               on_delta=None):
         assert self.alive, f"submit to {self.state} instance"
         self._cancel_idle()
         if self.result_cpu > 0:
             on_done = self._serialized(on_done)
         if self.state == InstanceState.HOT:
-            self.engine.submit(sreq, on_first_token, on_done)
+            self.engine.submit(sreq, on_first_token, on_done, on_delta)
         else:
-            self._pending.append((sreq, on_first_token, on_done))
+            self._pending.append((sreq, on_first_token, on_done, on_delta))
+
+    def abort(self, request_id: str) -> bool:
+        """Abort a request parked on or running in this instance."""
+        for i, p in enumerate(self._pending):
+            if p[0].request_id == request_id:
+                del self._pending[i]
+                return True
+        if self.engine.abort(request_id):
+            if self.engine.load == 0 and not self._pending:
+                self._went_idle()
+            return True
+        return False
 
     def _serialized(self, on_done):
         """Charge ``result_cpu`` per completion on the instance's single

@@ -19,9 +19,16 @@ class RequestRecord:
     output_tokens: int = 0
     ok: bool = True
     error: str = ""
+    error_code: str = ""            # stable /v1 taxonomy code, "" when ok
     cached: bool = False
     cached_prompt_tokens: int = 0   # engine prefix-cache reuse (partial hit)
     prefill_chunks: int = 0         # chunked-prefill steps for this prompt
+    # streaming observability (only populated for stream=true requests):
+    # frames received at the GATEWAY and the gaps between them — TTFT/ITL
+    # as the API boundary sees them, network hop included
+    streamed: bool = False
+    stream_frames: int = 0
+    itl: list = field(default_factory=list)
 
     @property
     def e2e(self) -> float:
@@ -38,6 +45,13 @@ class MetricsLog:
     def __init__(self):
         self.records: list[RequestRecord] = []
         self._open: dict[str, RequestRecord] = {}
+        # gateway admission-control counters, keyed by /v1 error code
+        # (rate_limit_error, overloaded, ...): rejections never reach an
+        # endpoint, so they are visible ONLY here and in jobs_status()
+        self.rejections: dict[str, int] = {}
+        # hedged duplicates cancelled after losing the first-token race
+        # (instead of running to completion and burning engine slots)
+        self.hedges_cancelled = 0
 
     # -- lifecycle hooks ------------------------------------------------------
     def on_arrival(self, request_id, user, model, t, prompt_tokens=0):
@@ -57,8 +71,30 @@ class MetricsLog:
         if r and not r.first_token:
             r.first_token = t
 
+    def on_delta(self, request_id, t, n_tokens=1):
+        """A stream frame reached the gateway: record TTFT on the first and
+        the inter-frame gap on every later one."""
+        r = self._open.get(request_id)
+        if r is None:
+            return
+        r.streamed = True
+        if r.stream_frames > 0:
+            r.itl.append(t - r._last_frame)
+        elif not r.first_token:
+            r.first_token = t
+        r.stream_frames += 1
+        r._last_frame = t
+
+    def on_reject(self, code: str):
+        """An admission-control rejection (never dispatched)."""
+        self.rejections[code] = self.rejections.get(code, 0) + 1
+
+    def on_hedge_cancelled(self):
+        self.hedges_cancelled += 1
+
     def on_finish(self, request_id, t, output_tokens=0, ok=True, error="",
-                  cached=False, cached_prompt_tokens=0, prefill_chunks=0):
+                  cached=False, cached_prompt_tokens=0, prefill_chunks=0,
+                  error_code=""):
         r = self._open.pop(request_id, None)
         if r is None:
             return
@@ -66,6 +102,7 @@ class MetricsLog:
         r.output_tokens = output_tokens
         r.ok = ok
         r.error = error
+        r.error_code = error_code
         r.cached = cached
         r.cached_prompt_tokens = cached_prompt_tokens
         r.prefill_chunks = prefill_chunks
@@ -102,4 +139,21 @@ class MetricsLog:
             "median_ttft_s": statistics.median(
                 r.ttft for r in recs if r.first_token),
             "output_tokens": toks,
+            **self._stream_stats(recs),
         }
+
+    def _stream_stats(self, recs) -> dict:
+        """Gateway-observed streaming latencies (stream=true requests)."""
+        gaps = [g for r in recs if r.streamed for g in r.itl]
+        streamed = [r for r in recs if r.streamed and r.first_token]
+        out = {"streamed": sum(1 for r in recs if r.streamed),
+               "hedges_cancelled": self.hedges_cancelled,
+               "rejections": dict(self.rejections)}
+        if streamed:
+            out["stream_median_ttft_s"] = statistics.median(
+                r.ttft for r in streamed)
+        if gaps:
+            gaps.sort()
+            out["stream_median_itl_s"] = statistics.median(gaps)
+            out["stream_p99_itl_s"] = gaps[int(0.99 * (len(gaps) - 1))]
+        return out

@@ -137,11 +137,11 @@ def build_system(
 
     router = FederationRouter(endpoints, registry)
     metrics = MetricsLog()
+    batch = BatchService(loop, router, endpoints)
     gateway = InferenceGateway(loop, auth, router, compute,
                                policy=AccessPolicy(),
                                config=gateway_config or GatewayConfig(),
-                               metrics=metrics)
-    batch = BatchService(loop, router, endpoints)
+                               metrics=metrics, batch=batch)
     health = HealthMonitor(loop, router)
     faults = FailureInjector(loop)
     return System(loop=loop, auth_service=auth_service, auth=auth,

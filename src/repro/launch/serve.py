@@ -14,11 +14,12 @@ import time
 import jax
 import numpy as np
 
+from repro.api import StreamAssembler, to_inference_request
+from repro.api.schemas import CompletionRequest
 from repro.configs import REGISTRY, get_config, list_archs, reduced
 from repro.data.workload import make_workload, token_ids_for
 from repro.models import make_model
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
-from repro.serving.request import InferenceRequest, SamplingParams
 
 
 def main() -> None:
@@ -34,6 +35,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-seq-len", type=int, default=160)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="subscribe every request to the token stream and "
+                         "report client-observed TTFT/ITL")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else reduced(REGISTRY[args.arch])
@@ -56,16 +60,23 @@ def main() -> None:
     wl = make_workload(args.requests, rate=args.rate, seed=args.seed,
                        lo=4, hi=max(8, args.max_seq_len - args.max_tokens - 8))
     t0 = time.monotonic()
+    streams: dict[str, StreamAssembler] = {}
     for w in wl:
-        engine.add_request(InferenceRequest(
+        # typed /v1 request -> engine request (the serving driver speaks
+        # the same contract as the gateway)
+        req = CompletionRequest(
             model=cfg.name,
             prompt_tokens=token_ids_for(w, cfg.vocab_size)[:args.max_seq_len
                                                            - args.max_tokens
                                                            - 4],
             request_id=w.request_id,
-            sampling=SamplingParams(
-                max_tokens=min(w.max_tokens, args.max_tokens),
-                temperature=0.0)))
+            max_tokens=min(w.max_tokens, args.max_tokens),
+            temperature=0.0, stream=args.stream).validate()
+        on_delta = None
+        if args.stream:
+            streams[req.request_id] = on_delta = \
+                StreamAssembler(clock=engine.clock)
+        engine.add_request(to_inference_request(req), on_delta=on_delta)
     outs = engine.run_to_completion()
     dt = time.monotonic() - t0
     toks = sum(o.num_output_tokens for o in outs)
@@ -73,6 +84,18 @@ def main() -> None:
     print(f"[serve] {len(outs)} requests, {toks} output tokens in {dt:.1f}s")
     print(f"[serve] req/s={len(outs)/dt:.2f} tok/s={toks/dt:.1f} "
           f"median_e2e={e2e[len(e2e)//2]:.2f}s steps={engine.stats['steps']}")
+    if args.stream:
+        for o in outs:
+            assert streams[o.request_id].tokens == o.output_tokens, \
+                f"stream/output divergence for {o.request_id}"
+        gaps = sorted(g for a in streams.values()
+                      for g in a.inter_token_gaps)
+        ttfts = sorted(a.arrivals[0] - t0 for a in streams.values()
+                       if a.arrivals)
+        print(f"[serve] streamed: {sum(len(a.deltas) for a in streams.values())}"
+              f" frames, median TTFT {ttfts[len(ttfts)//2]:.2f}s, "
+              f"median ITL {gaps[len(gaps)//2]*1e3:.1f}ms, "
+              f"p99 ITL {gaps[int(0.99*(len(gaps)-1))]*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

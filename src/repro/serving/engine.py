@@ -55,6 +55,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.api.schemas import StreamDelta
 from repro.models import LM
 from repro.serving.backends import (ATTENTION_FAMILIES, PagedBackend,
                                     PrefillTask, SlotBackend)
@@ -117,6 +118,7 @@ class _Running:
     req: InferenceRequest
     metrics: RequestMetrics
     output_tokens: list = field(default_factory=list)
+    delta_idx: int = 0                      # next StreamDelta frame index
     draft_task: PrefillTask | None = None   # speculative draft-cache prefill
     # emitted-stream positions the draft cache holds valid KV for; falls
     # behind cache_len whenever non-speculative rounds run (chunked-prefill
@@ -227,6 +229,8 @@ class ContinuousBatchingEngine:
         # request_id -> _Running of preempted sequences awaiting restore
         # (their requests sit in the policy queue like fresh arrivals)
         self._preempted: dict[str, _Running] = {}
+        # request_id -> StreamDelta callback for stream=true requests
+        self._delta_subs: dict[str, object] = {}
         # request_id -> (_Running, PrefillTask): admitted, prompt not yet
         # fully ingested (only populated when chunked prefill is on)
         self.prefilling: "OrderedDict[str, tuple[_Running, PrefillTask]]" = \
@@ -242,13 +246,21 @@ class ContinuousBatchingEngine:
                       "swap_ins": 0}
 
     # -- queue management -------------------------------------------------------
-    def add_request(self, req: InferenceRequest):
+    def add_request(self, req: InferenceRequest, on_delta=None):
+        """``on_delta(StreamDelta)``: subscribe to this request's token
+        stream — one frame per engine sync that emitted tokens for it (so
+        K tokens arrive per frame on the fused multi-step path), plus a
+        final empty frame carrying ``finish_reason``. Reassembled frames
+        are token-identical to the returned ``RequestOutput``."""
         m = RequestMetrics(arrival_time=req.arrival_time or self.clock.now(),
                            queued_time=self.clock.now())
         req._metrics = m
+        if on_delta is not None:
+            self._delta_subs[req.request_id] = on_delta
         self.policy.add(req)
 
     def abort(self, request_id: str) -> bool:
+        self._delta_subs.pop(request_id, None)
         req = self.policy.remove(request_id)
         if req is not None:
             # a queued preempted victim also drops its saved state
@@ -455,6 +467,7 @@ class ContinuousBatchingEngine:
             st.tokens[s] = tok
             st.n_gen[s] += 1
             self.stats["decode_tokens"] += 1
+            self._emit_delta(run, [tok])
             f = self._maybe_finish(run)
             if f:
                 finished.append(f)
@@ -478,11 +491,12 @@ class ContinuousBatchingEngine:
         self.stats["decode_syncs"] += 1
         for s, run in by_slot.items():
             p = int(produced[s])
-            for j in range(p):
-                run.output_tokens.append(int(toks[j, s]))
+            new = [int(toks[j, s]) for j in range(p)]
+            run.output_tokens.extend(new)
             st.tokens[s] = run.last_token
             st.n_gen[s] += p
             self.stats["decode_tokens"] += p
+            self._emit_delta(run, new)
             f = self._maybe_finish(run)
             if (f is not None) != bool(done[s]):
                 raise RuntimeError(
@@ -549,8 +563,9 @@ class ContinuousBatchingEngine:
             p = int(produced[s])
             self.stats["spec_proposed"] += k_used
             self.stats["spec_accepted"] += max(p - 1, 0)
-            for j in range(p):
-                run.output_tokens.append(int(out[j, s]))
+            new = [int(out[j, s]) for j in range(p)]
+            run.output_tokens.extend(new)
+            self._emit_delta(run, new)
             st.tokens[s] = run.last_token
             st.n_gen[s] += p
             # the proposal loop wrote KV for exactly the accepted prefix
@@ -680,6 +695,7 @@ class ContinuousBatchingEngine:
         run.output_tokens.append(tok)
         run.metrics.first_token_time = self.clock.now()
         self.stats["decode_tokens"] += 1
+        self._emit_delta(run, [tok])
         self.running[run.req.request_id] = run
         f = self._maybe_finish(run)
         if f:
@@ -753,6 +769,20 @@ class ContinuousBatchingEngine:
         seed = (seed_base(sp.seed) + step) % SEED_MOD
         return int(sample_token(logits, sp.temperature, sp.top_p, seed))
 
+    def _emit_delta(self, run: _Running, toks):
+        """Push newly appended tokens to the request's stream subscriber
+        (a no-op for unsubscribed requests — the hot loop stays clean)."""
+        cb = self._delta_subs.get(run.req.request_id)
+        if cb is None or not toks:
+            return
+        frame = StreamDelta(id=run.req.request_id, index=run.delta_idx,
+                            tokens=[int(t) for t in toks],
+                            n_tokens=len(toks),
+                            offset=len(run.output_tokens) - len(toks),
+                            created=self.clock.now())
+        run.delta_idx += 1
+        cb(frame)
+
     def _maybe_finish(self, run: _Running):
         sp = run.req.sampling
         reason = ""
@@ -765,6 +795,14 @@ class ContinuousBatchingEngine:
             reason = "max_seq_len"
         if not reason:
             return None
+        cb = self._delta_subs.pop(run.req.request_id, None)
+        if cb is not None:                  # final frame: reason, no tokens
+            cb(StreamDelta(id=run.req.request_id, index=run.delta_idx,
+                           tokens=[], n_tokens=0,
+                           offset=len(run.output_tokens),
+                           created=self.clock.now(),
+                           finished=True, finish_reason=reason))
+            run.delta_idx += 1
         run.metrics.finish_time = self.clock.now()
         self._release_slot(run.req.request_id)
         del self.running[run.req.request_id]

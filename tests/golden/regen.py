@@ -1,0 +1,24 @@
+"""Regenerate the /v1 golden schema fixtures.
+
+Run ``PYTHONPATH=src python tests/golden/regen.py`` after a DELIBERATE
+contract change; the diff of these files IS the wire-format change review.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.api import schemas                          # noqa: E402
+from test_api_schemas import schema_examples           # noqa: E402
+
+
+def main():
+    out = pathlib.Path(__file__).parent
+    for name, obj in schema_examples().items():
+        path = out / f"{name}.json"
+        path.write_text(schemas.dumps(obj) + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

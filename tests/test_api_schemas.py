@@ -1,0 +1,209 @@
+"""/v1 schema contract tests: validation, the error taxonomy, canonical
+serialization, and the golden-file round-trip check (serialize -> parse ->
+serialize must be byte-stable against the committed fixtures in
+``tests/golden/`` — regenerate them with
+``PYTHONPATH=src python tests/golden/regen.py`` when the contract
+deliberately changes)."""
+import json
+import pathlib
+
+import pytest
+
+from repro.api import errors, schemas
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+
+# ---------------------------------------------------------------------------
+# examples: one representative instance per /v1 schema (shared with regen.py)
+# ---------------------------------------------------------------------------
+
+def schema_examples():
+    chat_req = schemas.ChatCompletionRequest(
+        model="llama3.3-70b",
+        messages=[schemas.ChatMessage("system", "You are terse."),
+                  schemas.ChatMessage("user", "Say hi")],
+        max_tokens=32, temperature=0.7, top_p=0.9, seed=11, stream=True,
+        user="alice", qos="interactive", priority=1, deadline=12.5,
+        request_id="chat-1").validate()
+    comp_req = schemas.CompletionRequest(
+        model="llama3.3-70b", prompt_tokens=[3, 1, 4, 1, 5, 9],
+        max_tokens=16, stop_token=7, request_id="comp-1",
+        qos="batch").validate()
+    comp_req_count = schemas.CompletionRequest(
+        model="llama3.3-70b", prompt_tokens=128, max_tokens=64,
+        prompt_hash="abc123", request_id="comp-2").validate()
+    emb_req = schemas.EmbeddingRequest(
+        model="hubert-xlarge", input=[2, 7, 1, 8], request_id="emb-1"
+        ).validate()
+    usage = schemas.Usage(prompt_tokens=128, completion_tokens=64,
+                          total_tokens=192, cached_tokens=96)
+    chat_resp = schemas.ChatCompletionResponse(
+        id="chat-1", model="llama3.3-70b", created=4.25, usage=usage,
+        endpoint_id="sophia-ep", first_token_time=4.5, finish_time=9.75,
+        prefill_chunks=3, preemptions=1, restore_cached_tokens=40,
+        choices=[schemas.CompletionChoice(index=0, tokens=[5, 6, 7],
+                                          finish_reason="length")])
+    comp_resp = schemas.CompletionResponse(
+        id="comp-1", model="llama3.3-70b", created=1.0, usage=usage,
+        endpoint_id="polaris-ep",
+        choices=[schemas.CompletionChoice(finish_reason="stop")])
+    emb_resp = schemas.EmbeddingResponse(
+        id="emb-1", model="hubert-xlarge", created=2.0,
+        usage=schemas.Usage(prompt_tokens=4, total_tokens=4),
+        endpoint_id="sophia-ep",
+        data=[{"object": "embedding", "index": 0, "embedding": None}])
+    delta = schemas.StreamDelta(id="chat-1", index=3, tokens=[17, 19],
+                                n_tokens=2, created=5.125)
+    final = schemas.StreamDelta(id="chat-1", index=4, tokens=[], n_tokens=0,
+                                created=6.0, finished=True,
+                                finish_reason="length")
+    batch_req = schemas.BatchRequest(
+        items=[schemas.BatchItem(custom_id="a", body=comp_req),
+               schemas.BatchItem(custom_id="b", body=comp_req_count,
+                                 url="/v1/completions")],
+        metadata={"run": "nightly"}).validate()
+    batch_status = schemas.BatchStatus(
+        id="batch-1", status="in_progress", model="llama3.3-70b",
+        created_at=0.5, in_progress_at=90.0, total=2, completed=1,
+        failed=0, output_tokens=64)
+    err = errors.RateLimitError("user alice exceeded 1 req/s",
+                                retry_after=0.75)
+    return {
+        "chat_completion_request": chat_req,
+        "completion_request_ids": comp_req,
+        "completion_request_count": comp_req_count,
+        "embedding_request": emb_req,
+        "usage": usage,
+        "chat_completion_response": chat_resp,
+        "completion_response": comp_resp,
+        "embedding_response": emb_resp,
+        "stream_delta": delta,
+        "stream_delta_final": final,
+        "batch_request": batch_req,
+        "batch_status": batch_status,
+        "error_rate_limit": err,
+    }
+
+
+_PARSERS = {
+    "chat_completion_request": schemas.ChatCompletionRequest.from_dict,
+    "completion_request_ids": schemas.CompletionRequest.from_dict,
+    "completion_request_count": schemas.CompletionRequest.from_dict,
+    "embedding_request": schemas.EmbeddingRequest.from_dict,
+    "usage": schemas.Usage.from_dict,
+    "chat_completion_response": schemas.ChatCompletionResponse.from_dict,
+    "completion_response": schemas.CompletionResponse.from_dict,
+    "embedding_response": schemas.EmbeddingResponse.from_dict,
+    "stream_delta": schemas.StreamDelta.from_dict,
+    "stream_delta_final": schemas.StreamDelta.from_dict,
+    "batch_request": schemas.BatchRequest.from_dict,
+    "batch_status": schemas.BatchStatus.from_dict,
+    "error_rate_limit": errors.error_from_dict,
+}
+
+
+# ---------------------------------------------------------------------------
+# golden round-trip: byte-stable against committed fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(_PARSERS))
+def test_golden_roundtrip_byte_stable(name):
+    obj = schema_examples()[name]
+    path = GOLDEN / f"{name}.json"
+    assert path.exists(), \
+        f"missing golden fixture {path}; run tests/golden/regen.py"
+    committed = path.read_text().strip()
+    # 1) today's code serializes the example exactly as committed
+    assert schemas.dumps(obj) == committed
+    # 2) parse -> serialize is byte-stable
+    parsed = _PARSERS[name](json.loads(committed))
+    assert schemas.dumps(parsed) == committed
+
+
+def test_wire_envelope_roundtrip():
+    ex = schema_examples()
+    for name in ("chat_completion_request", "completion_request_ids",
+                 "embedding_request"):
+        req = ex[name]
+        wire = schemas.to_wire(req)
+        assert wire["v"] == schemas.API_VERSION
+        back = schemas.from_wire(json.loads(json.dumps(wire)))
+        assert type(back) is type(req)
+        assert schemas.dumps(back) == schemas.dumps(req)
+
+
+# ---------------------------------------------------------------------------
+# validation + taxonomy
+# ---------------------------------------------------------------------------
+
+def test_invalid_requests_reject_with_param():
+    with pytest.raises(errors.InvalidRequestError) as e:
+        schemas.CompletionRequest.from_dict({"model": "m",
+                                             "prompt_tokens": -1})
+    assert e.value.param == "prompt_tokens"
+    with pytest.raises(errors.InvalidRequestError):
+        schemas.CompletionRequest.from_dict({"prompt_tokens": 8})  # no model
+    with pytest.raises(errors.InvalidRequestError):
+        schemas.CompletionRequest.from_dict(
+            {"model": "m", "prompt_tokens": 8, "max_tokens": 0})
+    with pytest.raises(errors.InvalidRequestError):
+        schemas.ChatCompletionRequest.from_dict({"model": "m"})  # no prompt
+    with pytest.raises(errors.InvalidRequestError):
+        schemas.parse_request({"model": "m", "prompt_tokens": 4,
+                               "api": "images"})
+    with pytest.raises(errors.InvalidRequestError):
+        schemas.CompletionRequest.from_dict(
+            {"model": "m", "prompt_tokens": 4, "qos": "realtime"})
+
+
+def test_error_taxonomy_codes_and_wire_shape():
+    cases = [
+        (errors.InvalidRequestError("x"), "invalid_request_error", 400),
+        (errors.AuthenticationError("x"), "authentication_error", 401),
+        (errors.ModelNotFoundError("x"), "model_not_found", 404),
+        (errors.RateLimitError("x", retry_after=1.5), "rate_limit_error",
+         429),
+        (errors.OverloadedError("x"), "overloaded", 503),
+        (errors.RequestCancelled("x"), "request_cancelled", 499),
+    ]
+    for err, code, status in cases:
+        assert err.code == code and err.status == status
+        d = err.to_dict()
+        assert d["error"]["code"] == code
+        back = errors.error_from_dict(d)
+        assert type(back) is type(err)
+    assert errors.RateLimitError("x", retry_after=1.5) \
+        .to_dict()["error"]["retry_after"] == 1.5
+
+
+def test_content_hash_semantics():
+    # same token count, different ids -> different hashes
+    a = schemas.CompletionRequest(model="m", prompt_tokens=[1, 2, 3])
+    b = schemas.CompletionRequest(model="m", prompt_tokens=[4, 5, 6])
+    assert a.content_hash != b.content_hash
+    # count-only prompts carry no content identity
+    c = schemas.CompletionRequest(model="m", prompt_tokens=3)
+    assert c.content_hash is None
+    # explicit hash wins
+    d = schemas.CompletionRequest(model="m", prompt_tokens=3,
+                                  prompt_hash="h")
+    assert d.content_hash == "h"
+    # chat: message content hashes differ even at equal lengths
+    m1 = schemas.ChatCompletionRequest(
+        model="m", messages=[schemas.ChatMessage("user", "aa bb")])
+    m2 = schemas.ChatCompletionRequest(
+        model="m", messages=[schemas.ChatMessage("user", "cc dd")])
+    assert m1.content_hash != m2.content_hash
+    assert m1.prompt_token_count == m2.prompt_token_count == 2
+
+
+def test_legacy_mapping_access():
+    resp = schema_examples()["chat_completion_response"]
+    assert resp["output_tokens"] == 64
+    assert resp["cached_prompt_tokens"] == 96
+    assert resp["endpoint"] == "sophia-ep"
+    assert resp["request_id"] == "chat-1"
+    assert resp.get("nope", 0) == 0
+    st = schema_examples()["batch_status"]
+    assert st["state"] == "in_progress" and st["total"] == 2

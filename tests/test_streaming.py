@@ -1,0 +1,341 @@
+"""End-to-end token streaming: real-engine parity (streamed frames
+re-assembled must be token-identical to the non-streamed run for greedy,
+seeded top-p, and spec-decode on both backends), abort-mid-stream KV
+reclaim, and the DES gateway channel (TTFT/ITL at the gateway, client
+disconnect propagation, hedge first-token-wins cancellation, rate-limit
+retry-after, and the response-cache content-hash regression)."""
+import copy
+
+
+from repro.api import StreamAssembler, errors, schemas
+from repro.api.client import FirstClient
+from repro.core.gateway import GatewayConfig
+from repro.core.testbed import (LLAMA70B, build_system, default_deployment,
+                                warm_up)
+
+
+# ---------------------------------------------------------------------------
+# real engine: streamed == non-streamed (backend x sampling x spec matrix)
+# ---------------------------------------------------------------------------
+
+def _run_streamed(eng, reqs):
+    asms = {}
+    for r in copy.deepcopy(reqs):
+        asm = StreamAssembler()
+        asms[r.request_id] = asm
+        eng.add_request(r, on_delta=asm)
+    outs = eng.run_to_completion()
+    return {o.request_id: o for o in outs}, asms
+
+
+def test_stream_parity_matrix(backend, grouped_lm, sampling, engine_factory,
+                              request_factory, run_engine):
+    """Streamed deltas reassemble to the exact non-streamed token stream
+    on slots/paged x GQA/MHA x greedy/top-p."""
+    cfg, model, params = grouped_lm
+    reqs = request_factory(cfg.vocab_size, n=4, **sampling)
+    ref, _ = run_engine(engine_factory(model, params, backend=backend),
+                        reqs)
+    outs, asms = _run_streamed(engine_factory(model, params,
+                                              backend=backend), reqs)
+    assert len(outs) == len(reqs)
+    for rid, out in outs.items():
+        asm = asms[rid]
+        assert asm.finished and asm.finish_reason == out.finish_reason
+        assert asm.tokens == out.output_tokens       # token-identical
+        assert asm.tokens == ref[rid][0]             # == non-streamed run
+        assert asm.n_tokens == out.num_output_tokens
+
+
+def test_stream_parity_spec_decode(llama, lm_factory, engine_factory,
+                                   request_factory, sampling):
+    """Speculative decoding emits per-round bursts; the reassembled stream
+    must still equal the non-speculative reference."""
+    cfg, model, params = llama
+    _, dmodel, dparams = lm_factory("llama3.2-3b", seed=3, num_layers=1)
+    reqs = request_factory(cfg.vocab_size, n=3, **sampling)
+
+    def build():
+        return engine_factory(model, params, draft=(dmodel, dparams),
+                              spec_tokens=3)
+
+    plain = engine_factory(model, params)
+    for r in copy.deepcopy(reqs):
+        plain.add_request(r)
+    ref = {o.request_id: o.output_tokens
+           for o in plain.run_to_completion()}
+    outs, asms = _run_streamed(build(), reqs)
+    for rid, out in outs.items():
+        assert asms[rid].tokens == out.output_tokens == ref[rid]
+        assert asms[rid].finished
+
+
+def test_stream_fused_multistep_frames(llama, engine_factory,
+                                       request_factory):
+    """K>1 fused decode surfaces tokens in bursts: frames carry up to K
+    tokens each and still reassemble exactly."""
+    cfg, model, params = llama
+    reqs = request_factory(cfg.vocab_size, n=3, max_tokens=18)
+    ref_outs, _ = _run_streamed(engine_factory(model, params), reqs)
+    outs, asms = _run_streamed(
+        engine_factory(model, params, decode_steps_per_sync=4), reqs)
+    for rid, out in outs.items():
+        assert asms[rid].tokens == out.output_tokens
+        assert asms[rid].tokens == ref_outs[rid].output_tokens
+        assert max(d.n_tokens for d in asms[rid].deltas) > 1
+
+
+def test_abort_mid_stream_reclaims_pages(llama, engine_factory,
+                                         request_factory):
+    """Client disconnect mid-stream: abort() frees the sequence's KV pages
+    and no further frames arrive."""
+    cfg, model, params = llama
+    eng = engine_factory(model, params, enable_prefix_cache=True)
+    kv = eng.backend.kv
+    reqs = request_factory(cfg.vocab_size, n=2, max_tokens=40)
+    asms = {r.request_id: StreamAssembler() for r in reqs}
+    for r in reqs:
+        eng.add_request(r, on_delta=asms[r.request_id])
+    # step until the victim has streamed a few frames
+    while len(asms["r0"].deltas) < 3:
+        eng.step()
+    frames_at_abort = len(asms["r0"].deltas)
+    assert eng.abort("r0")
+    outs = eng.run_to_completion()
+    assert {o.request_id for o in outs} == {"r1"}
+    # no frame after the abort, and the stream never "finished"
+    assert len(asms["r0"].deltas) == frames_at_abort
+    assert not asms["r0"].finished
+    # every page is reclaimable again (free_pages counts LRU-parked pages;
+    # page 0 is the allocator's reserved null page)
+    assert kv.free_pages == kv.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# DES gateway: streaming channel, cancellation, hedging, admission control
+# ---------------------------------------------------------------------------
+
+def _system(**gw):
+    deps = {"sophia": {LLAMA70B.name: default_deployment(LLAMA70B)},
+            "polaris": {LLAMA70B.name: default_deployment(LLAMA70B)}}
+    return build_system(deps, gateway_config=GatewayConfig(**gw))
+
+
+def test_gateway_stream_observes_ttft_and_itl():
+    sysd = _system()
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    fut, asm = client.stream(model=LLAMA70B.name, prompt_tokens=64,
+                             max_tokens=24, request_id="s1")
+    ref = client.chat(model=LLAMA70B.name, prompt_tokens=64, max_tokens=24)
+    sysd.loop.run_until_idle()
+    resp = fut.result()
+    # streamed == non-streamed token accounting
+    assert asm.n_tokens == resp.usage.completion_tokens == 24
+    assert ref.result().usage.completion_tokens == 24
+    assert asm.finished and asm.finish_reason == "length"
+    # the client saw tokens strictly before completion
+    assert asm.ttft < resp.finish_time + 1e-9
+    assert len(asm.deltas) > 2
+    # gateway-side record: streamed flag, frames, and inter-frame gaps
+    rec = next(r for r in sysd.metrics.records if r.request_id == "s1")
+    assert rec.streamed and rec.stream_frames >= 24
+    assert rec.first_token > rec.arrival
+    assert len(rec.itl) == rec.stream_frames - 1
+    assert all(g >= 0 for g in rec.itl)
+    s = sysd.metrics.summary()
+    assert s["streamed"] == 1 and "stream_median_itl_s" in s
+
+
+def test_gateway_cancel_propagates_to_engine():
+    sysd = _system()
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    fut, asm = client.stream(model=LLAMA70B.name, prompt_tokens=64,
+                             max_tokens=5000, request_id="c1")
+    ep = sysd.endpoints["sophia-ep"]
+
+    def disconnect():
+        assert client.cancel("c1")
+
+    sysd.loop.call_after(30.0, disconnect)
+    sysd.loop.run_until_idle()
+    assert isinstance(fut.error, errors.RequestCancelled)
+    # the engine slot was freed: nothing is running or queued any more
+    inst = ep.instances[LLAMA70B.name][0]
+    assert inst.engine.load == 0
+    assert inst.engine.total_aborted == 1
+    assert ep.stats["aborted"] == 1
+    # frames stopped, and the metrics record carries the taxonomy code
+    rec = next(r for r in sysd.metrics.records if r.request_id == "c1")
+    assert not rec.ok and rec.error_code == "request_cancelled"
+    assert asm.n_tokens < 5000
+
+
+def test_stream_survives_instance_failure_without_duplicates():
+    """Fault-tolerance requeue restarts generation from token 0; the
+    gateway dedupes re-emitted frames by stream offset, so the client
+    still sees exactly ``max_tokens`` tokens, each once."""
+    sysd = _system()
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    fut, asm = client.stream(model=LLAMA70B.name, prompt_tokens=64,
+                             max_tokens=200, request_id="f1")
+    ep = sysd.endpoints["sophia-ep"]
+    # kill the serving instance mid-stream (the +4s offset clears alice's
+    # first-token 2s auth introspection and lands mid-decode)
+    sysd.faults.fail_instance_at(ep, LLAMA70B.name, t=sysd.loop.now() + 4.0)
+    sysd.loop.run_until_idle()
+    assert fut.error is None
+    assert ep.stats["restarts"] == 1 and ep.stats["requeued"] >= 1
+    assert asm.finished
+    assert asm.n_tokens == fut.result().usage.completion_tokens == 200
+    # the gateway metrics saw each token-bearing frame exactly once (DES
+    # syncs are K=1 here: one token per frame; the finish frame carries
+    # none and is not counted)
+    rec = next(r for r in sysd.metrics.records if r.request_id == "f1")
+    assert rec.streamed and rec.stream_frames == 200
+
+
+def test_hedge_loser_is_cancelled_on_first_token():
+    """The losing hedge endpoint must stop decoding (slot freed) instead
+    of burning through max_tokens after the race is decided."""
+    from repro.core.instances import SimRequest
+
+    sysd = _system(hedge_after=10.0)
+    warm_up(sysd, LLAMA70B.name)                  # sophia hot
+    pol = sysd.endpoints["polaris-ep"]
+    pol._spawn_instance(LLAMA70B.name)
+    sysd.loop.run_until(sysd.loop.now() + 120.0)
+    soph = sysd.endpoints["sophia-ep"].instances[LLAMA70B.name][0]
+    for i in range(600):                          # saturate sophia
+        soph.submit(SimRequest(f"bg{i}", 256, 256), None, lambda r: None)
+    # the warm-up's cold start may itself have hedged: measure deltas
+    hedges0 = sysd.gateway.hedges
+    cancelled0 = sysd.metrics.hedges_cancelled
+    aborted0 = sysd.endpoints["sophia-ep"].stats["aborted"]
+    client = FirstClient(sysd.gateway, sysd.token_for("u"))
+    fut = client.chat(model=LLAMA70B.name, prompt_tokens=64,
+                      max_tokens=4000, request_id="h1")
+    sysd.loop.run_until_idle()
+    assert fut.error is None
+    res = fut.result()
+    assert res.endpoint_id == "polaris-ep"        # the hedge won
+    assert sysd.gateway.hedges - hedges0 == 1
+    assert sysd.metrics.hedges_cancelled - cancelled0 == 1
+    # the loser (original dispatch on sophia) was aborted mid-flight
+    assert sysd.endpoints["sophia-ep"].stats["aborted"] - aborted0 == 1
+    assert soph.engine.total_aborted == 1
+    st = sysd.gateway.jobs_status()["_gateway"]
+    assert st["hedges_cancelled"] == sysd.metrics.hedges_cancelled
+
+
+def test_rate_limit_error_carries_retry_after():
+    sysd = _system(rate_limit_per_user=0.5, rate_burst=1.0)
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    futs = [client.chat(model=LLAMA70B.name, prompt_tokens=8, max_tokens=2)
+            for _ in range(3)]
+    sysd.loop.run_until_idle()
+    errs = [f.error for f in futs if f.error is not None]
+    assert errs and all(isinstance(e, errors.RateLimitError) for e in errs)
+    # bucket refills at 0.5 tok/s -> next token within (0, 2] seconds
+    assert all(0 < e.retry_after <= 2.0 for e in errs)
+    assert all(e.to_dict()["error"]["code"] == "rate_limit_error"
+               for e in errs)
+    # surfaced in /jobs and the metrics log
+    st = sysd.gateway.jobs_status()["_gateway"]
+    assert st["rate_limited"] == len(errs)
+    assert st["rejections"]["rate_limit_error"] == len(errs)
+    assert sysd.metrics.rejections["rate_limit_error"] == len(errs)
+    recs = [r for r in sysd.metrics.records
+            if r.error_code == "rate_limit_error"]
+    assert len(recs) == len(errs)
+
+
+def test_unknown_model_and_queue_full_codes():
+    sysd = _system(max_queue=2, workers=1, request_cpu_time=5.0)
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    bad = client.chat(model="nonexistent-13b", prompt_tokens=8,
+                      max_tokens=2)
+    assert isinstance(bad.error, errors.ModelNotFoundError)
+    futs = [client.chat(model=LLAMA70B.name, prompt_tokens=8, max_tokens=2)
+            for _ in range(6)]
+    overloaded = [f for f in futs
+                  if isinstance(f.error, errors.OverloadedError)]
+    assert overloaded                    # queue of 2 overflowed
+    st = sysd.gateway.jobs_status()["_gateway"]
+    assert st["rejected_queue_full"] == len(overloaded)
+    assert st["rejections"]["overloaded"] == len(overloaded)
+    assert st["rejections"]["model_not_found"] == 1
+    sysd.loop.run_until_idle()
+
+
+def test_response_cache_requires_content_identity():
+    """Regression: two different prompts with equal token counts must NOT
+    share a response-cache entry (the old key fell back to the count)."""
+    sysd = _system()
+    warm_up(sysd, LLAMA70B.name)
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    kw = dict(model=LLAMA70B.name, max_tokens=16, temperature=0.0)
+    # count-only prompts: same count, no content identity -> no caching
+    f1 = client.chat(prompt_tokens=64, **kw)
+    sysd.loop.run_until_idle()
+    f2 = client.chat(prompt_tokens=64, **kw)
+    sysd.loop.run_until_idle()
+    assert f1.error is None and f2.error is None
+    assert sysd.gateway.cache.hits == 0
+    # distinct token ids of EQUAL length hash apart -> both miss
+    g1 = client.complete(prompt_tokens=[1, 2, 3, 4], **kw)
+    sysd.loop.run_until_idle()
+    g2 = client.complete(prompt_tokens=[9, 8, 7, 6], **kw)
+    sysd.loop.run_until_idle()
+    assert g1.error is None and g2.error is None
+    assert sysd.gateway.cache.hits == 0
+    # identical ids DO hit
+    g3 = client.complete(prompt_tokens=[1, 2, 3, 4], **kw)
+    sysd.loop.run_until_idle()
+    assert g3.error is None and sysd.gateway.cache.hits == 1
+    assert g3.result().cached
+
+
+# ---------------------------------------------------------------------------
+# /v1/batches surface
+# ---------------------------------------------------------------------------
+
+def test_v1_batches_status_and_per_request_results():
+    sysd = _system()
+    client = FirstClient(sysd.gateway, sysd.token_for("alice"))
+    items = [schemas.BatchItem(
+        custom_id=f"item-{i}",
+        body=schemas.CompletionRequest(model=LLAMA70B.name,
+                                       prompt_tokens=64, max_tokens=32))
+        for i in range(5)]
+    # two malformed items — one typed, one a raw NDJSON dict — become
+    # per-request errors while the rest of the batch still completes
+    items.append(schemas.BatchItem(
+        custom_id="bad", body=schemas.CompletionRequest(
+            model=LLAMA70B.name, prompt_tokens=-4, max_tokens=8)))
+    items.append({"custom_id": "bad-dict", "url": "/v1/completions",
+                  "body": {"model": LLAMA70B.name, "prompt_tokens": 8,
+                           "max_tokens": 0}})
+    fut = client.create_batch(items)
+    sysd.loop.run_until_idle()
+    st0 = fut.result()
+    assert st0.total == 7
+    final = client.batch_status(st0.id)
+    assert final.status == "completed"
+    assert final.completed == 5 and final.failed == 2
+    assert final.output_tokens == 5 * 32
+    results = {r["custom_id"]: r for r in client.batch_results(st0.id)}
+    assert len(results) == 7
+    for bad in ("bad", "bad-dict"):
+        assert results[bad]["error"]["error"]["code"] == \
+            "invalid_request_error"
+    ok = results["item-0"]["response"]
+    assert ok.usage.completion_tokens == 32
+    assert ok.usage.total_tokens == 96
+    # OpenAI batch object wire shape round-trips
+    d = final.to_dict()
+    assert d["request_counts"] == {"total": 7, "completed": 5, "failed": 2}
+    assert schemas.BatchStatus.from_dict(d).to_dict() == d
