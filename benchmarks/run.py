@@ -13,6 +13,9 @@
                         priority vs priority+preemption, JSON output
   api_stream    (DES)   /v1 token streaming at the gateway: parity,
                         TTFT/ITL, cancel propagation, JSON output
+  tp_decode     (real)  tensor-parallel fused decode on a simulated
+                        4-shard mesh: token parity + throughput ratio,
+                        JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
@@ -28,7 +31,8 @@ import traceback
 
 from benchmarks import (api_stream, autoscale, batch_mode, concurrency,
                         decode_loop, engine_step, external_api, prefix_cache,
-                        qos_preemption, rate_sweep, roofline, spec_decode)
+                        qos_preemption, rate_sweep, roofline, spec_decode,
+                        tp_decode)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -42,13 +46,14 @@ SUITES = {
     "spec_decode": spec_decode.main,
     "qos_preemption": qos_preemption.main,
     "api_stream": api_stream.main,
+    "tp_decode": tp_decode.main,
     "roofline": roofline.main,
 }
 
 # real-engine suites with self-enforced acceptance thresholds: these are
 # the ones a perf-path regression breaks, so CI runs exactly these
 SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode",
-                "qos_preemption", "api_stream"]
+                "qos_preemption", "api_stream", "tp_decode"]
 
 
 def main() -> None:
@@ -73,7 +78,8 @@ def main() -> None:
         t0 = time.time()
         kw = {"fast": args.fast or args.smoke}
         if args.smoke and name in ("decode_loop", "spec_decode",
-                                   "qos_preemption", "api_stream"):
+                                   "qos_preemption", "api_stream",
+                                   "tp_decode"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

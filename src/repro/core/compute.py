@@ -62,6 +62,9 @@ class ModelDeployment:
     model: str
     cost: InstanceCost
     nodes_per_instance: int = 1
+    model_shards: int = 1                  # TP width per instance (must match
+    #                                        cost.model_shards; the real
+    #                                        engine's EngineConfig.mesh mirror)
     max_slots: int = 48                    # max parallel tasks within a node
     idle_timeout: float = 7200.0           # paper: release after 2 h idle
     autoscale: AutoScalePolicy = field(default_factory=AutoScalePolicy)

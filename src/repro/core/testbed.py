@@ -63,6 +63,7 @@ class System:
 def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
                        nodes_per_instance: int = 1, max_slots: int = 48,
                        max_instances: int = 1, idle_timeout: float = 7200.0,
+                       model_shards: int = 1,
                        mfu: float = 0.5,
                        storage_bw: float = 2e9,
                        scale_cooldown: float = 30.0,
@@ -75,12 +76,18 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
                        restore_hit_rate: float = 1.0,
                        hw: dict | None = None) -> ModelDeployment:
     """``hw``: optional InstanceCost overrides, e.g. A100 constants
-    ``dict(peak_flops=312e12, hbm_bw=1555e9)`` for paper-validation runs."""
+    ``dict(peak_flops=312e12, hbm_bw=1555e9)`` for paper-validation runs.
+    ``model_shards``: tensor-parallel width per instance (must divide
+    ``chips_per_instance``; InstanceCost validates) — adds the per-layer
+    all-reduce terms to every service time, exactly as the real engine's
+    ``EngineConfig.mesh`` shards its forward."""
     return ModelDeployment(
         model=cfg.name,
         cost=InstanceCost(cfg=cfg, chips=chips_per_instance, mfu=mfu,
-                          storage_bw=storage_bw, **(hw or {})),
+                          storage_bw=storage_bw, model_shards=model_shards,
+                          **(hw or {})),
         nodes_per_instance=nodes_per_instance,
+        model_shards=model_shards,
         max_slots=max_slots,
         idle_timeout=idle_timeout,
         result_cpu=result_cpu,

@@ -163,3 +163,102 @@ class ShardingRules:
         return jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), spec_tree,
             is_leaf=lambda x: isinstance(x, P))
+
+
+class ServeSharding:
+    """Serving-time placement policy for tensor-parallel inference.
+
+    One object per backend, built from the engine's mesh. The placement
+    contract the sharded engine relies on:
+
+    * **params** — TP-sharded by :class:`ShardingRules` (``train=False``):
+      attention q/k/v and MLP columns over ``model``, wo/w2 rows over
+      ``model``, MoE expert stacks over ``model`` (expert-parallel decode
+      falls out of the einsum), everything small replicated.
+    * **KV** — paged pools ``(L, NP, page, KH, hd)`` and slot caches
+      ``(L, B, KH, S, hd)`` shard the kv-head axis over ``model``; when the
+      head count is not divisible (GQA/MQA on a wide mesh) the head_dim
+      axis shards instead, and when neither divides the cache replicates.
+      Block tables / lengths / refcounts are host-side and replicated.
+    * **everything the sampler touches** — decode state, tables, lens,
+      token uploads — is replicated, so every shard samples the same token
+      from its full (all-gathered) logits and only O(max_slots) ids ever
+      sync to the host: the zero-logits-transfer invariant survives
+      sharding.
+
+    ``pin_*`` wrap ``with_sharding_constraint`` and are applied inside the
+    jitted bodies so carried cache/state shardings are fixed points across
+    calls (donation stays effective, GSPMD never drifts the layout).
+    """
+
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        if "model" not in mesh.axis_names:
+            raise ValueError(
+                f"serving mesh needs a 'model' axis, got {mesh.axis_names}; "
+                f"build one with launch.make_local_mesh(data, model)")
+        self.mesh = mesh
+        self.cfg = cfg
+        self.rules = ShardingRules(mesh, cfg, train=False)
+        self.replicated = NamedSharding(mesh, P())
+
+    @property
+    def model_shards(self) -> int:
+        return int(self.mesh.shape["model"])
+
+    # -- placement (device_put, at init / upload time) ---------------------------
+    def shard_params(self, params):
+        specs = self.rules.param_specs(params)
+        return jax.device_put(params, self.rules.named(specs))
+
+    def _head_axes(self, kh: int, hd: int):
+        """(kv-head axis, head_dim axis): kv-heads over model when
+        divisible, else head_dim over model, else replicate."""
+        if self.rules._ax("model", kh) is not None:
+            return "model", None
+        if self.rules._ax("model", hd) is not None:
+            return None, "model"
+        return None, None
+
+    def pool_spec(self, shape) -> P:
+        """Paged KV pool (L, num_pages, page_size, KH, hd)."""
+        kh, hd = self._head_axes(shape[3], shape[4])
+        return P(None, None, None, kh, hd)
+
+    def slot_cache_spec(self, name: str, shape) -> P:
+        """Slot cache leaf by name: k/v are (L, B, KH, S, hd); len and the
+        SSM/conv states replicate."""
+        if name in ("k", "v"):
+            kh, hd = self._head_axes(shape[2], shape[4])
+            return P(None, None, kh, None, hd)
+        return P()
+
+    def shard_pools(self, pools):
+        return {n: jax.device_put(
+            a, NamedSharding(self.mesh, self.pool_spec(a.shape)))
+            for n, a in pools.items()}
+
+    def shard_slot_cache(self, cache):
+        return {n: jax.device_put(
+            a, NamedSharding(self.mesh, self.slot_cache_spec(n, a.shape)))
+            for n, a in cache.items()}
+
+    def replicate(self, x):
+        """Host upload, replicated onto the mesh's device set (mixing a
+        committed single-device array into a mesh jit is an error)."""
+        return jax.device_put(x, self.replicated)
+
+    # -- constraints (with_sharding_constraint, inside jit) ----------------------
+    def pin(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def pin_replicated(self, tree):
+        return jax.tree.map(lambda a: self.pin(a, P()), tree)
+
+    def pin_pools(self, pools):
+        return {n: self.pin(a, self.pool_spec(a.shape))
+                for n, a in pools.items()}
+
+    def pin_slot_cache(self, cache):
+        return {n: self.pin(a, self.slot_cache_spec(n, a.shape))
+                for n, a in cache.items()}

@@ -12,6 +12,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (possibly fake) local devices exist —
-    used by distribution tests, not the dry-run."""
+    """Small (data, model) mesh over however many (possibly fake) local
+    devices exist — serving tensor-parallelism and distribution tests.
+
+    Validates the request against ``jax.device_count()`` up front: a
+    too-large mesh would otherwise surface as an opaque shape error deep
+    inside the first jit that touches it. Simulate devices on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes its backend).
+    """
+    if data < 1 or model < 1:
+        raise ValueError(
+            f"mesh axes must be positive, got data={data} model={model}")
+    need, have = data * model, jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"requested a {data}x{model} (data x model) mesh = {need} "
+            f"devices but only {have} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} (before jax "
+            f"initializes) to simulate them, or shrink the mesh")
     return jax.make_mesh((data, model), ("data", "model"))

@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-seq-len", type=int, default=160)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="tensor-parallel width: shard the engine over a "
+                         "(1, N) device mesh (N devices must be visible; "
+                         "simulate with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--stream", action="store_true",
                     help="subscribe every request to the token stream and "
                          "report client-observed TTFT/ITL")
@@ -49,13 +54,19 @@ def main() -> None:
         raise SystemExit("hubert-xlarge is encoder-only: use the embedding "
                          "service (repro.serving.embedding), not generate")
 
+    mesh = None
+    if args.model_shards > 1:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(1, args.model_shards)
+
     print(f"[serve] arch={args.arch} ({'full' if args.full else 'reduced'}) "
-          f"backend={args.backend} slots={args.slots}")
+          f"backend={args.backend} slots={args.slots} "
+          f"shards={args.model_shards}")
     model = make_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
     engine = ContinuousBatchingEngine(model, params, EngineConfig(
         max_slots=args.slots, max_seq_len=args.max_seq_len,
-        backend=args.backend, page_size=16))
+        backend=args.backend, page_size=16, mesh=mesh))
 
     wl = make_workload(args.requests, rate=args.rate, seed=args.seed,
                        lo=4, hi=max(8, args.max_seq_len - args.max_tokens - 8))

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.distributed.sharding import ServeSharding
 from repro.models import LM
 from repro.models.layers import (NEG_INF, chunked_attention, mlp_layer,
                                  project_qkv, rms_norm)
@@ -91,9 +92,12 @@ def _logits_to_host(x) -> np.ndarray:
     return out
 
 
-def _upload_state(host_state: dict) -> dict:
+def _upload_state(host_state: dict, shard: ServeSharding | None = None) -> dict:
     # copy: jnp.asarray may alias numpy memory on CPU, and the fused call
-    # donates the state buffers
+    # donates the state buffers. Sharded engines replicate the state onto
+    # the mesh's device set — sampling is replicated by construction.
+    if shard is not None:
+        return {k: shard.replicate(np.array(v)) for k, v in host_state.items()}
     return {k: jnp.asarray(np.array(v)) for k, v in host_state.items()}
 
 
@@ -217,13 +221,19 @@ class PrefillTask:
 class SlotBackend:
     """Contiguous cache with ``max_slots`` sequences of up to ``max_len``."""
 
-    def __init__(self, model: LM, params, *, max_slots: int, max_len: int):
+    def __init__(self, model: LM, params, *, max_slots: int, max_len: int,
+                 mesh=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.cache = model.init_cache(max_slots, max_len)
+        self.shard = ServeSharding(mesh, model.cfg) if mesh is not None \
+            else None
+        if self.shard is not None:
+            self.params = self.shard.shard_params(params)
+            self.cache = self.shard.shard_slot_cache(self.cache)
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.slot_of: dict[str, int] = {}
 
@@ -234,18 +244,36 @@ class SlotBackend:
                 idx[ax] = slot
                 return big.at[tuple(idx)].set(
                     jnp.squeeze(small, ax) if small.ndim == big.ndim else small)
-            return jax.tree.map(ins, cache, slot_cache)
+            return self._pin_cache(jax.tree.map(ins, cache, slot_cache))
 
         self._insert = jax.jit(_insert, donate_argnums=(0,))
         self._prefill = {}  # bucket -> jitted fn
         # one jit object; specializes per chunk-bucket shape
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(2,))
-        self._decode = jax.jit(
-            lambda p, toks, cache: self.model.decode_step(p, toks, cache),
-            donate_argnums=(2,))
+
+        def _decode(p, toks, cache):
+            logits, cache = self.model.decode_step(p, toks, cache)
+            return logits, self._pin_cache(cache)
+
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
         self._fused = {}        # K -> jitted multi-step decode+sample fn
         self._spec_fns = {}     # T -> jitted verify+accept fn
         self._dec_st = None     # device-resident per-slot decode state
+
+    # -- sharded placement helpers ----------------------------------------------
+    def _put(self, x):
+        """Host upload: replicated onto the mesh device set when sharded."""
+        return jnp.asarray(x) if self.shard is None \
+            else self.shard.replicate(np.asarray(x))
+
+    def _pin_cache(self, cache):
+        """Pin cache leaves to their serving sharding inside jit, so the
+        layout is a fixed point across donated calls (no-op unsharded)."""
+        return cache if self.shard is None \
+            else self.shard.pin_slot_cache(cache)
+
+    def _pin_st(self, st):
+        return st if self.shard is None else self.shard.pin_replicated(st)
 
     # -- capacity -------------------------------------------------------------
     def can_admit(self, n_prompt: int) -> bool:
@@ -306,12 +334,12 @@ class SlotBackend:
                     params, {"tokens": toks}, max_len=self.max_len,
                     last_index=true_len - 1, moe_mode="dense")
                 cache["len"] = jnp.full_like(cache["len"], true_len)
-                return logits, cache
+                return logits, self._pin_cache(cache)
             self._prefill[bucket] = jax.jit(fn)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :S] = prompt
         logits, slot_cache = self._prefill[bucket](
-            self.params, jnp.asarray(toks), S)
+            self.params, self._put(toks), S)
         self.cache = self._insert(self.cache, slot_cache, slot)
         return logits[0]            # device-resident (V,)
 
@@ -357,7 +385,7 @@ class SlotBackend:
         cache = dict(cache)
         cache["k"], cache["v"] = nk, nv
         cache["len"] = cache["len"].at[slot].set(kv_len)
-        return logits[0], cache
+        return logits[0], self._pin_cache(cache)
 
     def _compute_chunk(self, task: PrefillTask, chunk: int):
         slot = self.slot_of[task.seq_id]
@@ -365,14 +393,14 @@ class SlotBackend:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :chunk] = task.prompt[task.pos:task.pos + chunk]
         logits, self.cache = self._chunk(
-            self.params, jnp.asarray(toks), self.cache, slot, task.pos, chunk)
+            self.params, self._put(toks), self.cache, slot, task.pos, chunk)
         return logits               # device-resident (V,)
 
     # -- decode -----------------------------------------------------------------
     def decode_batch(self, tokens_by_slot: np.ndarray):
         """tokens_by_slot: (max_slots,) int32. Returns logits (max_slots, V)."""
         logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(tokens_by_slot),
+                                          self._put(tokens_by_slot),
                                           self.cache)
         return _logits_to_host(logits)
 
@@ -396,6 +424,7 @@ class SlotBackend:
         def body(i, carry):
             cache, tokens, n_gen, done, produced, out = carry
             logits, cache = self.model.decode_step(params, tokens, cache)
+            cache = self._pin_cache(cache)
             live = st["active"] & ~done
             tokens, n_gen, done, produced = _sample_and_latch(
                 st, logits, tokens, n_gen, done, produced, live)
@@ -404,9 +433,10 @@ class SlotBackend:
 
         cache, tokens, n_gen, done, produced, out = lax.fori_loop(
             0, K, body,
-            (cache, st["tokens"], st["n_gen"], jnp.zeros((B,), bool),
-             jnp.zeros((B,), jnp.int32), jnp.zeros((K, B), jnp.int32)))
-        st = dict(st, tokens=tokens, n_gen=n_gen)
+            (self._pin_cache(cache), st["tokens"], st["n_gen"],
+             jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((K, B), jnp.int32)))
+        st = self._pin_st(dict(st, tokens=tokens, n_gen=n_gen))
         return out, produced, done, cache, st
 
     def fused_decode(self, K: int, host_state: dict | None = None):
@@ -418,7 +448,7 @@ class SlotBackend:
         produced (max_slots,) np.int32, done (max_slots,) bool).
         """
         if host_state is not None:
-            self._dec_st = _upload_state(host_state)
+            self._dec_st = _upload_state(host_state, self.shard)
         assert self._dec_st is not None, \
             "fused_decode needs host_state on the first call"
         if K not in self._fused:
@@ -453,7 +483,7 @@ class SlotBackend:
         for sid, n in lens_by_seq.items():
             lens[self.slot_of[sid]] = n
         self.cache = dict(self.cache)
-        self.cache["len"] = jnp.asarray(lens)
+        self.cache["len"] = self._put(lens)
 
     def spec_catch_up(self, seq_id: str, tokens: list, from_pos: int):
         """Draft-cache resync after non-speculative rounds advanced the
@@ -503,7 +533,8 @@ class SlotBackend:
                                                              draft)
         cache = dict(cache, k=nk, v=nv)
         cache["len"] = lens + produced
-        return targets.T, produced, done, cache, st
+        return targets.T, produced, done, self._pin_cache(cache), \
+            self._pin_st(st)
 
     def spec_verify(self, draft_tokens: np.ndarray, host_state=None):
         """One speculative round's verification: draft_tokens (B, k) from
@@ -511,7 +542,7 @@ class SlotBackend:
         the residual, and truncates the cache — logits never reach the host.
         Returns (tokens (k+1, B), produced (B,), done (B,)) numpy arrays."""
         if host_state is not None:
-            self._dec_st = _upload_state(host_state)
+            self._dec_st = _upload_state(host_state, self.shard)
         assert self._dec_st is not None, \
             "spec_verify needs host_state on the first call"
         T = draft_tokens.shape[1] + 1
@@ -520,7 +551,7 @@ class SlotBackend:
                                         donate_argnums=(1, 2))
         out, produced, done, self.cache, self._dec_st = self._spec_fns[T](
             self.params, self.cache, self._dec_st,
-            jnp.asarray(np.ascontiguousarray(draft_tokens)))
+            self._put(np.ascontiguousarray(draft_tokens)))
         return np.asarray(out), np.asarray(produced), np.asarray(done)
 
     def free(self, seq_id: str):
@@ -543,10 +574,16 @@ class PagedBackend:
 
     def __init__(self, model: LM, params, *, max_slots: int, max_len: int,
                  page_size: int = 128, num_pages: int | None = None,
-                 use_kernel: bool = False, enable_prefix_cache: bool = False):
+                 use_kernel: bool = False, enable_prefix_cache: bool = False,
+                 mesh=None):
         cfg = model.cfg
         assert cfg.family in ATTENTION_FAMILIES, \
             "paged backend supports attention families"
+        if mesh is not None and use_kernel:
+            raise ValueError(
+                "use_kernel (Pallas paged attention) is incompatible with a "
+                "sharded mesh: GSPMD cannot partition the kernel body — run "
+                "the jnp reference path (use_kernel=False) when sharding")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -564,6 +601,13 @@ class PagedBackend:
             "k": jnp.zeros((L, num_pages, page_size, KH, hd), dtype),
             "v": jnp.zeros((L, num_pages, page_size, KH, hd), dtype),
         }
+        self.shard = ServeSharding(mesh, cfg) if mesh is not None else None
+        if self.shard is not None:
+            # pages shard along the kv-head axis; the host-side allocator
+            # (tables, refcounts, prefix index) is one copy serving every
+            # shard — see PagedKVCache's docstring
+            self.params = self.shard.shard_params(params)
+            self.pools = self.shard.shard_pools(self.pools)
         self.use_kernel = use_kernel
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.slot_of: dict[str, int] = {}
@@ -577,9 +621,9 @@ class PagedBackend:
         # swap-in upload (preemption restore): write saved page KV back
         # into freshly allocated pages; specializes per page count
         self._swap = jax.jit(
-            lambda pools, table, k, v: {
+            lambda pools, table, k, v: self._pin_pools({
                 "k": pools["k"].at[:, table].set(k),
-                "v": pools["v"].at[:, table].set(v)},
+                "v": pools["v"].at[:, table].set(v)}),
             donate_argnums=(0,))
         self._fused = {}            # K -> jitted multi-step decode+sample fn
         self._spec_fns = {}         # T -> jitted verify+accept fn
@@ -597,6 +641,20 @@ class PagedBackend:
     def supports_chunked_prefill(self) -> bool:
         return True
 
+    # -- sharded placement helpers ----------------------------------------------
+    def _put(self, x):
+        """Host upload: replicated onto the mesh device set when sharded."""
+        return jnp.asarray(x) if self.shard is None \
+            else self.shard.replicate(np.asarray(x))
+
+    def _pin_pools(self, pools):
+        """Pin the page pools to their head-axis sharding inside jit, so
+        the layout is a fixed point across donated calls (no-op unsharded)."""
+        return pools if self.shard is None else self.shard.pin_pools(pools)
+
+    def _pin_st(self, st):
+        return st if self.shard is None else self.shard.pin_replicated(st)
+
     # -- jitted bodies ----------------------------------------------------------
     def _attend(self, q, kp, vp, tables, lens):
         if self.use_kernel:
@@ -607,8 +665,9 @@ class PagedBackend:
     def _cow_impl(self, pools, src, dst):
         """Copy-on-write: duplicate page ``src`` into ``dst`` on device
         (across every layer) before a write diverges a shared page."""
-        return {"k": pools["k"].at[:, dst].set(pools["k"][:, src]),
-                "v": pools["v"].at[:, dst].set(pools["v"][:, src])}
+        return self._pin_pools(
+            {"k": pools["k"].at[:, dst].set(pools["k"][:, src]),
+             "v": pools["v"].at[:, dst].set(pools["v"][:, src])})
 
     def _prefill_impl(self, params, toks, pools, table, true_len, *, n_pages):
         """toks: (1, S_bucket); table: (n_pages,) page ids for this seq."""
@@ -633,7 +692,7 @@ class PagedBackend:
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         idx = jnp.maximum(true_len - 1, 0)
         logits = model.logits(params, h[:, idx])
-        return logits[0], {"k": nk, "v": nv}
+        return logits[0], self._pin_pools({"k": nk, "v": nv})
 
     def _chunk_prefill_impl(self, params, toks, pools, table, write_pages,
                             write_offs, start, true_len):
@@ -672,7 +731,7 @@ class PagedBackend:
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         idx = jnp.maximum(true_len - 1, 0)
         logits = model.logits(params, h[:, idx])
-        return logits[0], {"k": nk, "v": nv}
+        return logits[0], self._pin_pools({"k": nk, "v": nv})
 
     def _decode_forward(self, params, pools, tokens, tables, lens,
                         page_idx, off):
@@ -706,7 +765,7 @@ class PagedBackend:
                                          pools["v"]))
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         logits = model.logits(params, h[:, 0])
-        return logits, {"k": nk, "v": nv}
+        return logits, self._pin_pools({"k": nk, "v": nv})
 
     def _decode_impl(self, params, pools, tokens, tables, lens):
         """tokens: (B,); tables: (B, PPS); lens: (B,) current lengths.
@@ -770,8 +829,8 @@ class PagedBackend:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :S] = prompt
         logits, self.pools = self._prefill[bucket](
-            self.params, jnp.asarray(toks), self.pools,
-            jnp.asarray(np.array(write_table, np.int32)), S)
+            self.params, self._put(toks), self.pools,
+            self._put(np.array(write_table, np.int32)), S)
         return logits               # device-resident (V,)
 
     def _compute_chunk(self, task: PrefillTask, chunk: int):
@@ -800,9 +859,9 @@ class PagedBackend:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :chunk] = task.prompt[pos:pos + chunk]
         logits, self.pools = self._chunk(
-            self.params, jnp.asarray(toks), self.pools,
-            jnp.asarray(ctx_table), jnp.asarray(write_pages),
-            jnp.asarray(write_offs), pos, chunk)
+            self.params, self._put(toks), self.pools,
+            self._put(ctx_table), self._put(write_pages),
+            self._put(write_offs), pos, chunk)
         return logits               # device-resident (V,)
 
     # -- decode -----------------------------------------------------------------
@@ -823,8 +882,8 @@ class PagedBackend:
             tables[slot] = self.kv.table_array([sid], self.pages_per_seq)[0]
             lens[slot] = self.kv.length(sid)
         logits, self.pools = self._decode(
-            self.params, self.pools, jnp.asarray(tokens_by_slot),
-            jnp.asarray(tables), jnp.asarray(lens))
+            self.params, self.pools, self._put(tokens_by_slot),
+            self._put(tables), self._put(lens))
         for sid in self.decoding:
             self.kv.advance(sid)
         return _logits_to_host(logits)
@@ -865,9 +924,12 @@ class PagedBackend:
 
         pools, tokens, n_gen, lens, done, produced, out = lax.fori_loop(
             0, K, step,
-            (pools, st["tokens"], st["n_gen"], lens, jnp.zeros((B,), bool),
-             jnp.zeros((B,), jnp.int32), jnp.zeros((K, B), jnp.int32)))
-        st = dict(st, tokens=tokens, n_gen=n_gen)
+            (self._pin_pools(pools), st["tokens"], st["n_gen"], lens,
+             jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((K, B), jnp.int32)))
+        st = self._pin_st(dict(st, tokens=tokens, n_gen=n_gen))
+        if self.shard is not None:
+            lens = self.shard.pin(lens, jax.sharding.PartitionSpec())
         return out, produced, done, pools, st, lens
 
     def fused_decode(self, K: int, host_state: dict | None = None):
@@ -886,7 +948,7 @@ class PagedBackend:
         self._resolve_cow(K_eff)
         self._refresh_tables(force=host_state is not None)
         if host_state is not None:
-            self._dec_st = _upload_state(host_state)
+            self._dec_st = _upload_state(host_state, self.shard)
         assert self._dec_st is not None, \
             "fused_decode needs host_state on the first call"
         if K_eff not in self._fused:
@@ -944,7 +1006,7 @@ class PagedBackend:
                     tables[slot] = self.kv.table_array(
                         [sid], self.pages_per_seq)[0]
                     lens[slot] = self.kv.length(sid)
-            self._dev_tables = (jnp.asarray(tables), jnp.asarray(lens))
+            self._dev_tables = (self._put(tables), self._put(lens))
             self._dev_tables_key = self.kv.table_version
 
     # -- speculative decoding ----------------------------------------------------
@@ -1017,7 +1079,10 @@ class PagedBackend:
         targets, produced, done, st = _spec_accept_and_latch(st, logits,
                                                              draft)
         lens = lens + produced
-        return targets.T, produced, done, {"k": nk, "v": nv}, st, lens
+        pools = self._pin_pools({"k": nk, "v": nv})
+        if self.shard is not None:
+            lens = self.shard.pin(lens, jax.sharding.PartitionSpec())
+        return targets.T, produced, done, pools, self._pin_st(st), lens
 
     def spec_verify(self, draft_tokens: np.ndarray, host_state=None):
         """One speculative round's verification (page headroom must already
@@ -1029,7 +1094,7 @@ class PagedBackend:
         self._resolve_cow(T)
         self._refresh_tables(force=host_state is not None)
         if host_state is not None:
-            self._dec_st = _upload_state(host_state)
+            self._dec_st = _upload_state(host_state, self.shard)
         assert self._dec_st is not None, \
             "spec_verify needs host_state on the first call"
         if T not in self._spec_fns:
@@ -1039,7 +1104,7 @@ class PagedBackend:
         out, produced, done, self.pools, self._dec_st, lens_d = \
             self._spec_fns[T](self.params, self.pools, self._dec_st,
                               tables_d, lens_d,
-                              jnp.asarray(np.ascontiguousarray(draft_tokens)))
+                              self._put(np.ascontiguousarray(draft_tokens)))
         self._dev_tables = (tables_d, lens_d)
         produced_np = np.asarray(produced)
         for slot, sid in self.seq_of.items():
@@ -1088,9 +1153,8 @@ class PagedBackend:
         self.seq_of[slot] = seq_id
         pages = self.kv.allocate(seq_id, n_tokens)
         self.pools = self._swap(self.pools,
-                                jnp.asarray(np.array(pages, np.int32)),
-                                jnp.asarray(blob["k"]),
-                                jnp.asarray(blob["v"]))
+                                self._put(np.array(pages, np.int32)),
+                                self._put(blob["k"]), self._put(blob["v"]))
         self.decoding.add(seq_id)
 
     def slot(self, seq_id: str) -> int:

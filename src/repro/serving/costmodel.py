@@ -30,6 +30,8 @@ from repro.configs.base import ModelConfig
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
 HBM_BW = 819e9               # bytes/s / chip
 HOST_IO_BW = 64e9            # bytes/s device<->host staging (KV swap path)
+ICI_BW = 45e9                # bytes/s per-link inter-chip interconnect (v5e)
+COLLECTIVE_LAUNCH = 5e-6     # per-collective launch floor (tiny all-reduces)
 DISPATCH_OVERHEAD = 2e-4     # per-step kernel dispatch/collective floor
 HOST_SYNC_OVERHEAD = 1.8e-3  # per-sync host transfer+sampling+scheduling
 STEP_OVERHEAD = DISPATCH_OVERHEAD + HOST_SYNC_OVERHEAD  # legacy K=1 total
@@ -65,7 +67,15 @@ class InstanceCost:
 
     ``peak_flops``/``hbm_bw`` default to the TPU-v5e target; pass A100
     constants (312e12 bf16, 1555e9) to validate the DES against the paper's
-    own hardware."""
+    own hardware.
+
+    ``model_shards`` mirrors the real engine's tensor-parallel mesh (the
+    ``model`` axis of ``EngineConfig.mesh``): the FLOP/HBM rooflines above
+    already scale with ``chips``, so sharding's *cost* is the per-layer
+    all-reduce traffic that perfect scaling ignores — 2 collectives per
+    layer over the activations (Megatron TP), charged on every forward.
+    The default of 1 adds exactly zero and reproduces the unsharded model
+    bit-for-bit."""
     cfg: ModelConfig
     chips: int = 8
     mfu: float = 0.5
@@ -79,6 +89,41 @@ class InstanceCost:
     step_overhead: float = STEP_OVERHEAD
     dispatch_overhead: float = DISPATCH_OVERHEAD
     host_io_bw: float = HOST_IO_BW   # KV swap-out/in staging bandwidth
+    model_shards: int = 1            # TP width (EngineConfig.mesh mirror)
+    ici_bw: float = ICI_BW           # all-reduce ring bandwidth per link
+
+    def __post_init__(self):
+        n = int(self.model_shards)
+        if n < 1:
+            raise ValueError(f"model_shards must be >= 1, got {n}")
+        if self.chips % n:
+            raise ValueError(
+                f"model_shards={n} must divide chips={self.chips} "
+                f"(each TP group spans chips/model_shards chips)")
+
+    # -- tensor parallelism ------------------------------------------------------
+    def _collective_time(self, batch: int, tokens_per_seq: int = 1) -> float:
+        """All-reduce wall time for one forward under Megatron-style TP:
+        2 collectives per layer (attention output + MLP output) over the
+        (batch, tokens, d_model) activations, ring cost ``2(n-1)/n`` times
+        the payload per device at ICI bandwidth, plus a per-collective
+        launch floor (decode-shaped all-reduces are latency-bound)."""
+        n = int(self.model_shards)
+        if n <= 1:
+            return 0.0
+        act = batch * tokens_per_seq * self.cfg.d_model * self.bytes_per_param
+        ring = 2.0 * (n - 1) / n * act / self.ici_bw
+        return 2 * self.cfg.num_layers * (ring + COLLECTIVE_LAUNCH)
+
+    def hbm_bytes_per_shard(self, batch: int = 1, ctx: int = 1024) -> float:
+        """Resident bytes per TP shard: weights split over ``model`` and the
+        KV pool split along its head axis, so both divide by the TP width
+        (the HBM-headroom argument for sharding a too-large model)."""
+        cfg = self.cfg
+        w_bytes = cfg.num_params * self.bytes_per_param
+        kv_bytes = (cfg.attn_layer_count() * 2 * cfg.kv_dim
+                    * self.bytes_per_param * ctx * batch)
+        return (w_bytes + kv_bytes) / int(self.model_shards)
 
     # -- model load (cold start component) -------------------------------------
     def load_time(self) -> float:
@@ -89,7 +134,8 @@ class InstanceCost:
     def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
         flops = 2.0 * self.cfg.num_active_params * prompt_tokens * batch
         t_c = flops / (self.chips * self.peak_flops * self.mfu)
-        return max(t_c, self.step_overhead)
+        t_coll = self._collective_time(batch, prompt_tokens)
+        return max(t_c + t_coll, self.step_overhead)
 
     # -- preemption (QoS scheduling) ---------------------------------------------
     def restore_time(self, n_tokens: int,
@@ -121,7 +167,8 @@ class InstanceCost:
         t_mem, t_c = self._decode_roofline(batch, ctx)
         k = max(int(steps_per_sync), 1)
         host_sync = max(self.step_overhead - self.dispatch_overhead, 0.0)
-        return max(t_mem, t_c) + self.dispatch_overhead + host_sync / k
+        return (max(t_mem, t_c) + self._collective_time(batch)
+                + self.dispatch_overhead + host_sync / k)
 
     def decode_tok_per_s(self, batch: int, ctx: int = 1024,
                          steps_per_sync: int = 1) -> float:
@@ -156,7 +203,8 @@ class InstanceCost:
                                                    steps_per_sync=k + 1)
         t_mem, t_c = self._decode_roofline(batch, ctx, tokens_per_seq=k + 1)
         host_sync = max(self.step_overhead - self.dispatch_overhead, 0.0)
-        t_verify = max(t_mem, t_c) + self.dispatch_overhead + host_sync
+        t_verify = (max(t_mem, t_c) + self._collective_time(batch, k + 1)
+                    + self.dispatch_overhead + host_sync)
         return t_draft + t_verify
 
     def spec_decode_tok_per_s(self, batch: int, draft: "InstanceCost",

@@ -79,6 +79,12 @@ class EngineConfig:
     page_size: int = 64
     num_pages: int | None = None
     use_kernel: bool = False
+    # tensor-parallel serving: a jax.sharding.Mesh with a "model" axis (see
+    # launch.mesh.make_local_mesh). Params are TP-sharded via ShardingRules,
+    # KV pools/caches shard along the kv-head axis, sampling state stays
+    # replicated so the fused decode loop keeps its zero-logits-transfer
+    # contract. None = the legacy single-device layout.
+    mesh: object | None = None
     max_prefills_per_step: int = 4
     # prompt tokens computed per engine step across all in-flight prefills;
     # 0 disables chunking (whole prompts ingest in their admission step)
@@ -185,13 +191,14 @@ class ContinuousBatchingEngine:
                 model, params, max_slots=self.cfg.max_slots,
                 max_len=self.cfg.max_seq_len, page_size=self.cfg.page_size,
                 num_pages=self.cfg.num_pages, use_kernel=self.cfg.use_kernel,
-                enable_prefix_cache=self.cfg.enable_prefix_cache)
+                enable_prefix_cache=self.cfg.enable_prefix_cache,
+                mesh=self.cfg.mesh)
         else:
             if self.cfg.enable_prefix_cache:
                 raise ValueError("prefix caching requires backend='paged'")
             self.backend = SlotBackend(
                 model, params, max_slots=self.cfg.max_slots,
-                max_len=self.cfg.max_seq_len)
+                max_len=self.cfg.max_seq_len, mesh=self.cfg.mesh)
         self.draft_backend = None
         if self.cfg.spec_tokens > 0:
             if draft_model is None:
@@ -213,11 +220,11 @@ class ContinuousBatchingEngine:
                     max_len=self.cfg.max_seq_len,
                     page_size=self.cfg.page_size,
                     num_pages=self.cfg.num_pages,
-                    use_kernel=self.cfg.use_kernel)
+                    use_kernel=self.cfg.use_kernel, mesh=self.cfg.mesh)
             else:
                 self.draft_backend = SlotBackend(
                     draft_model, draft_params, max_slots=self.cfg.max_slots,
-                    max_len=self.cfg.max_seq_len)
+                    max_len=self.cfg.max_seq_len, mesh=self.cfg.mesh)
         if self.cfg.preempt_swap and self.cfg.backend != "paged":
             raise ValueError("preempt_swap requires backend='paged'")
         kwargs = {}

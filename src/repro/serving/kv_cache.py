@@ -28,6 +28,15 @@ Invariants (checked by tests/test_prefix_cache.py):
   * ``free_pages`` counts plain free + LRU pages (both are claimable);
   * a partial (not-full) page is never registered, so it is only shared in
     the page-aligned full-prefix case handled by :meth:`writable_page`.
+
+Tensor-parallel serving shards the page *pool* along the kv-head axis, but
+this allocator stays a single host-side copy: page ids, block tables,
+refcounts, and the prefix index are identical on every shard by
+construction (each shard's pool slice is indexed by the SAME tables). When
+shards run in separate host processes the allocator must be driven with an
+identical operation sequence on each — :meth:`snapshot` captures the full
+allocator state so tests can assert replicas never diverge under
+admit/free/preempt/COW churn (tests/test_tp_mesh.py).
 """
 from __future__ import annotations
 
@@ -283,6 +292,23 @@ class PagedKVCache:
     def hit_rate(self) -> float:
         tot = self.stats["hit_tokens"] + self.stats["miss_tokens"]
         return self.stats["hit_tokens"] / tot if tot else 0.0
+
+    def snapshot(self) -> dict:
+        """Canonical, comparable copy of the full allocator state (block
+        tables, lengths, refcounts, free/LRU lists, prefix registrations,
+        version). Two allocator replicas driven by the same op sequence
+        must produce equal snapshots — the per-shard consistency contract
+        of tensor-parallel serving."""
+        return {
+            "tables": {s: tuple(t) for s, t in self._tables.items()},
+            "lens": dict(self._lens),
+            "ref": dict(self._ref),
+            "free": tuple(self._free),
+            "lru": tuple(self._lru.keys()),
+            "hash_of": dict(self._hash_of),
+            "page_of": dict(self._page_of),
+            "table_version": self.table_version,
+        }
 
     # -- device-facing views ---------------------------------------------------
     def table_array(self, seq_ids: list[str], max_pages: int) -> np.ndarray:

@@ -8,8 +8,14 @@ and sampling mode (greedy | seeded top-p).
 """
 import os
 
-# Tests run single-device; ONLY launch/dryrun.py sets the 512-device flag.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# The tensor-parallel axis of the test matrix runs on a simulated 4-device
+# mesh; fake the devices on CPU up front (the flag is only read when jax
+# initializes its backend, so it must be set before the import below).
+_xla = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _xla:
+    os.environ["XLA_FLAGS"] = \
+        (_xla + " --xla_force_host_platform_device_count=8").strip()
 
 import jax  # noqa: E402
 
@@ -90,6 +96,21 @@ def sampling(request):
     """Sampling-mode axis as SamplingParams kwargs."""
     return dict(temperature=0.0) if request.param == "greedy" \
         else dict(temperature=0.8, top_p=0.9)
+
+
+@pytest.fixture(params=["1dev", "tp4"], scope="session")
+def mesh(request):
+    """Tensor-parallel axis: None (legacy single-device layout) vs a
+    simulated 1x4 (data, model) mesh — params TP-sharded, KV sharded with
+    the heads, sampling replicated. Session-scoped: the Mesh object is
+    immutable and shared by every sharded cell."""
+    if request.param == "1dev":
+        return None
+    if jax.device_count() < 4:
+        pytest.skip("tensor-parallel cells need >= 4 devices; run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(1, 4)
 
 
 # -- builder fixtures ---------------------------------------------------------

@@ -1,12 +1,16 @@
 """Cross-backend parity matrix: dense vs paged x greedy vs seeded top-p x
-MHA vs GQA x speculative on/off.
+MHA vs GQA x speculative on/off x single-device vs tensor-parallel mesh.
 
 One reference stream per (model, sampling) cell — the dense backend's
-legacy host-driven path — and every other combination must reproduce it
-token-for-token: the cache layout, the fused device loop, and the
-draft-and-verify round are all optimizations of the SAME sampler, never
-samplers of their own. Fused/speculative runs must also complete without a
-single device->host logits transfer (the PR 2 ``TRANSFER_STATS`` hook).
+legacy host-driven path on a single device — and every other combination
+must reproduce it token-for-token: the cache layout, the fused device
+loop, the draft-and-verify round, AND the 4-way sharded execution are all
+optimizations of the SAME sampler, never samplers of their own. Sharded
+logits differ from single-device by ~1e-6 (all-reduce accumulation
+order), but sampling is replicated over full logits, so the argmax /
+seeded top-p decision — and therefore the token stream — is identical.
+Fused/speculative runs must also complete without a single device->host
+logits transfer (the PR 2 ``TRANSFER_STATS`` hook), sharded or not.
 """
 import pytest
 
@@ -18,16 +22,16 @@ _REF = {}        # (arch, sampling) -> legacy dense reference stream
 
 @pytest.mark.parametrize("spec", [0, 3], ids=["spec-off", "spec-on"])
 def test_backend_sampling_grouping_spec_matrix(grouped_lm, sampling, spec,
-                                               backend, engine_factory,
+                                               backend, mesh, engine_factory,
                                                request_factory, run_engine):
     cfg, model, params = grouped_lm
     kw = dict(KW)
     reqs = request_factory(cfg.vocab_size, n=3, plen=12, max_tokens=10,
                            **sampling)
 
-    # reference: dense backend, legacy host-driven decode (no fusion) —
-    # computed once per (model, sampling) cell and shared across the
-    # backend/spec axes
+    # reference: dense backend, legacy host-driven decode (no fusion),
+    # single device — computed once per (model, sampling) cell and shared
+    # across the backend/spec/mesh axes
     ref_key = (cfg.name, tuple(sorted(sampling.items())))
     if ref_key not in _REF:
         ref_eng = engine_factory(model, params, backend="slots",
@@ -38,12 +42,15 @@ def test_backend_sampling_grouping_spec_matrix(grouped_lm, sampling, spec,
     backends.reset_transfer_stats()
     eng = engine_factory(
         model, params, backend=backend, spec_tokens=spec,
-        draft=(model, params) if spec else None,
+        draft=(model, params) if spec else None, mesh=mesh,
         decode_steps_per_sync=1 if spec else 4, **kw)
     got, eng = run_engine(eng, reqs)
+    tp = "1dev" if mesh is None else f"tp{mesh.shape['model']}"
     assert got == ref, (
-        f"{backend} spec={spec} diverged from the dense legacy reference")
-    # the device-resident paths never ship logits to the host
+        f"{backend} spec={spec} {tp} diverged from the dense legacy "
+        f"single-device reference")
+    # the device-resident paths never ship logits to the host — sampling
+    # stays replicated on the mesh, so sharding must not break this
     assert backends.TRANSFER_STATS["decode_logits_transfers"] == 0
     assert backends.TRANSFER_STATS["decode_logits_bytes"] == 0
     if spec:
