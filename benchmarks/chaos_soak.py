@@ -1,0 +1,272 @@
+"""Chaos soak: the federated control plane under a seeded fault schedule.
+
+Two identical two-cluster deployments (retry budget + per-endpoint circuit
+breakers + brownout ladder enabled) are driven by the SAME deterministic
+workload of streaming interactive and batch requests. The reference run is
+fault-free; the chaos run adds a seeded schedule on top of light Poisson
+background faults:
+
+  * a NOISY endpoint crash while it is serving live streams (in-flight
+    futures error; the gateway fails over and RESUMES each stream on the
+    other cluster via restore — the client sees a gap, never a duplicated
+    or lost token);
+  * a SILENT crash of the failover target later on (futures dropped, no
+    error: only the deadline-derived TTFT timeout / stall timeout notice);
+  * Poisson heartbeat loss, beat-latency injection, instance kills and
+    node failures across the federation.
+
+Acceptance gates (run by CI in ``--smoke``; everything is virtual-clock
+deterministic):
+  * conservation — every admitted request resolves EXACTLY once: a
+    completion or a /v1 taxonomy error, one metrics record each;
+  * stream integrity — every surviving stream is token-identical to its
+    fault-free replay (same delivered count, assembler-verified contiguous
+    offsets, usage accounting agrees);
+  * failover resume — at least one mid-stream failover resumed with a
+    restored-token counter > 0 (the new engine restored, not regenerated);
+  * accounting — retries/timeouts/breaker-opens/budget-withdrawals add up
+    against the per-record attempt counts;
+  * bounded degradation — interactive p99 TTFT inflation under chaos stays
+    within the detection + failover budget.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.api import FirstClient
+from repro.api.errors import APIError
+from repro.core.gateway import GatewayConfig
+from repro.core.resilience import BreakerPolicy, BrownoutPolicy, RetryPolicy
+from repro.core.testbed import (LLAMA70B, build_system, default_deployment,
+                                warm_up)
+
+from benchmarks.common import csv_line, print_table
+
+MODEL = LLAMA70B.name
+SEED = 1234
+# detection + failover budget for the p99 TTFT gate: one deadline-derived
+# attempt timeout (<= 30s), backoff, and a worst-case cold start on the
+# failover target (~90s job startup + 70B weights at storage bandwidth)
+TTFT_INFLATION_BUDGET = 240.0
+
+
+def _mk_system():
+    deps = {"sophia": {MODEL: default_deployment(LLAMA70B)},
+            "polaris": {MODEL: default_deployment(LLAMA70B)}}
+    sysd = build_system(deps, gateway_config=GatewayConfig(
+        retry=RetryPolicy(max_attempts=3, attempt_timeout=300.0,
+                          stall_timeout=10.0),
+        breaker=BreakerPolicy(),
+        brownout=BrownoutPolicy(),
+        retry_budget_ratio=0.5,
+        retry_seed=SEED,
+    ))
+    warm_up(sysd, MODEL)                       # sophia hot
+    sysd.endpoints["polaris-ep"]._spawn_instance(MODEL)
+    sysd.loop.run_until(sysd.loop.now() + 120.0)   # polaris hot too
+    return sysd
+
+
+def _drive(n: int, spacing: float, chaos: bool):
+    """Submit ``n`` requests (every 5th is batch, the rest stream) at fixed
+    spacing; under ``chaos``, schedule the anchored crashes + the Poisson
+    background. Returns (system, futures, assemblers, plan)."""
+    sysd = _mk_system()
+    base = {k: getattr(sysd.metrics, k) for k in
+            ("retries", "timeouts", "breaker_opens")}
+    assert all(v == 0 for v in base.values())
+    client = FirstClient(sysd.gateway, sysd.token_for("bench"))
+    t0 = sysd.loop.now()
+    h_arr = n * spacing
+
+    plan = []
+    if chaos:
+        sysd.faults.rng.seed(SEED)
+        # anchors: a noisy crash of the serving endpoint mid-stream, then a
+        # silent crash of the failover target after the first recovers
+        noisy_t, noisy_dur = t0 + 0.25 * h_arr, 0.3 * h_arr
+        silent_t, silent_dur = t0 + 0.75 * h_arr, 0.4 * h_arr
+        sysd.faults.crash_endpoint(sysd.endpoints["sophia-ep"], noisy_t,
+                                   noisy_dur)
+        sysd.faults.crash_endpoint(sysd.endpoints["polaris-ep"], silent_t,
+                                   silent_dur, silent=True)
+        plan = sysd.faults.plan_chaos(
+            sysd.endpoints, sysd.schedulers, horizon=t0 + h_arr,
+            start=t0 + 5.0, hb_loss_rate=1 / 150.0, latency_rate=1 / 150.0,
+            instance_rate=1 / 120.0, node_rate=1 / 200.0, mean_outage=25.0)
+        plan = [{"kind": "crash", "target": "sophia-ep", "t": noisy_t,
+                 "duration": noisy_dur},
+                {"kind": "silent-crash", "target": "polaris-ep",
+                 "t": silent_t, "duration": silent_dur}] + plan
+
+    futs, asms = {}, {}
+    for i in range(n):
+        rid = f"c{i}"
+        arrival = t0 + i * spacing
+        batch = i % 5 == 4
+
+        def _go(rid=rid, arrival=arrival, batch=batch):
+            # ~40s streams: the anchored crashes land MID-STREAM; the
+            # TTFT deadline derives per-attempt timeouts that clear a
+            # worst-case cold start on the failover target
+            kw = dict(model=MODEL, prompt_tokens=64, max_tokens=1600,
+                      request_id=rid, deadline=arrival + 400.0)
+            if batch:
+                futs[rid] = client.chat(qos="batch", **kw)
+            else:
+                futs[rid], asms[rid] = client.stream(**kw)
+
+        sysd.loop.call_at(arrival, _go)
+    sysd.loop.run_until_idle()
+    return sysd, futs, asms, plan
+
+
+def main(fast: bool = False, smoke: bool = False) -> dict:
+    small = fast or smoke
+    n, spacing = (24, 4.0) if small else (80, 3.0)
+
+    ref_sys, ref_futs, ref_asms, _ = _drive(n, spacing, chaos=False)
+    assert all(f.error is None for f in ref_futs.values())
+    assert ref_sys.metrics.retries == 0        # fault-free: no retries
+    ref_toks = {rid: f.result().usage.completion_tokens
+                for rid, f in ref_futs.items()}
+    ref_recs = {r.request_id: r for r in ref_sys.metrics.records}
+
+    sysd, futs, asms, plan = _drive(n, spacing, chaos=True)
+    recs = {}
+    for r in sysd.metrics.records:
+        recs.setdefault(r.request_id, []).append(r)
+
+    failures = []
+
+    # gate 1: conservation — exactly-once resolution, taxonomy-only errors
+    survivors, errored = [], []
+    for rid, fut in futs.items():
+        if not fut.done():
+            failures.append(f"{rid} never resolved")
+            continue
+        if fut.error is None:
+            survivors.append(rid)
+        else:
+            errored.append(rid)
+            if not isinstance(fut.error, APIError):
+                failures.append(f"{rid} failed outside the /v1 taxonomy: "
+                                f"{fut.error!r}")
+        if len(recs.get(rid, [])) != 1:
+            failures.append(f"{rid} has {len(recs.get(rid, []))} metrics "
+                            "records (want exactly 1)")
+
+    # gate 2: stream integrity — survivors token-identical to the replay
+    for rid in survivors:
+        got = futs[rid].result().usage.completion_tokens
+        if got != ref_toks[rid]:
+            failures.append(f"{rid}: {got} tokens vs {ref_toks[rid]} in the "
+                            "fault-free replay")
+        if rid in asms:
+            a = asms[rid]
+            if not a.finished or a.n_tokens != got:
+                failures.append(f"{rid}: client assembled {a.n_tokens} "
+                                f"tokens, usage says {got}")
+
+    # gate 3: failover resume — restored, not regenerated
+    m = sysd.metrics
+    resumed_recs = [rs[0] for rs in recs.values()
+                    if rs and rs[0].resumed_tokens > 0]
+    if m.failovers_resumed < 1 or m.resumed_tokens <= 0:
+        failures.append("no mid-stream failover resumed "
+                        f"(failovers_resumed={m.failovers_resumed})")
+    if not any(r.attempts >= 2 for r in resumed_recs):
+        failures.append("no record shows a resumed retry (attempts >= 2)")
+    engine_resumed = sum(
+        inst.engine.total_resumed_tokens
+        for ep in sysd.endpoints.values()
+        for insts in ep.instances.values() for inst in insts)
+
+    # gate 4: accounting adds up
+    flat = [r for rs in recs.values() for r in rs]
+    if m.retries != sum(r.attempts - 1 for r in flat):
+        failures.append(f"retries {m.retries} != attempts-1 sum "
+                        f"{sum(r.attempts - 1 for r in flat)}")
+    if m.timeouts != sum(r.timeouts for r in flat):
+        failures.append(f"timeouts {m.timeouts} != per-record sum")
+    if m.breaker_opens != sum(b.opens
+                              for b in sysd.gateway.breakers.values()):
+        failures.append("breaker_opens disagrees with breaker state")
+    if sysd.gateway.retry_budget.withdrawals != m.retries:
+        failures.append(f"budget withdrawals "
+                        f"{sysd.gateway.retry_budget.withdrawals} != "
+                        f"retries {m.retries}")
+
+    # gate 5: bounded interactive p99 TTFT inflation
+    def p99_ttft(records, ids):
+        ts = sorted(records[rid].ttft if isinstance(records[rid],
+                                                    type(flat[0]))
+                    else records[rid][0].ttft
+                    for rid in ids if rid in records)
+        return ts[int(0.99 * (len(ts) - 1))] if ts else 0.0
+
+    stream_ok = [rid for rid in survivors if rid in asms]
+    ref_p99 = p99_ttft(ref_recs, [rid for rid in ref_toks if rid in ref_asms])
+    chaos_p99 = p99_ttft({k: v[0] for k, v in recs.items() if v}, stream_ok)
+    if chaos_p99 > ref_p99 + TTFT_INFLATION_BUDGET:
+        failures.append(f"interactive p99 TTFT {chaos_p99:.1f}s exceeds "
+                        f"fault-free {ref_p99:.1f}s + "
+                        f"{TTFT_INFLATION_BUDGET:.0f}s budget")
+
+    rows = [
+        ["requests", n, f"every {spacing:g}s, every 5th batch"],
+        ["faults injected", len(sysd.faults.injected),
+         f"{len(plan)} planned"],
+        ["survivors", len(survivors), f"{len(errored)} taxonomy errors"],
+        ["retries", m.retries, f"{m.timeouts} via timeout"],
+        ["failovers resumed", m.failovers_resumed,
+         f"{m.resumed_tokens} tokens carried over"],
+        ["breaker opens", m.breaker_opens,
+         f"{len(sysd.gateway.breakers)} endpoints tracked"],
+        ["brownout shed", m.brownout_shed,
+         sysd.gateway.brownout.snapshot()["step"]],
+        ["p99 TTFT", f"{chaos_p99:.1f}s",
+         f"vs {ref_p99:.1f}s fault-free"],
+        ["gates", "ok" if not failures else "FAILED", ""],
+    ]
+    print_table("chaos soak (DES, 2-cluster federation, Llama-70B)",
+                ["metric", "value", "note"], rows, widths=[18, 10, 34])
+
+    out = {
+        "requests": n,
+        "planned_faults": len(plan),
+        "injected_faults": len(sysd.faults.injected),
+        "survivors": len(survivors),
+        "taxonomy_errors": len(errored),
+        "retries": m.retries,
+        "timeouts": m.timeouts,
+        "failovers_resumed": m.failovers_resumed,
+        "resumed_tokens": m.resumed_tokens,
+        "engine_resumed_tokens": engine_resumed,
+        "breaker_opens": m.breaker_opens,
+        "brownout_shed": m.brownout_shed,
+        "p99_ttft_s": round(chaos_p99, 3),
+        "ref_p99_ttft_s": round(ref_p99, 3),
+        "gates_ok": not failures,
+        "gate_failures": failures,
+    }
+    csv_line("chaos_soak/gates", 0.0,
+             f"survivors={len(survivors)};resumed={m.failovers_resumed};"
+             f"p99_ttft={chaos_p99:.1f}")
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "benchmarks",
+                        f"chaos_soak{'.fast' if small else ''}.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.abspath(path)}")
+
+    if failures:
+        raise SystemExit("GATE FAILED:\n  " + "\n  ".join(failures))
+    print("chaos_soak gates passed")
+    return out
+
+
+if __name__ == "__main__":
+    main()

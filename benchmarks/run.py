@@ -16,6 +16,9 @@
   tp_decode     (real)  tensor-parallel fused decode on a simulated
                         4-shard mesh: token parity + throughput ratio,
                         JSON output
+  chaos_soak    (DES)   seeded fault schedule against the federation:
+                        exactly-once conservation, mid-stream failover
+                        resume, bounded TTFT inflation, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
@@ -29,10 +32,10 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (api_stream, autoscale, batch_mode, concurrency,
-                        decode_loop, engine_step, external_api, prefix_cache,
-                        qos_preemption, rate_sweep, roofline, spec_decode,
-                        tp_decode)
+from benchmarks import (api_stream, autoscale, batch_mode, chaos_soak,
+                        concurrency, decode_loop, engine_step, external_api,
+                        prefix_cache, qos_preemption, rate_sweep, roofline,
+                        spec_decode, tp_decode)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -47,13 +50,14 @@ SUITES = {
     "qos_preemption": qos_preemption.main,
     "api_stream": api_stream.main,
     "tp_decode": tp_decode.main,
+    "chaos_soak": chaos_soak.main,
     "roofline": roofline.main,
 }
 
 # real-engine suites with self-enforced acceptance thresholds: these are
 # the ones a perf-path regression breaks, so CI runs exactly these
 SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode",
-                "qos_preemption", "api_stream", "tp_decode"]
+                "qos_preemption", "api_stream", "tp_decode", "chaos_soak"]
 
 
 def main() -> None:
@@ -79,7 +83,7 @@ def main() -> None:
         kw = {"fast": args.fast or args.smoke}
         if args.smoke and name in ("decode_loop", "spec_decode",
                                    "qos_preemption", "api_stream",
-                                   "tp_decode"):
+                                   "tp_decode", "chaos_soak"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

@@ -76,6 +76,24 @@ class RequestCancelled(APIError):
     status = 499
 
 
+class DegradedError(OverloadedError):
+    """Shed by brownout admission control: the gateway is running in a
+    degraded mode (capacity loss or sustained overload) and is deliberately
+    rejecting lower-value work to protect interactive latency. A subclass
+    of ``overloaded`` so legacy handlers keep working; clients that switch
+    on the code can distinguish policy shedding from raw capacity
+    exhaustion."""
+    code = "degraded"
+    status = 503
+
+
+class UpstreamTimeoutError(APIError):
+    """Every dispatch attempt timed out (or the retry budget ran dry) before
+    an upstream endpoint produced a first token."""
+    code = "upstream_timeout"
+    status = 504
+
+
 def error_from_dict(d: dict) -> APIError:
     """Parse the wire shape back into the matching typed error."""
     err = d.get("error", d)
@@ -86,4 +104,6 @@ def error_from_dict(d: dict) -> APIError:
 
 _BY_CODE = {c.code: c for c in (InvalidRequestError, AuthenticationError,
                                 ModelNotFoundError, RateLimitError,
-                                OverloadedError, RequestCancelled, APIError)}
+                                OverloadedError, RequestCancelled,
+                                DegradedError, UpstreamTimeoutError,
+                                APIError)}

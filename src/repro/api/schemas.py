@@ -146,6 +146,9 @@ class _RequestBase:
     deadline: float | None = None         # absolute TTFT deadline
     request_id: str = ""
     prompt_hash: str | None = None        # explicit content hash override
+    resume_tokens: int = 0                # failover resume: tokens already
+    #                                       streamed to the client; the new
+    #                                       engine restores and continues
 
     endpoint = "completions"              # class attr, set per subclass
 
@@ -206,6 +209,8 @@ class _RequestBase:
             d["request_id"] = self.request_id
         if self.prompt_hash:
             d["prompt_hash"] = self.prompt_hash
+        if self.resume_tokens:
+            d["resume_tokens"] = self.resume_tokens
         return d
 
     @classmethod
@@ -229,6 +234,7 @@ class _RequestBase:
                       else float(d["deadline"])),
             request_id=str(d.get("request_id", "") or ""),
             prompt_hash=d.get("prompt_hash"),
+            resume_tokens=int(d.get("resume_tokens", 0) or 0),
         )
 
 

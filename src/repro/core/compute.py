@@ -85,7 +85,9 @@ class ModelDeployment:
 
 class ComputeEndpoint:
     def __init__(self, loop, endpoint_id: str, scheduler,
-                 deployments: dict[str, ModelDeployment]):
+                 deployments: dict[str, ModelDeployment],
+                 heartbeat_interval: float = 5.0,
+                 heartbeat_latency: float = 0.05):
         self.loop = loop
         self.endpoint_id = endpoint_id
         self.scheduler = scheduler
@@ -98,11 +100,20 @@ class ComputeEndpoint:
         self._autoscalers = {m: AutoScaler(loop, d.autoscale)
                              for m, d in deployments.items()}
         self.stats = {"tasks": 0, "restarts": 0, "requeued": 0,
-                      "aborted": 0}
+                      "aborted": 0, "crashes": 0, "recoveries": 0}
         self.register_function("generate", self._fn_generate)
         self.register_function("embed", self._fn_embed)
         self.register_function("abort", self._fn_abort)
         self.autoscale_interval = 5.0
+        # liveness: the endpoint process itself (not its instances). While
+        # down it stops heartbeating, rejects work and drops events.
+        self.up = True
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_latency = heartbeat_latency
+        self._monitor = None
+        self._hb_suppress_until = 0.0     # heartbeat-loss injection window
+        self._slow_until = 0.0            # latency injection window ...
+        self._slow_extra = 0.0            # ... and its added beat latency
         self._autoscale_tick()
 
     # -- security: pre-registered functions only ---------------------------------
@@ -111,6 +122,11 @@ class ComputeEndpoint:
 
     def execute(self, fn_name: str, payload: dict,
                 channel: StreamChannel | None = None) -> Future:
+        if not self.up:
+            fut = Future()
+            fut.set_error(ComputeError(
+                f"endpoint {self.endpoint_id} is unreachable"))
+            return fut
         fn = self._functions.get(fn_name)
         if fn is None:
             fut = Future()
@@ -119,6 +135,73 @@ class ComputeEndpoint:
             return fut
         self.stats["tasks"] += 1
         return fn(payload, channel)
+
+    # -- liveness: heartbeats + crash/recover ------------------------------------
+    def attach_monitor(self, monitor) -> None:
+        """Start emitting heartbeats to a ``HealthMonitor``. Each beat rides
+        to the monitor with ``heartbeat_latency`` (plus any injected extra),
+        so the monitor OBSERVES liveness and latency instead of being told."""
+        self._monitor = monitor
+        self._heartbeat_tick()
+
+    def _heartbeat_tick(self):
+        if self._monitor is None:
+            return
+        now = self.loop.now()
+        if self.up and now >= self._hb_suppress_until:
+            lat = self.heartbeat_latency
+            if now < self._slow_until:
+                lat += self._slow_extra
+            self.loop.call_after(lat, self._monitor.on_beat,
+                                 self.endpoint_id, now, daemon=True)
+        self.loop.call_after(self.heartbeat_interval, self._heartbeat_tick,
+                             daemon=True)
+
+    def suppress_heartbeats(self, duration: float) -> None:
+        """Heartbeat-loss injection: the endpoint stays up and keeps serving
+        but its beats vanish — the detector must (wrongly) mark it down and
+        recover it from the first beat after the window."""
+        self._hb_suppress_until = max(self._hb_suppress_until,
+                                      self.loop.now() + duration)
+
+    def inject_latency(self, duration: float, extra: float) -> None:
+        """Straggler injection: beats (and only beats — the detector's view)
+        arrive ``extra`` seconds late for ``duration``."""
+        self._slow_until = max(self._slow_until, self.loop.now() + duration)
+        self._slow_extra = extra
+
+    def crash(self, duration: float | None = None, silent: bool = False):
+        """The endpoint process dies: heartbeats stop, new work is rejected,
+        every in-flight task errors with a retryable ``ComputeError`` (or is
+        silently dropped when ``silent`` — the caller's per-attempt timeout
+        must catch that), instances are torn down WITHOUT local requeue (the
+        gateway's retry layer re-routes), and their nodes are released.
+        ``duration`` schedules ``recover`` automatically."""
+        if not self.up:
+            return
+        self.up = False
+        self.stats["crashes"] += 1
+        inflight = list(self._inflight.values())
+        self._inflight.clear()
+        for model in self.instances:
+            for inst in list(self.instances[model]):
+                if inst.alive:
+                    inst.fail()      # requeue no-ops: _inflight is cleared
+            self.instances[model] = []
+        if not silent:
+            for _model, sreq, fut, _chan in inflight:
+                if not fut.done():
+                    fut.set_error(ComputeError(
+                        f"endpoint {self.endpoint_id} crashed with "
+                        f"{sreq.request_id} in flight"))
+        if duration is not None:
+            self.loop.call_after(duration, self.recover, daemon=True)
+
+    def recover(self):
+        if self.up:
+            return
+        self.up = True
+        self.stats["recoveries"] += 1
 
     # -- status (for /jobs and federation) -----------------------------------------
     def model_states(self, model: str) -> list[str]:
@@ -148,7 +231,9 @@ class ComputeEndpoint:
                           qos=req.qos,
                           priority=req.priority,
                           deadline=req.deadline,
-                          stream=bool(req.stream))
+                          stream=bool(req.stream),
+                          resume_tokens=int(getattr(req, "resume_tokens",
+                                                    0) or 0))
         self._inflight[sreq.request_id] = (model, sreq, fut, channel)
         self._dispatch(model, sreq, fut, channel)
         return fut
@@ -296,8 +381,14 @@ class ComputeEndpoint:
 
     def _on_instance_failed(self, inst: ModelInstance, inflight):
         """Process-management restart (paper §3.2.2 fault tolerance): drop the
-        failed instance and resubmit its in-flight requests; inference tasks
-        are idempotent so re-execution is safe."""
+        failed instance and resubmit its in-flight requests; tasks resume
+        from their last produced token (``SimRequest.resume_tokens``, stamped
+        by ``SimEngine.halt``) so re-execution never regenerates — and never
+        re-delivers — tokens the client already received."""
+        if not self.up:              # endpoint-level crash: no local restart
+            self.instances[inst.model_name] = \
+                [i for i in self.instances[inst.model_name] if i is not inst]
+            return
         self.stats["restarts"] += 1
         self._on_instance_gone(inst, inflight)
 

@@ -36,6 +36,7 @@ class FederationRouter:
         self.endpoints = endpoints
         self.registry = registry
         self._healthy: dict[str, bool] = {e: True for e in endpoints}
+        self._slow: dict[str, bool] = {}
         # (model, endpoint, rule, detail) — detail holds the tie-break
         # inputs (queue depth / free nodes) and the request's QoS class
         self.decisions: list[tuple[str, str, str, str]] = []
@@ -43,6 +44,20 @@ class FederationRouter:
     # -- health feed (from HealthMonitor) ----------------------------------------
     def set_healthy(self, endpoint_id: str, healthy: bool):
         self._healthy[endpoint_id] = healthy
+
+    def set_slow(self, endpoint_id: str, slow: bool):
+        """Straggler flag (beat-latency EWMA over threshold): slow endpoints
+        stay eligible but lose every tie-break, so traffic drains to prompt
+        replicas whenever one exists."""
+        self._slow[endpoint_id] = slow
+
+    def healthy_fraction(self) -> float:
+        """Share of registered endpoints currently believed healthy — one of
+        the gateway's brownout pressure signals."""
+        if not self.endpoints:
+            return 1.0
+        return sum(1 for e in self.endpoints
+                   if self._healthy.get(e, False)) / len(self.endpoints)
 
     def _candidates(self, model: str) -> list[str]:
         eps = [e for e in self.registry.get(model, ())
@@ -52,19 +67,24 @@ class FederationRouter:
             raise FederationError(f"no healthy endpoint hosts {model!r}")
         return eps
 
-    def _load_key(self, e: str) -> tuple[int, int]:
+    def _load_key(self, e: str) -> tuple[bool, int, int]:
         sched = self.endpoints[e].scheduler
-        return (sched.queue_depth(), -sched.available_nodes())
+        return (self._slow.get(e, False), sched.queue_depth(),
+                -sched.available_nodes())
 
     def _pick(self, cands: list[str]) -> tuple[str, str]:
-        """Tie-break within a rule: shallowest scheduler queue, then most
-        free nodes, then registry order (strict < keeps the scan stable)."""
+        """Tie-break within a rule: non-straggler first, then shallowest
+        scheduler queue, then most free nodes, then registry order (strict
+        < keeps the scan stable)."""
         best = cands[0]
         for e in cands[1:]:
             if self._load_key(e) < self._load_key(best):
                 best = e
-        qd, neg_free = self._load_key(best)
-        return best, f"queue_depth={qd},free_nodes={-neg_free}"
+        slow, qd, neg_free = self._load_key(best)
+        detail = f"queue_depth={qd},free_nodes={-neg_free}"
+        if slow:
+            detail += ",slow=1"
+        return best, detail
 
     def _record(self, model: str, ep: str, rule: str, detail: str,
                 qos: str | None) -> str:
@@ -111,7 +131,7 @@ class FederationRouter:
             for e in eps:
                 if e in self.endpoints:
                     ep = self.endpoints[e]
-                    qd, neg_free = self._load_key(e)
+                    _slow, qd, neg_free = self._load_key(e)
                     for s in ep.model_states(model):
                         entries.append({"endpoint": e, "state": s,
                                         "healthy": self._healthy.get(e,
@@ -119,6 +139,17 @@ class FederationRouter:
                                         "queue_depth": qd,
                                         "free_nodes": -neg_free,
                                         "load": ep.load_for(model)})
-            out[model] = entries or [{"endpoint": eps[0] if eps else "?",
-                                      "state": "cold"}]
+            if not entries:
+                # cold model: same shape as live entries (consumers index
+                # these keys unconditionally), zeros where nothing runs
+                e0 = eps[0] if eps else "?"
+                if e0 in self.endpoints:
+                    _slow, qd, neg_free = self._load_key(e0)
+                else:
+                    qd, neg_free = 0, 0
+                entries = [{"endpoint": e0, "state": "cold",
+                            "healthy": self._healthy.get(e0, False),
+                            "queue_depth": qd, "free_nodes": -neg_free,
+                            "load": 0}]
+            out[model] = entries
         return out

@@ -36,17 +36,22 @@ optimizations are config toggles so benchmarks can ablate them:
 from __future__ import annotations
 
 import itertools
+import random
 from collections import deque
 from dataclasses import dataclass, replace
 
 from repro.api import schemas
-from repro.api.errors import (APIError, AuthenticationError,
+from repro.api.errors import (APIError, AuthenticationError, DegradedError,
                               InvalidRequestError, ModelNotFoundError,
                               OverloadedError, RateLimitError,
-                              RequestCancelled)
+                              RequestCancelled, UpstreamTimeoutError)
 from repro.core.auth import AccessPolicy, AuthError, CachingAuthClient
 from repro.core.clock import Future
+from repro.core.compute import ComputeError
 from repro.core.metrics import MetricsLog
+from repro.core.resilience import (BreakerPolicy, BrownoutController,
+                                   BrownoutPolicy, CircuitBreaker,
+                                   RetryBudget, RetryPolicy)
 
 VALID_ENDPOINTS = schemas.VALID_ENDPOINTS
 
@@ -70,6 +75,17 @@ class GatewayConfig:
     # endpoint; the duplicates race to the FIRST TOKEN and the loser is
     # cancelled (its engine slot frees instead of decoding to completion)
     hedge_after: float | None = None
+    # resilience layer (all off by default; see repro.core.resilience):
+    # retry = per-request retry budget with backoff+jitter and per-attempt
+    # timeouts; a failed/timed-out attempt re-dispatches elsewhere, and a
+    # stream that already delivered tokens RESUMES (resume_tokens) instead
+    # of regenerating. breaker = per-endpoint circuit breakers feeding
+    # select_endpoint exclusions. brownout = graceful degradation ladder.
+    retry: RetryPolicy | None = None
+    breaker: BreakerPolicy | None = None
+    brownout: BrownoutPolicy | None = None
+    retry_budget_ratio: float = 0.2    # global deposit per admitted request
+    retry_seed: int = 0                # jitter rng (deterministic replays)
 
 
 class RateLimiter:
@@ -84,7 +100,9 @@ class RateLimiter:
 
     def acquire(self, user: str) -> tuple[bool, float]:
         """(allowed, retry_after): on denial, retry_after is the time until
-        the bucket accrues the next whole request token."""
+        the bucket accrues the next whole request token. A zero rate is a
+        valid drain-only config (burst requests, then nothing): once the
+        burst is spent the bucket never refills, so retry_after is inf."""
         if self.rate == float("inf"):
             return True, 0.0
         now = self.loop.now()
@@ -93,7 +111,9 @@ class RateLimiter:
         if tokens < 1.0:
             self._state[user] = (tokens, now)
             self.denied += 1
-            return False, (1.0 - tokens) / self.rate
+            wait = float("inf") if self.rate <= 0.0 \
+                else (1.0 - tokens) / self.rate
+            return False, wait
         self._state[user] = (tokens - 1.0, now)
         return True, 0.0
 
@@ -214,6 +234,59 @@ class InferenceGateway:
         self.hedges = 0
         # request_id -> in-flight race state (for cancel / hedging)
         self._active: dict[str, dict] = {}
+        # resilience layer (see repro.core.resilience)
+        self.retry_policy = self.config.retry
+        self.retry_budget = (RetryBudget(self.config.retry_budget_ratio)
+                             if self.config.retry is not None else None)
+        self.breakers: dict[str, CircuitBreaker] = {}
+        self._retry_rng = random.Random(self.config.retry_seed)
+        self.brownout = (BrownoutController(self.config.brownout)
+                         if self.config.brownout is not None else None)
+        if self.brownout is not None:
+            self._brownout_tick()
+
+    # -- resilience helpers ------------------------------------------------------
+    def _breaker(self, endpoint_id: str) -> CircuitBreaker | None:
+        if self.config.breaker is None:
+            return None
+        b = self.breakers.get(endpoint_id)
+        if b is None:
+            b = self.breakers[endpoint_id] = \
+                CircuitBreaker(endpoint_id, self.config.breaker)
+        return b
+
+    def _breaker_failure(self, endpoint_id: str, timeout: bool = False):
+        b = self._breaker(endpoint_id)
+        if b is None:
+            return
+        before = b.opens
+        b.on_failure(self.loop.now(), timeout=timeout)
+        if b.opens > before:
+            self.metrics.on_breaker_open()
+
+    def _breaker_success(self, endpoint_id: str):
+        b = self._breaker(endpoint_id)
+        if b is not None:
+            b.on_success(self.loop.now())
+
+    def _broken_endpoints(self) -> set:
+        """Endpoints currently excluded by their breaker (side-effect-free:
+        half-open probe slots are only consumed at dispatch)."""
+        now = self.loop.now()
+        return {e for e, b in self.breakers.items() if b.blocked(now)}
+
+    def _brownout_tick(self):
+        """Evaluate the degradation ladder: pressure is the max of the
+        worker-pool backlog fraction and the unhealthy-capacity fraction."""
+        backlog = len(self.pool.queue) / max(self.pool.workers * 4, 1)
+        healthy = 1.0
+        hf = getattr(self.router, "healthy_fraction", None)
+        if callable(hf):
+            healthy = hf()
+        pressure = max(min(backlog, 1.0), 1.0 - healthy)
+        self.brownout.observe(pressure, self.loop.now())
+        self.loop.call_after(self.brownout.policy.eval_interval,
+                             self._brownout_tick, daemon=True)
 
     # -- public API -------------------------------------------------------------
     def submit(self, token: str, request, on_delta=None) -> Future:
@@ -245,6 +318,30 @@ class InferenceGateway:
                 "endpoint"))
             return fut
 
+        if self.brownout is not None:
+            # graceful degradation, declared steps: batch QoS is shed first
+            # (level >= 1); at the deepest level admission tightens so work
+            # cannot queue into a system that has lost its capacity
+            if self.brownout.shed_batch() and request.qos == "batch":
+                self.brownout.shed += 1
+                self.metrics.on_brownout_shed()
+                self.metrics.on_reject(DegradedError.code)
+                fut.set_error(DegradedError(
+                    f"gateway degraded (level {self.brownout.level}): "
+                    "batch requests are shed until capacity recovers",
+                    retry_after=self.brownout.policy.dwell))
+                return fut
+            cap = self.brownout.admission_cap(self.config.workers)
+            if cap is not None and len(self.pool.queue) >= cap:
+                self.brownout.shed += 1
+                self.metrics.on_brownout_shed()
+                self.metrics.on_reject(DegradedError.code)
+                fut.set_error(DegradedError(
+                    f"gateway degraded (level {self.brownout.level}): "
+                    f"admission tightened to {cap} waiting requests",
+                    retry_after=self.brownout.policy.dwell))
+                return fut
+
         def handler(release):
             self._handle(release, token, request, fut, arrival, on_delta)
 
@@ -262,7 +359,10 @@ class InferenceGateway:
         if state is None or state["done"]:
             return False
         state["done"] = True
-        for ep, task_rid in state["dispatched"]:
+        if state.get("timer") is not None:
+            self.loop.cancel(state["timer"])
+            state["timer"] = None
+        for ep, task_rid, _attempt in state["dispatched"]:
             self.compute.cancel(ep, task_rid)
         self.metrics.on_finish(request_id, self.loop.now(), ok=False,
                                error="client disconnected",
@@ -277,7 +377,11 @@ class InferenceGateway:
         rid = request.request_id
         state = {"done": False, "winner": None, "dispatched": [],
                  "out_idx": 0, "delivered": 0, "fut": fut,
-                 "release": release}
+                 "release": release,
+                 # retry layer: the CURRENT attempt number gates every
+                 # event/completion callback, so a superseded attempt's
+                 # stragglers can never corrupt the client stream
+                 "attempt": 0, "tried": set(), "timer": None}
 
         def finish_ok(resp, cached=False):
             self._active.pop(rid, None)
@@ -304,6 +408,11 @@ class InferenceGateway:
             fut.set_result(resp)
 
         def finish_err(err):
+            if not isinstance(err, APIError):
+                # taxonomy guarantee: a raw upstream failure (e.g. a
+                # ComputeError from a crashed endpoint, retries exhausted)
+                # still surfaces as a typed /v1 error
+                err = APIError(f"upstream failure: {err}")
             self._active.pop(rid, None)
             code = err.code if isinstance(err, APIError) else ""
             self.metrics.on_finish(rid, self.loop.now(), ok=False,
@@ -336,20 +445,103 @@ class InferenceGateway:
             # the live back-channel carries first-token events whenever a
             # race needs deciding (hedging) or the client asked to stream
             want_events = req.stream or bool(self.config.hedge_after)
+            policy = self.retry_policy
+            if policy is not None:
+                self.retry_budget.on_request()
 
-            def on_first_event(ep):
-                def cb(_task_rid, t_engine):
-                    if state["done"]:
+            def _clear_timer():
+                if state["timer"] is not None:
+                    self.loop.cancel(state["timer"])
+                    state["timer"] = None
+
+            def _arm_timer(ep, task_rid, attempt, timeout):
+                """Per-attempt progress bound: before the first token it is
+                the (deadline-derived) TTFT timeout; once frames flow it is
+                re-armed per frame with the stall bound. Firing kills the
+                attempt and retries — the only recovery path from a SILENT
+                endpoint death. (For non-streaming requests without a live
+                channel the bound covers the whole attempt.)"""
+                _clear_timer()
+                if timeout is None:
+                    return
+
+                def fire():
+                    state["timer"] = None
+                    if state["done"] or attempt != state["attempt"]:
+                        return
+                    self.metrics.on_timeout(rid)
+                    self._breaker_failure(ep, timeout=True)
+                    self.compute.cancel(ep, task_rid)
+                    retry_or_fail(UpstreamTimeoutError(
+                        f"attempt {attempt + 1} on {ep} made no progress "
+                        f"within {timeout:g}s"))
+
+                state["timer"] = self.loop.call_after(timeout, fire)
+
+            def _rearm_stall(ep, task_rid, attempt):
+                if policy is None:
+                    return
+                _arm_timer(ep, task_rid, attempt, policy.stall_timeout)
+
+            def _effective_attempts() -> int:
+                if policy is None:
+                    return 1
+                n = policy.max_attempts
+                if self.brownout is not None:
+                    n = self.brownout.effective_attempts(n)
+                return n
+
+            def retry_or_fail(err):
+                """A dispatch attempt failed (task error, timeout, or no
+                placeable endpoint): back off and re-dispatch if the
+                per-request allowance AND the global retry budget permit,
+                else surface the error."""
+                if state["done"]:
+                    return
+                if policy is not None \
+                        and state["attempt"] + 1 < _effective_attempts() \
+                        and self.retry_budget.try_withdraw():
+                    old = state["attempt"]
+                    for ep_, trid_, att_ in state["dispatched"]:
+                        if att_ == old:     # stale racers (e.g. a hedge)
+                            self.compute.cancel(ep_, trid_)
+                    resumed = state["delivered"]
+                    state["attempt"] = attempt = old + 1
+                    state["winner"] = None
+                    _clear_timer()
+                    self.metrics.on_retry(rid, resumed_tokens=resumed)
+                    delay = policy.backoff(attempt - 1, self._retry_rng)
+
+                    def _go():
+                        if state["done"] or attempt != state["attempt"]:
+                            return
+                        dispatch(exclude=frozenset(state["tried"])
+                                 | self._broken_endpoints(),
+                                 attempt=attempt)
+
+                    self.loop.call_after(delay, _go)
+                    return
+                state["done"] = True
+                _clear_timer()
+                finish_err(err)
+
+            def on_first_event(ep, attempt):
+                def cb(task_rid, t_engine):
+                    if state["done"] or attempt != state["attempt"]:
                         return
                     if state["winner"] is None:
                         state["winner"] = ep
                         self.metrics.on_first_token(rid, self.loop.now())
                         self._cancel_losers(state, ep)
                     # losing racers are cancelled; their events are dropped
+                    if ep == state["winner"]:
+                        _rearm_stall(ep, task_rid, attempt)
                 return cb
 
-            def on_delta_event(ep):
+            def on_delta_event(ep, attempt):
                 def cb(frame):
+                    if attempt != state["attempt"]:
+                        return              # a superseded attempt's frame
                     if state["done"] and not frame.finished:
                         return
                     if state["winner"] is None:
@@ -357,6 +549,8 @@ class InferenceGateway:
                         self._cancel_losers(state, ep)
                     if ep != state["winner"]:
                         return
+                    if not frame.finished:
+                        _rearm_stall(ep, frame.id, attempt)
                     if frame.n_tokens:
                         # dedupe by stream offset: a fault-tolerance
                         # requeue restarts generation from token 0, so
@@ -384,37 +578,65 @@ class InferenceGateway:
                         on_delta(frame)
                 return cb
 
-            def dispatch(exclude=()):
+            def dispatch(exclude=(), attempt=0, hedge=False):
                 try:
                     ep = self.router.select_endpoint(model, exclude=exclude,
                                                      qos=req.qos)
                 except Exception as e:           # noqa: BLE001
                     # FederationError already carries the 'overloaded' code
-                    if not exclude:
-                        finish_err(e)
+                    if hedge:
+                        return None          # a failed hedge changes nothing
+                    retry_or_fail(e)         # capacity may come back
                     return None
+                b = self._breaker(ep)
+                if b is not None:
+                    b.allow(self.loop.now())   # consume the half-open probe
                 self.metrics.on_dispatch(rid, ep, self.loop.now())
-                wire_req = req if not exclude else \
-                    replace(req, request_id=f"{rid}~hedge")
+                task_rid = rid if not (hedge or attempt) else \
+                    (f"{rid}~hedge" if hedge else f"{rid}~r{attempt}")
+                wire_req = req if task_rid == rid \
+                    else replace(req, request_id=task_rid)
+                if attempt and state["delivered"]:
+                    # mid-stream failover: the new engine RESUMES from what
+                    # the client already holds (restore via prefix cache)
+                    # instead of regenerating — the client sees a gap,
+                    # never a duplicated or lost token
+                    wire_req = replace(wire_req,
+                                       resume_tokens=state["delivered"])
                 task = self.compute.submit(
                     ep, fn, schemas.to_wire(wire_req),
-                    on_first_token=(on_first_event(ep) if want_events
-                                    else None),
-                    on_delta=(on_delta_event(ep) if req.stream else None))
-                state["dispatched"].append((ep, wire_req.request_id))
+                    on_first_token=(on_first_event(ep, attempt)
+                                    if want_events else None),
+                    on_delta=(on_delta_event(ep, attempt) if req.stream
+                              else None))
+                state["dispatched"].append((ep, task_rid, attempt))
+                state["tried"].add(ep)
+                if policy is not None and not hedge:
+                    _arm_timer(ep, task_rid, attempt,
+                               policy.timeout_for(attempt, self.loop.now(),
+                                                  req.deadline))
 
                 def on_task(f):
                     if state["done"]:
                         return              # a racer already finished
+                    if attempt != state["attempt"]:
+                        return              # attempt superseded by a retry
                     if state["winner"] is not None \
                             and ep != state["winner"]:
                         return              # the loser was cancelled
                     if f.error is not None:
                         if isinstance(f.error, RequestCancelled):
-                            return
+                            return          # our own abort (timeout/hedge)
+                        self._breaker_failure(ep)
+                        if isinstance(f.error, (ComputeError,
+                                                OverloadedError)):
+                            return retry_or_fail(f.error)
                         state["done"] = True
+                        _clear_timer()
                         return finish_err(f.error)
                     state["done"] = True
+                    _clear_timer()
+                    self._breaker_success(ep)
                     res = f.result()
                     if not req.stream and not want_events:
                         # no live channel: fall back to the engine-side
@@ -422,7 +644,10 @@ class InferenceGateway:
                         self.metrics.on_first_token(
                             rid, res.get("first_token_time", self.loop.now()))
                     resp = schemas.response_from_result(req, res, arrival)
-                    self.cache.put(ck, resp)
+                    if state["attempt"] == 0:
+                        # resumed responses are stitched across engines;
+                        # only clean single-attempt outputs enter the cache
+                        self.cache.put(ck, resp)
                     finish_ok(resp)
 
                 if self.config.poll_interval > 0:
@@ -431,15 +656,20 @@ class InferenceGateway:
                     task.add_done_callback(on_task)
                 return ep
 
-            first_ep = dispatch()
+            first_ep = dispatch(exclude=self._broken_endpoints())
             # Optimization 3: async workers release after dispatch
             if not self.config.blocking_workers:
                 release()
             if first_ep is not None and self.config.hedge_after:
                 def maybe_hedge():
-                    if not state["done"] and state["winner"] is None:
-                        self.hedges += 1
-                        dispatch(exclude=(first_ep,))
+                    if state["done"] or state["winner"] is not None \
+                            or state["attempt"] != 0:
+                        return
+                    if self.brownout is not None \
+                            and self.brownout.suppress_hedges():
+                        return              # degraded: hedges are shed
+                    self.hedges += 1
+                    dispatch(exclude=(first_ep,), hedge=True)
 
                 self.loop.call_after(self.config.hedge_after,
                                      maybe_hedge, daemon=True)
@@ -447,10 +677,11 @@ class InferenceGateway:
         self.auth.validate(token, after_auth)
 
     def _cancel_losers(self, state: dict, winner_ep):
-        """First-token-wins: abort every dispatched duplicate that is not
-        the winner, freeing its engine slot mid-decode."""
-        for ep, task_rid in state["dispatched"]:
-            if ep != winner_ep:
+        """First-token-wins: abort every dispatched duplicate of the CURRENT
+        attempt that is not the winner, freeing its engine slot mid-decode.
+        (Prior attempts' tasks were already cancelled when they retried.)"""
+        for ep, task_rid, attempt in state["dispatched"]:
+            if attempt == state["attempt"] and ep != winner_ep:
                 self.compute.cancel(ep, task_rid)
                 self.metrics.on_hedge_cancelled()
 
@@ -522,7 +753,24 @@ class InferenceGateway:
             "rejections": dict(self.metrics.rejections),
             "hedges": self.hedges,
             "hedges_cancelled": self.metrics.hedges_cancelled,
+            # resilience layer
+            "degradation_level": (self.brownout.level
+                                  if self.brownout is not None else 0),
+            "retries": self.metrics.retries,
+            "timeouts": self.metrics.timeouts,
+            "failovers_resumed": self.metrics.failovers_resumed,
+            "resumed_tokens": self.metrics.resumed_tokens,
+            "breaker_opens": self.metrics.breaker_opens,
         }
+        if self.brownout is not None:
+            out["_gateway"]["degradation"] = self.brownout.snapshot()
+        if self.breakers:
+            now = self.loop.now()
+            out["_gateway"]["breakers"] = {
+                e: b.snapshot(now) for e, b in self.breakers.items()}
+        if self.retry_budget is not None:
+            out["_gateway"]["retry_budget"] = round(
+                self.retry_budget.balance, 3)
         return out
 
     # -- helpers ---------------------------------------------------------------

@@ -27,6 +27,10 @@ class SimRequest:
     priority: int = 0                 # intra-class (lower = more urgent)
     deadline: float | None = None     # absolute TTFT deadline (loop time)
     stream: bool = False              # emit per-sync token deltas
+    resume_tokens: int = 0            # failover resume: tokens ALREADY
+    #                                   generated elsewhere — the engine
+    #                                   restores (prompt+resume) via chunked
+    #                                   prefill and continues from there
 
 
 class InstanceState(str, Enum):
@@ -126,6 +130,7 @@ class SimEngine:
         self.total_finished = 0
         self.total_cached_tokens = 0
         self.total_restore_cached_tokens = 0
+        self.total_resumed_tokens = 0
         self.total_preemptions = 0
         self.total_aborted = 0
         self.halted = False
@@ -182,11 +187,17 @@ class SimEngine:
 
     def halt(self) -> list[SimRequest]:
         """Stop serving (failure/release); returns in-flight requests for
-        requeue."""
+        requeue.  Requests that already produced tokens are stamped with
+        ``resume_tokens`` so the next engine RESUMES them (restore prefill
+        of prompt+generated) instead of regenerating from scratch — the
+        stream offsets stay contiguous and the client never re-receives a
+        token."""
         self.halted = True
         if self._step_ev:
             self.loop.cancel(self._step_ev)
             self._step_ev = None
+        for r in self.running + self._preempted_q:
+            r["req"].resume_tokens = r["produced"]
         inflight = [r["req"] for r in self.running] + \
             [r["req"] for r in self._preempted_q] + \
             [q[0] for q in self.queue]
@@ -274,6 +285,28 @@ class SimEngine:
             e["restore_cached"] = e.get("restore_cached", 0) \
                 + max(held - restore, 0)
             self.running.append(e)
+        elif self.queue[idx][0].resume_tokens > 0:
+            sreq, on_first, on_done, on_delta = self.queue.pop(idx)
+            # failover resume: this request already streamed tokens on an
+            # engine that died. Restore = chunked-prefill recompute of
+            # (prompt + generated) through the prefix cache — the
+            # cross-engine analogue of a preemption restore — then decode
+            # continues from resume_tokens, so delta offsets stay
+            # contiguous with what the client already holds.
+            resume = min(sreq.resume_tokens, sreq.max_tokens)
+            held = sreq.prompt_tokens + resume
+            restore = restore_tokens(held, self.restore_hit_rate)
+            cached = max(held - restore, 0)
+            self.total_restore_cached_tokens += cached
+            self.total_resumed_tokens += resume
+            self.running.append({"req": sreq,
+                                 "produced": resume,
+                                 "prefill_left": restore, "chunks": 0,
+                                 "cached": 0, "restore_cached": cached,
+                                 "resumed": resume,
+                                 "seq": self._seq_of.pop(sreq.request_id),
+                                 "on_first": on_first, "on_done": on_done,
+                                 "on_delta": on_delta})
         else:
             sreq, on_first, on_done, on_delta = self.queue.pop(idx)
             # warm-cache discount: matched prefix tokens cost no compute;
@@ -377,6 +410,7 @@ class SimEngine:
                                   "cached_prompt_tokens": r["cached"],
                                   "restore_cached_tokens":
                                       r.get("restore_cached", 0),
+                                  "resumed_tokens": r.get("resumed", 0),
                                   "preemptions": r.get("preemptions", 0),
                                   "prefill_chunks": r["chunks"],
                                   "finish_time": now})
@@ -557,5 +591,9 @@ class ModelInstance:
         self._cancel_idle()
         inflight = self.engine.halt() + [p[0] for p in self._pending]
         self._pending.clear()
+        # a dead serving process must not pin its nodes: release the batch
+        # job (no-op when the job itself died — release() ignores ended/
+        # failed jobs) so replacement capacity can start
+        self.scheduler.release(self.job)
         if self.on_failed:
             self.on_failed(self, inflight)

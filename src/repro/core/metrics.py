@@ -29,6 +29,10 @@ class RequestRecord:
     streamed: bool = False
     stream_frames: int = 0
     itl: list = field(default_factory=list)
+    # resilience accounting (gateway retry layer)
+    attempts: int = 1               # dispatch attempts (1 = no retries)
+    timeouts: int = 0               # attempts killed by the TTFT/stall bound
+    resumed_tokens: int = 0         # tokens carried across a failover resume
 
     @property
     def e2e(self) -> float:
@@ -52,6 +56,14 @@ class MetricsLog:
         # hedged duplicates cancelled after losing the first-token race
         # (instead of running to completion and burning engine slots)
         self.hedges_cancelled = 0
+        # resilience counters (gateway retry/breaker/brownout layer); the
+        # chaos gates cross-check these against per-record accounting
+        self.retries = 0                # re-dispatches after a failure
+        self.timeouts = 0               # attempts killed by a timeout
+        self.failovers_resumed = 0      # retries that resumed mid-stream
+        self.resumed_tokens = 0         # tokens carried across failovers
+        self.breaker_opens = 0          # circuit-breaker trips
+        self.brownout_shed = 0          # requests shed by degradation
 
     # -- lifecycle hooks ------------------------------------------------------
     def on_arrival(self, request_id, user, model, t, prompt_tokens=0):
@@ -91,6 +103,31 @@ class MetricsLog:
 
     def on_hedge_cancelled(self):
         self.hedges_cancelled += 1
+
+    # -- resilience hooks -------------------------------------------------------
+    def on_retry(self, request_id, resumed_tokens: int = 0):
+        """A failed/timed-out attempt is being re-dispatched; nonzero
+        ``resumed_tokens`` means the retry resumes a live stream."""
+        self.retries += 1
+        if resumed_tokens > 0:
+            self.failovers_resumed += 1
+            self.resumed_tokens += resumed_tokens
+        r = self._open.get(request_id)
+        if r:
+            r.attempts += 1
+            r.resumed_tokens = max(r.resumed_tokens, resumed_tokens)
+
+    def on_timeout(self, request_id):
+        self.timeouts += 1
+        r = self._open.get(request_id)
+        if r:
+            r.timeouts += 1
+
+    def on_breaker_open(self):
+        self.breaker_opens += 1
+
+    def on_brownout_shed(self):
+        self.brownout_shed += 1
 
     def on_finish(self, request_id, t, output_tokens=0, ok=True, error="",
                   cached=False, cached_prompt_tokens=0, prefill_chunks=0,
@@ -148,7 +185,12 @@ class MetricsLog:
         streamed = [r for r in recs if r.streamed and r.first_token]
         out = {"streamed": sum(1 for r in recs if r.streamed),
                "hedges_cancelled": self.hedges_cancelled,
-               "rejections": dict(self.rejections)}
+               "rejections": dict(self.rejections),
+               "retries": self.retries,
+               "timeouts": self.timeouts,
+               "failovers_resumed": self.failovers_resumed,
+               "resumed_tokens": self.resumed_tokens,
+               "breaker_opens": self.breaker_opens}
         if streamed:
             out["stream_median_ttft_s"] = statistics.median(
                 r.ttft for r in streamed)

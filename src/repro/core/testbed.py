@@ -150,6 +150,8 @@ def build_system(
                                config=gateway_config or GatewayConfig(),
                                metrics=metrics, batch=batch)
     health = HealthMonitor(loop, router)
+    for ep in endpoints.values():
+        health.watch(ep)          # endpoints emit real heartbeats
     faults = FailureInjector(loop)
     return System(loop=loop, auth_service=auth_service, auth=auth,
                   schedulers=schedulers, endpoints=endpoints, compute=compute,

@@ -266,6 +266,30 @@ class ContinuousBatchingEngine:
             self._delta_subs[req.request_id] = on_delta
         self.policy.add(req)
 
+    def resume_request(self, req: InferenceRequest, generated_tokens,
+                       on_delta=None):
+        """Cross-engine failover resume: admit ``req`` with
+        ``generated_tokens`` already produced (and streamed to the client)
+        by an engine that died. Reuses the preemption-restore path
+        verbatim: the emitted stream (prompt + generated) is re-ingested by
+        chunked prefill through the prefix cache, sampling state resumes at
+        ``n_gen = len(generated)``, and stream frames continue at offset
+        ``len(generated)`` — so the stitched output is token-identical to
+        an uninterrupted run under greedy AND seeded sampling."""
+        if not generated_tokens:
+            return self.add_request(req, on_delta)
+        m = RequestMetrics(arrival_time=req.arrival_time or self.clock.now(),
+                           queued_time=self.clock.now())
+        req._metrics = m
+        if on_delta is not None:
+            self._delta_subs[req.request_id] = on_delta
+        run = _Running(req=req, metrics=m,
+                       output_tokens=list(generated_tokens))
+        self.stats["resumed_tokens"] = \
+            self.stats.get("resumed_tokens", 0) + len(generated_tokens)
+        self._preempted[req.request_id] = run
+        self.policy.add(req)
+
     def abort(self, request_id: str) -> bool:
         self._delta_subs.pop(request_id, None)
         req = self.policy.remove(request_id)
