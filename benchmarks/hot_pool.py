@@ -1,0 +1,245 @@
+"""Hot-node pools + disaggregated prefill/decode serving on a replay trace.
+
+Part 1 — hot pool vs cold-start-on-demand. The SAME bursty diurnal trace
+(Poisson bursts separated by dead gaps, the arrival shape of §3.2's
+interactive science workloads) is replayed against two single-cluster
+policies:
+
+  * cold  — no floor, short idle timeout: the instance releases in every
+    gap and each burst front pays the full cold start (job startup +
+    weight load), exactly the on-demand behavior hot pools exist to fix;
+  * hot   — ``min_hot=1`` + a keepalive that outlives the gaps: the pool
+    pins one warm instance through the lulls.
+
+Acceptance gates (CI runs this in ``--smoke``; all virtual-clock
+deterministic):
+  * interactive p99 TTFT improves >= 5x under the hot pool;
+  * the hot pool's node-hours stay <= 1.2x the demand-matched cold
+    baseline (warm capacity is cheap on this trace, not free);
+  * every request completes in both runs.
+
+Part 2 — disaggregated roles. A prefill-heavy pool on one cluster hands
+every sequence to a decode-heavy pool on a second cluster after the first
+token (KV transfer priced by ``InstanceCost.handoff_time``; admission on
+the decode side goes through the restore machinery). Gates: token
+conservation — every request still produces exactly ``max_tokens``, the
+two engines' output counters partition the total, handoffs out == in with
+zero fallbacks, and the decode engine restored one carried token per
+request.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.scheduler import JobState
+from repro.core.testbed import LLAMA8B, build_system, default_deployment
+from repro.data.workload import make_bursty_workload
+
+from benchmarks.common import csv_line, print_table
+
+MODEL = LLAMA8B.name
+SEED = 42
+GAP = 50.0          # s of silence between bursts
+RATE = 4.0          # req/s inside a burst
+LEAD = 40.0         # s before the first burst (lets the pool pre-warm)
+IDLE_TIMEOUT = 35.0  # cold policy: release after 35 s idle (< GAP)
+KEEPALIVE = 300.0   # hot policy: outlives every gap (> GAP)
+
+TTFT_SPEEDUP_GATE = 5.0
+NODE_HOURS_GATE = 1.2
+
+
+def _mk(policy: str):
+    kw = dict(max_slots=48, max_instances=1, storage_bw=2e9)
+    if policy == "cold":
+        dep = default_deployment(LLAMA8B, idle_timeout=IDLE_TIMEOUT, **kw)
+    else:
+        dep = default_deployment(LLAMA8B, min_hot=1, keepalive=KEEPALIVE,
+                                 **kw)
+    return build_system({"sophia": {MODEL: dep}})
+
+
+def _replay(policy: str, wl):
+    sysd = _mk(policy)
+    token = sysd.token_for("bench")
+    futs = {}
+    for w in wl:
+        sysd.loop.call_at(w.arrival + LEAD, lambda w=w: futs.__setitem__(
+            w.request_id, sysd.gateway.submit(token, {
+                "request_id": w.request_id, "model": MODEL,
+                "prompt_tokens": w.prompt_tokens,
+                "max_tokens": w.max_tokens})))
+    sysd.loop.run_until_idle()
+    t_end = sysd.loop.now()
+
+    errors = sum(1 for f in futs.values() if f.error is not None)
+    ttfts = sorted(r.ttft for r in sysd.metrics.records)
+    p99 = ttfts[int(0.99 * (len(ttfts) - 1))] if ttfts else 0.0
+
+    # node-hours over the trace window [first arrival, last completion]:
+    # the pool's pre-warm lead is provisioning, not steady-state serving
+    node_s = 0.0
+    for sched in sysd.schedulers.values():
+        for job in sched.jobs.values():
+            if job.state == JobState.QUEUED:
+                continue
+            end = (job.end_time
+                   if job.state in (JobState.ENDED, JobState.FAILED)
+                   else t_end)
+            node_s += max(0.0, min(end, t_end)
+                          - max(job.start_time, LEAD)) * job.num_nodes
+    spawns = sum(1 for sched in sysd.schedulers.values()
+                 for job in sched.jobs.values()
+                 if job.state != JobState.QUEUED)
+    return {"n": len(futs), "errors": errors, "p99_ttft_s": p99,
+            "median_ttft_s": ttfts[len(ttfts) // 2] if ttfts else 0.0,
+            "node_hours": node_s / 3600.0, "spawns": spawns,
+            "horizon_s": t_end}
+
+
+def _disagg(n: int):
+    """Prefill-heavy pool on sophia, decode-heavy on polaris; every
+    sequence moves after its first token."""
+    kw = dict(max_slots=48, storage_bw=40e9, min_hot=1, keepalive=1e9)
+    deps = {
+        "sophia": {MODEL: default_deployment(LLAMA8B, role="prefill-heavy",
+                                             **kw)},
+        "polaris": {MODEL: default_deployment(LLAMA8B, role="decode-heavy",
+                                              **kw)},
+    }
+    sysd = build_system(deps)
+    sysd.loop.run_until(60.0)          # both pool floors warm
+    token = sysd.token_for("bench")
+    wl = make_bursty_workload(n_bursts=1, burst_n=n, rate=RATE, gap=0.0,
+                              seed=SEED, prefix="d")
+    futs = {}
+    for w in wl:
+        sysd.loop.call_at(w.arrival + sysd.loop.now(),
+                          lambda w=w: futs.__setitem__(
+                              w.request_id, sysd.gateway.submit(token, {
+                                  "request_id": w.request_id,
+                                  "model": MODEL,
+                                  "prompt_tokens": w.prompt_tokens,
+                                  "max_tokens": w.max_tokens})))
+    sysd.loop.run_until_idle()
+
+    want = {w.request_id: w.max_tokens for w in wl}
+    ep_p = sysd.endpoints["sophia-ep"]
+    ep_d = sysd.endpoints["polaris-ep"]
+    eng_p = ep_p.instances[MODEL][0].engine
+    eng_d = ep_d.instances[MODEL][0].engine
+    short = sum(1 for rid, f in futs.items()
+                if f.error is not None
+                or f.result()["output_tokens"] != want[rid])
+    return {
+        "n": n,
+        "short_or_errored": short,
+        "total_tokens_wanted": sum(want.values()),
+        "prefill_tokens": eng_p.total_output_tokens,
+        "decode_tokens": eng_d.total_output_tokens,
+        "handoffs_out": ep_p.stats["handoffs_out"],
+        "handoffs_in": ep_d.stats["handoffs_in"],
+        "handoff_fallbacks": ep_p.stats["handoff_fallbacks"],
+        "decode_restored_tokens": eng_d.total_resumed_tokens,
+    }
+
+
+def main(fast: bool = False, smoke: bool = False) -> dict:
+    small = fast or smoke
+    n_bursts, burst_n, n_disagg = (3, 24, 16) if small else (6, 80, 60)
+    wl = make_bursty_workload(n_bursts=n_bursts, burst_n=burst_n, rate=RATE,
+                              gap=GAP, seed=SEED)
+
+    cold = _replay("cold", wl)
+    hot = _replay("hot", wl)
+    dis = _disagg(n_disagg)
+
+    ttft_ratio = cold["p99_ttft_s"] / max(hot["p99_ttft_s"], 1e-9)
+    node_ratio = hot["node_hours"] / max(cold["node_hours"], 1e-9)
+
+    failures = []
+    if cold["errors"] or hot["errors"]:
+        failures.append(f"errors: cold={cold['errors']} hot={hot['errors']}")
+    if ttft_ratio < TTFT_SPEEDUP_GATE:
+        failures.append(
+            f"p99 TTFT speedup {ttft_ratio:.1f}x < {TTFT_SPEEDUP_GATE}x "
+            f"(cold {cold['p99_ttft_s']:.2f}s, hot {hot['p99_ttft_s']:.2f}s)")
+    if node_ratio > NODE_HOURS_GATE:
+        failures.append(
+            f"hot pool node-hours {node_ratio:.2f}x cold baseline "
+            f"(> {NODE_HOURS_GATE}x)")
+    if dis["short_or_errored"]:
+        failures.append(f"{dis['short_or_errored']} disaggregated requests "
+                        "lost tokens or errored")
+    if dis["prefill_tokens"] != dis["n"]:
+        failures.append(f"prefill engine produced {dis['prefill_tokens']} "
+                        f"tokens, want one first token x {dis['n']}")
+    if dis["prefill_tokens"] + dis["decode_tokens"] \
+            != dis["total_tokens_wanted"]:
+        failures.append(
+            f"engines emitted {dis['prefill_tokens'] + dis['decode_tokens']}"
+            f" tokens, trace wants {dis['total_tokens_wanted']} "
+            "(handoff lost or duplicated tokens)")
+    if not (dis["handoffs_out"] == dis["handoffs_in"] == dis["n"]):
+        failures.append(f"handoffs out={dis['handoffs_out']} "
+                        f"in={dis['handoffs_in']}, want {dis['n']} each")
+    if dis["handoff_fallbacks"]:
+        failures.append(f"{dis['handoff_fallbacks']} handoffs fell back "
+                        "to local decode with a healthy decode pool up")
+    if dis["decode_restored_tokens"] != dis["n"]:
+        failures.append(f"decode engine restored "
+                        f"{dis['decode_restored_tokens']} carried tokens, "
+                        f"want {dis['n']}")
+
+    rows = [
+        ["trace", f"{n_bursts}x{burst_n} reqs",
+         f"{RATE:g}/s bursts, {GAP:g}s gaps"],
+        ["cold p99 TTFT", f"{cold['p99_ttft_s']:.2f}s",
+         f"{cold['spawns']} spawns (one per burst)"],
+        ["hot p99 TTFT", f"{hot['p99_ttft_s']:.2f}s",
+         f"{hot['spawns']} spawn (pool floor)"],
+        ["TTFT speedup", f"{ttft_ratio:.1f}x",
+         f">= {TTFT_SPEEDUP_GATE:g}x gate"],
+        ["node-hours", f"{hot['node_hours']:.3f}",
+         f"{node_ratio:.2f}x cold ({cold['node_hours']:.3f}), "
+         f"<= {NODE_HOURS_GATE:g}x gate"],
+        ["handoffs", f"{dis['handoffs_out']}/{dis['n']}",
+         f"{dis['handoff_fallbacks']} fallbacks"],
+        ["token split", f"{dis['prefill_tokens']}+{dis['decode_tokens']}",
+         f"= {dis['total_tokens_wanted']} wanted"],
+        ["gates", "ok" if not failures else "FAILED", ""],
+    ]
+    print_table("hot pools + disaggregated prefill/decode (DES, Llama-8B)",
+                ["metric", "value", "note"], rows, widths=[16, 14, 38])
+
+    out = {
+        "trace": {"n_bursts": n_bursts, "burst_n": burst_n, "rate": RATE,
+                  "gap_s": GAP, "seed": SEED},
+        "cold": cold,
+        "hot": hot,
+        "ttft_p99_speedup": round(ttft_ratio, 3),
+        "node_hours_ratio": round(node_ratio, 3),
+        "disaggregated": dis,
+        "gates_ok": not failures,
+        "gate_failures": failures,
+    }
+    csv_line("hot_pool/gates", 0.0,
+             f"ttft_speedup={ttft_ratio:.1f}x;node_hours={node_ratio:.2f}x;"
+             f"handoffs={dis['handoffs_out']}")
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "benchmarks",
+                        f"hot_pool{'.fast' if small else ''}.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.abspath(path)}")
+
+    if failures:
+        raise SystemExit("GATE FAILED:\n  " + "\n  ".join(failures))
+    print("hot_pool gates passed")
+    return out
+
+
+if __name__ == "__main__":
+    main()

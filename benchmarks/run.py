@@ -19,6 +19,9 @@
   chaos_soak    (DES)   seeded fault schedule against the federation:
                         exactly-once conservation, mid-stream failover
                         resume, bounded TTFT inflation, JSON output
+  hot_pool      (DES)   hot-node pool vs cold-start-on-demand on a bursty
+                        replay trace, plus disaggregated prefill/decode
+                        handoff token conservation, JSON output
   roofline      §Roofline  terms from results/dryrun/*.json
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
@@ -34,8 +37,8 @@ import traceback
 
 from benchmarks import (api_stream, autoscale, batch_mode, chaos_soak,
                         concurrency, decode_loop, engine_step, external_api,
-                        prefix_cache, qos_preemption, rate_sweep, roofline,
-                        spec_decode, tp_decode)
+                        hot_pool, prefix_cache, qos_preemption, rate_sweep,
+                        roofline, spec_decode, tp_decode)
 
 SUITES = {
     "rate_sweep": rate_sweep.main,
@@ -51,13 +54,15 @@ SUITES = {
     "api_stream": api_stream.main,
     "tp_decode": tp_decode.main,
     "chaos_soak": chaos_soak.main,
+    "hot_pool": hot_pool.main,
     "roofline": roofline.main,
 }
 
 # real-engine suites with self-enforced acceptance thresholds: these are
 # the ones a perf-path regression breaks, so CI runs exactly these
 SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode",
-                "qos_preemption", "api_stream", "tp_decode", "chaos_soak"]
+                "qos_preemption", "api_stream", "tp_decode", "chaos_soak",
+                "hot_pool"]
 
 
 def main() -> None:
@@ -83,7 +88,7 @@ def main() -> None:
         kw = {"fast": args.fast or args.smoke}
         if args.smoke and name in ("decode_loop", "spec_decode",
                                    "qos_preemption", "api_stream",
-                                   "tp_decode", "chaos_soak"):
+                                   "tp_decode", "chaos_soak", "hot_pool"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

@@ -61,6 +61,10 @@ class ModelDeployment:
     """Admin configuration of one model on one endpoint."""
     model: str
     cost: InstanceCost
+    # disaggregated serving role: 'prefill-heavy' instances ingest prompts
+    # and emit first tokens only, then hand sequences to a 'decode-heavy'
+    # (or unified) pool elsewhere in the federation; 'unified' does both
+    role: str = "unified"
     nodes_per_instance: int = 1
     model_shards: int = 1                  # TP width per instance (must match
     #                                        cost.model_shards; the real
@@ -92,15 +96,25 @@ class ComputeEndpoint:
         self.endpoint_id = endpoint_id
         self.scheduler = scheduler
         self.deployments = deployments
+        for m, d in deployments.items():
+            if d.role not in ("unified", "prefill-heavy", "decode-heavy"):
+                raise ValueError(f"unknown role {d.role!r} for {m!r} "
+                                 f"on {endpoint_id}")
         self.instances: dict[str, list[ModelInstance]] = \
             {m: [] for m in deployments}
         self._functions: dict[str, object] = {}
         # request_id -> (model, sreq, fut, channel) while a task is here
         self._inflight: dict[str, tuple] = {}
+        # request_id -> decode endpoint, after a prefill->decode handoff
+        # moved the task there (aborts forward through this)
+        self._handoffs: dict[str, ComputeEndpoint] = {}
+        self._router = None           # federation, for handoff targeting
         self._autoscalers = {m: AutoScaler(loop, d.autoscale)
                              for m, d in deployments.items()}
         self.stats = {"tasks": 0, "restarts": 0, "requeued": 0,
-                      "aborted": 0, "crashes": 0, "recoveries": 0}
+                      "aborted": 0, "crashes": 0, "recoveries": 0,
+                      "scale_ins": 0, "handoffs_out": 0, "handoffs_in": 0,
+                      "handoff_fallbacks": 0}
         self.register_function("generate", self._fn_generate)
         self.register_function("embed", self._fn_embed)
         self.register_function("abort", self._fn_abort)
@@ -188,6 +202,9 @@ class ComputeEndpoint:
                 if inst.alive:
                     inst.fail()      # requeue no-ops: _inflight is cleared
             self.instances[model] = []
+        # requests already handed to a decode endpoint keep running there;
+        # only the abort-forwarding breadcrumbs die with this process
+        self._handoffs.clear()
         if not silent:
             for _model, sreq, fut, _chan in inflight:
                 if not fut.done():
@@ -240,7 +257,16 @@ class ComputeEndpoint:
 
     def _fn_embed(self, payload: dict,
                   channel: StreamChannel | None = None) -> Future:
-        # embeddings are one-step tasks: model as generate with 1 output token
+        """Embeddings are one-step tasks: modeled as generate with exactly
+        ONE output token. The clamp lives at the pre-registered function
+        (not only in schema validation) so any wire payload routed to
+        'embed' is costed and slotted as an embedding, never as a full
+        generation."""
+        payload = dict(payload)
+        if isinstance(payload.get("data"), dict):   # version-tagged envelope
+            payload["data"] = dict(payload["data"], max_tokens=1)
+        else:                                       # legacy untagged dict
+            payload["max_tokens"] = 1
         return self._fn_generate(payload, channel)
 
     def _fn_abort(self, payload: dict,
@@ -250,7 +276,12 @@ class ComputeEndpoint:
         fut = Future()
         rid = payload.get("request_id", "")
         entry = self._inflight.pop(rid, None)
-        if entry is None:                    # already finished (or unknown)
+        if entry is None:
+            # the sequence may have moved to a decode endpoint: forward
+            target = self._handoffs.pop(rid, None)
+            if target is not None and target.up:
+                return target.execute("abort", payload)
+            # already finished (or unknown)
             fut.set_result({"request_id": rid, "aborted": False})
             return fut
         model, sreq, task_fut, _chan = entry
@@ -266,19 +297,34 @@ class ComputeEndpoint:
 
     # -- instance management ------------------------------------------------------
     def _autoscale_tick(self):
-        """Periodic demand check: scaling must also react while requests sit
-        queued on saturated/loading instances (not only at dispatch time)."""
+        """Periodic policy pass: hot-pool floor maintenance, demand
+        scale-up, keepalive scale-in, then queue balancing. Scaling must
+        also react while requests sit queued on saturated/loading
+        instances (not only at dispatch time)."""
         for model in self.deployments:
+            scaler = self._autoscalers[model]
+            dep = self.deployments[model]
+            # pinned floor: keep min_hot instances provisioned even with
+            # zero demand, as far as the cluster's free nodes allow
+            deficit = scaler.pool_deficit(
+                model, self._alive_instances(model),
+                self.scheduler.available_nodes(), dep.nodes_per_instance)
+            for _ in range(deficit):
+                self._spawn_instance(model)
             alive = self._alive_instances(model)
             if not alive:
                 continue
-            scaler = self._autoscalers[model]
-            dep = self.deployments[model]
             if scaler.should_scale_up(model, alive,
                                       self.scheduler.available_nodes(),
                                       dep.nodes_per_instance):
                 self._spawn_instance(model)
-                scaler.record_scale(model, len(self._alive_instances(model)))
+            victim = scaler.pick_scale_in(model,
+                                          self._alive_instances(model))
+            if victim is not None:
+                scaler.record_scale_in(
+                    model, len(self._alive_instances(model)) - 1)
+                self.stats["scale_ins"] += 1
+                victim.release()       # idle: nothing to requeue
             self._balance_queues(model)
         self.loop.call_after(self.autoscale_interval, self._autoscale_tick,
                              daemon=True)
@@ -297,8 +343,10 @@ class ComputeEndpoint:
             return
         entries = []
         for i in hot:
-            entries.extend(i.engine.queue)
-            i.engine.queue.clear()
+            # take_queued pops the robbed engine's _seq_of alongside its
+            # queue (the receiver's submit re-issues arrival orders) —
+            # clearing the queue alone leaks one map entry per steal
+            entries.extend(i.engine.take_queued())
         for e in entries:               # round-robin by current effective load
             target = min(hot, key=lambda i: i.engine.load)
             target.engine.submit(*e)
@@ -308,11 +356,20 @@ class ComputeEndpoint:
 
     def _spawn_instance(self, model: str) -> ModelInstance:
         dep = self.deployments[model]
+        # with a pool keepalive configured, the POOL owns scale-in: the
+        # instance's own flat idle timer is disabled
+        idle_timeout = (None if dep.autoscale.keepalive is not None
+                        else dep.idle_timeout)
+        on_handoff = None
+        if dep.role == "prefill-heavy":
+            def on_handoff(sreq, produced, _m=model):
+                return self._start_handoff(_m, sreq, produced)
         inst = ModelInstance(
             self.loop, model, dep.cost, self.scheduler,
             num_nodes=dep.nodes_per_instance, max_slots=dep.max_slots,
-            idle_timeout=dep.idle_timeout, walltime=dep.walltime,
+            idle_timeout=idle_timeout, walltime=dep.walltime,
             result_cpu=dep.result_cpu,
+            role=dep.role, on_handoff=on_handoff,
             prefix_cache_hit_rate=dep.prefix_cache_hit_rate,
             chunked_prefill_budget=dep.chunked_prefill_budget,
             decode_steps_per_sync=dep.decode_steps_per_sync,
@@ -326,6 +383,12 @@ class ComputeEndpoint:
             on_failed=self._on_instance_failed,
             on_hot=self._on_instance_hot)
         self.instances[model].append(inst)
+        # every spawn path stamps the scale: the cooldown window starts at
+        # the spawn (cold starts in _dispatch included, which otherwise
+        # let the next tick double-spawn behind them) and scale_events
+        # records the first instance too
+        self._autoscalers[model].record_scale(
+            model, len(self._alive_instances(model)))
         return inst
 
     def _dispatch(self, model: str, sreq: SimRequest, fut: Future,
@@ -345,19 +408,23 @@ class ComputeEndpoint:
                                       self.scheduler.available_nodes(),
                                       dep.nodes_per_instance):
                 self._spawn_instance(model)
-                scaler.record_scale(model, len(self._alive_instances(model)))
 
         first_holder = {}
 
         def on_first(t):
             first_holder["t"] = t
+            sreq.first_token_at = t
             if channel is not None:
                 channel.first_token(sreq.request_id, t)
 
         def on_done(result):
             self._inflight.pop(sreq.request_id, None)
             result = dict(result)
-            result["first_token_time"] = first_holder.get("t", result["finish_time"])
+            # a resumed/handed-off request never re-fires on_first here:
+            # its TTFT is the original first token the source stamped
+            ft = first_holder.get("t", sreq.first_token_at)
+            result["first_token_time"] = (ft if ft is not None
+                                          else result["finish_time"])
             result["endpoint"] = self.endpoint_id
             if channel is not None and sreq.stream:
                 channel.delta(sreq.request_id, 0, result["finish_time"],
@@ -372,6 +439,79 @@ class ComputeEndpoint:
                 channel.delta(sreq.request_id, n, t, offset=offset)
 
         inst.submit(sreq, on_first, on_done, on_delta)
+
+    # -- disaggregated prefill/decode handoff ---------------------------------------
+    def attach_federation(self, router) -> None:
+        """Give the endpoint the federation router so prefill-role engines
+        can target decode pools across clusters (testbed wiring)."""
+        self._router = router
+
+    def _start_handoff(self, model: str, sreq: SimRequest,
+                       produced: int) -> bool:
+        """Engine callback at the prefill/decode boundary: the sequence's
+        prompt is ingested and its first token(s) streamed. Pick a
+        decode-capable endpoint and move the sequence there, charging the
+        KV-transfer hop. Returns False to keep decoding locally (unified
+        fallback) when nothing can take it."""
+        if self._router is None or sreq.request_id not in self._inflight:
+            return False
+        target = self._pick_decode_target(model, sreq)
+        if target is None:
+            self.stats["handoff_fallbacks"] += 1
+            sreq.no_handoff = True
+            return False
+        self.stats["handoffs_out"] += 1
+        dep = self.deployments[model]
+        # the sequence's KV pages cross the inter-instance link; the
+        # receiver then charges its restore prefill via resume admission.
+        # The entry stays in _inflight during the hop so aborts/crashes
+        # in the window resolve here and the delivery becomes a no-op.
+        hop = dep.cost.handoff_time(sreq.prompt_tokens + produced)
+        self.loop.call_after(hop, self._deliver_handoff, model, sreq, target)
+        return True
+
+    def _pick_decode_target(self, model: str, sreq: SimRequest):
+        try:
+            ep_id = self._router.select_endpoint(
+                model, exclude=(self.endpoint_id,), qos=sreq.qos,
+                role="decode")
+        except Exception:              # noqa: BLE001 — no healthy target
+            return None
+        target = self._router.endpoints.get(ep_id)
+        if target is None or target is self or not target.up:
+            return None
+        return target
+
+    def _deliver_handoff(self, model: str, sreq: SimRequest, target):
+        entry = self._inflight.pop(sreq.request_id, None)
+        if entry is None:              # aborted / crashed mid-transfer
+            return
+        _, _, fut, channel = entry
+        if fut.done():
+            return
+        if not target.up:
+            # the decode target died mid-hop: the KV is still here, so
+            # decode locally; no_handoff stops the engine from re-offering
+            sreq.no_handoff = True
+            self.stats["handoff_fallbacks"] += 1
+            self._inflight[sreq.request_id] = entry
+            self._dispatch(model, sreq, fut, channel)
+            return
+        self._handoffs[sreq.request_id] = target
+        fut.add_done_callback(
+            lambda _f, rid=sreq.request_id: self._handoffs.pop(rid, None))
+        target.receive_handoff(model, sreq, fut, channel)
+
+    def receive_handoff(self, model: str, sreq: SimRequest, fut: Future,
+                        channel: StreamChannel | None) -> None:
+        """Decode side of a prefill->decode handoff: adopt the in-flight
+        entry (this endpoint's crash/requeue machinery covers it now) and
+        admit via the resume path — a restore prefill of (prompt +
+        produced), then decode continues from ``resume_tokens`` with
+        contiguous stream offsets."""
+        self.stats["handoffs_in"] += 1
+        self._inflight[sreq.request_id] = (model, sreq, fut, channel)
+        self._dispatch(model, sreq, fut, channel)
 
     # -- fault tolerance ------------------------------------------------------------
     def _on_instance_gone(self, inst: ModelInstance, inflight):

@@ -67,6 +67,44 @@ class FederationRouter:
             raise FederationError(f"no healthy endpoint hosts {model!r}")
         return eps
 
+    # -- disaggregated roles ------------------------------------------------------
+    def _role_of(self, e: str, model: str) -> str:
+        dep = getattr(self.endpoints[e], "deployments", {}).get(model)
+        return getattr(dep, "role", "unified")
+
+    def _filter_roles(self, eps: list[str], model: str,
+                      role: str | None) -> list[str]:
+        """Role filter for disaggregated pools: fresh dispatches
+        (role=None) need prefill capability, so decode-heavy endpoints are
+        skipped while an alternative exists; handoffs (role='decode')
+        prefer a dedicated decode pool, fall back to unified, and avoid
+        prefill-heavy endpoints. With every candidate filtered out the
+        original list survives — serving degraded beats not serving."""
+        if role == "decode":
+            capable = [e for e in eps
+                       if self._role_of(e, model) != "prefill-heavy"]
+            dedicated = [e for e in capable
+                         if self._role_of(e, model) == "decode-heavy"]
+            return dedicated or capable or eps
+        capable = [e for e in eps
+                   if self._role_of(e, model) != "decode-heavy"]
+        return capable or eps
+
+    def _warm(self, e: str, model: str) -> bool:
+        return "running" in self.endpoints[e].model_states(model)
+
+    def _cold_penalty(self, e: str, model: str) -> float:
+        """Cold-start latency a request pays when routed to ``e`` with no
+        hot instance: the scheduler's job startup plus the weight load
+        (``cost.load_time``). Zero for a warm pool."""
+        if self._warm(e, model):
+            return 0.0
+        ep = self.endpoints[e]
+        dep = getattr(ep, "deployments", {}).get(model)
+        cost = getattr(dep, "cost", None)
+        load = cost.load_time() if cost is not None else 0.0
+        return getattr(ep.scheduler, "startup_delay", 0.0) + load
+
     def _load_key(self, e: str) -> tuple[bool, int, int]:
         sched = self.endpoints[e].scheduler
         return (self._slow.get(e, False), sched.queue_depth(),
@@ -87,27 +125,46 @@ class FederationRouter:
         return best, detail
 
     def _record(self, model: str, ep: str, rule: str, detail: str,
-                qos: str | None) -> str:
+                qos: str | None, role: str | None = None) -> str:
+        parts = [detail] if detail else []
         if qos:
-            detail = f"{detail},qos={qos}" if detail else f"qos={qos}"
-        self.decisions.append((model, ep, rule, detail))
+            parts.append(f"qos={qos}")
+        if role:
+            parts.append(f"role={role}")
+        self.decisions.append((model, ep, rule, ",".join(parts)))
         return ep
 
     # -- the §4.5 algorithm ---------------------------------------------------------
     def select_endpoint(self, model: str, exclude=(),
-                        qos: str | None = None) -> str:
+                        qos: str | None = None,
+                        role: str | None = None) -> str:
+        """``role``: None for a fresh dispatch (needs prefill capability),
+        'decode' when placing the decode leg of a prefill->decode
+        handoff."""
         eps = self._candidates(model)
         if exclude:
             eps = [e for e in eps if e not in exclude] or eps
+        eps = self._filter_roles(eps, model, role)
         # rule 1: model already running or queued somewhere; ties broken
         # by cluster load (queue depth, then free nodes)
         active = [e for e in eps
                   if any(s in ("running", "starting", "queued")
                          for s in self.endpoints[e].model_states(model))]
         if active:
+            if qos == "interactive":
+                # TTFT-sensitive traffic prefers a WARM pool: a merely
+                # starting/queued instance still costs the cold-start tail
+                warm = [e for e in active if self._warm(e, model)]
+                if warm and len(warm) < len(active):
+                    pick, detail = self._pick(warm)
+                    return self._record(model, pick, "active-instance",
+                                        detail + ",warm=1", qos, role)
             pick, detail = self._pick(active)
-            return self._record(model, pick, "active-instance", detail, qos)
-        # rule 2: a cluster with available nodes, same tie-break
+            return self._record(model, pick, "active-instance", detail,
+                                qos, role)
+        # rule 2: a cluster with available nodes, same tie-break —
+        # interactive requests first narrow to the cheapest cold start
+        # (startup + cost.load_time), which every rule-2 placement pays
         free = []
         for e in eps:
             ep = self.endpoints[e]
@@ -115,10 +172,18 @@ class FederationRouter:
             if ep.scheduler.available_nodes() >= need:
                 free.append(e)
         if free:
+            if qos == "interactive" and len(free) > 1:
+                best = min(self._cold_penalty(e, model) for e in free)
+                free = [e for e in free
+                        if self._cold_penalty(e, model) <= best + 1e-9]
             pick, detail = self._pick(free)
-            return self._record(model, pick, "free-nodes", detail, qos)
+            if qos == "interactive":
+                detail += (f",cold_penalty="
+                           f"{self._cold_penalty(pick, model):.0f}s")
+            return self._record(model, pick, "free-nodes", detail, qos,
+                                role)
         # rule 3: first configured endpoint
-        return self._record(model, eps[0], "configured-order", "", qos)
+        return self._record(model, eps[0], "configured-order", "", qos, role)
 
     # -- /jobs view across the federation -----------------------------------------
     def jobs_status(self) -> dict:

@@ -31,6 +31,14 @@ class SimRequest:
     #                                   generated elsewhere — the engine
     #                                   restores (prompt+resume) via chunked
     #                                   prefill and continues from there
+    no_handoff: bool = False          # pin to the current engine: a prefill-
+    #                                   role engine decodes it locally instead
+    #                                   of handing off (fallback after a
+    #                                   failed/unroutable handoff)
+    first_token_at: float | None = None   # stamped by the first dispatch; a
+    #                                   resumed/handed-off request's TTFT is
+    #                                   its ORIGINAL first token, not the
+    #                                   resume point
 
 
 class InstanceState(str, Enum):
@@ -95,12 +103,22 @@ class SimEngine:
                  draft_cost: InstanceCost | None = None,
                  scheduling_policy: str = "fcfs",
                  enable_preemption: bool = False,
-                 restore_hit_rate: float = 1.0):
+                 restore_hit_rate: float = 1.0,
+                 role: str = "unified", on_handoff=None):
         self.loop = loop
         self.cost = cost
         self.max_slots = max_slots
         self.on_idle = on_idle
         self.on_busy = on_busy
+        if role not in ("unified", "prefill-heavy", "decode-heavy"):
+            raise ValueError(f"unknown engine role {role!r}")
+        # disaggregated serving: a prefill-heavy engine ingests prompts,
+        # emits each sequence's FIRST token, then offers the sequence to
+        # ``on_handoff(sreq, produced) -> bool`` — True moves it to a
+        # decode-role engine (via the resume/restore machinery), False
+        # keeps decoding here (unified fallback)
+        self.role = role
+        self.on_handoff = on_handoff
         self.prefix_cache_hit_rate = prefix_cache_hit_rate
         self.chunked_prefill_budget = chunked_prefill_budget
         self.decode_steps_per_sync = max(int(decode_steps_per_sync), 1)
@@ -133,6 +151,7 @@ class SimEngine:
         self.total_resumed_tokens = 0
         self.total_preemptions = 0
         self.total_aborted = 0
+        self.total_handoffs = 0
         self.halted = False
 
     # -- load signals ----------------------------------------------------------
@@ -184,6 +203,17 @@ class SimEngine:
                 self.total_aborted += 1
                 return True
         return False
+
+    def take_queued(self) -> list[tuple]:
+        """Remove and return every waiting fresh entry (work stealing).
+        The robbed engine's ``_seq_of`` must shrink with its queue — the
+        arrival order is re-issued by the receiving engine's ``submit`` —
+        or the map leaks one entry per stolen request forever."""
+        entries = list(self.queue)
+        self.queue.clear()
+        for e in entries:
+            self._seq_of.pop(e[0].request_id, None)
+        return entries
 
     def halt(self) -> list[SimRequest]:
         """Stop serving (failure/release); returns in-flight requests for
@@ -414,8 +444,20 @@ class SimEngine:
                                   "preemptions": r.get("preemptions", 0),
                                   "prefill_chunks": r["chunks"],
                                   "finish_time": now})
-            else:
-                still.append(r)
+                continue
+            # disaggregated prefill role: the prompt is ingested and the
+            # first token(s) just streamed — offer the sequence to a
+            # decode-role engine. resume_tokens carries the produced count
+            # so the receiver restores (prompt + produced) through the
+            # prefix-cache machinery and the stream continues contiguously.
+            if (self.role == "prefill-heavy" and self.on_handoff is not None
+                    and not r["req"].no_handoff):
+                r["req"].resume_tokens = r["produced"]
+                if self.on_handoff(r["req"], r["produced"]):
+                    self.total_handoffs += 1
+                    self._composition_changed = True
+                    continue           # the entry leaves; no on_done here
+            still.append(r)
         self.running = still
         self._schedule_step()
 
@@ -435,7 +477,8 @@ class ModelInstance:
                  draft_cost: InstanceCost | None = None,
                  scheduling_policy: str = "fcfs",
                  enable_preemption: bool = False,
-                 restore_hit_rate: float = 1.0):
+                 restore_hit_rate: float = 1.0,
+                 role: str = "unified", on_handoff=None):
         self.loop = loop
         self.model_name = model_name
         self.cost = cost
@@ -464,8 +507,13 @@ class ModelInstance:
                                 draft_cost=draft_cost,
                                 scheduling_policy=scheduling_policy,
                                 enable_preemption=enable_preemption,
-                                restore_hit_rate=restore_hit_rate)
+                                restore_hit_rate=restore_hit_rate,
+                                role=role, on_handoff=on_handoff)
+        self.role = role
         self.hot_since = None
+        # when this HOT instance last drained to zero work (None while
+        # busy/cold) — the pool-level keepalive scale-in reads this
+        self.idle_since = None
         self.created = loop.now()
         self.job = scheduler.submit(num_nodes, on_start=self._nodes_ready,
                                     on_end=self._job_ended,
@@ -553,7 +601,11 @@ class ModelInstance:
 
     # -- hot-node management (paper §3.2.2) ----------------------------------------
     def _went_idle(self):
-        if self.state == InstanceState.HOT and self.idle_timeout is not None:
+        if self.state != InstanceState.HOT:
+            return
+        if self.idle_since is None:
+            self.idle_since = self.loop.now()
+        if self.idle_timeout is not None:
             self._cancel_idle()
             # daemon: housekeeping must not keep the event loop "busy"
             self._idle_ev = self.loop.call_after(self.idle_timeout,
@@ -561,6 +613,7 @@ class ModelInstance:
                                                  daemon=True)
 
     def _went_busy(self):
+        self.idle_since = None
         self._cancel_idle()
 
     def _cancel_idle(self):

@@ -67,6 +67,11 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
                        mfu: float = 0.5,
                        storage_bw: float = 2e9,
                        scale_cooldown: float = 30.0,
+                       role: str = "unified",
+                       min_hot: int = 0,
+                       keepalive: float | None = None,
+                       scale_in_cooldown: float = 30.0,
+                       queue_threshold: int = 4,
                        result_cpu: float = 0.0,
                        prefix_cache_hit_rate: float = 0.0,
                        chunked_prefill_budget: int | None = None,
@@ -80,9 +85,12 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
     ``model_shards``: tensor-parallel width per instance (must divide
     ``chips_per_instance``; InstanceCost validates) — adds the per-layer
     all-reduce terms to every service time, exactly as the real engine's
-    ``EngineConfig.mesh`` shards its forward."""
+    ``EngineConfig.mesh`` shards its forward.
+    ``role`` / ``min_hot`` / ``keepalive``: hot-pool + disaggregated
+    serving knobs — see ``ModelDeployment`` and ``AutoScalePolicy``."""
     return ModelDeployment(
         model=cfg.name,
+        role=role,
         cost=InstanceCost(cfg=cfg, chips=chips_per_instance, mfu=mfu,
                           storage_bw=storage_bw, model_shards=model_shards,
                           **(hw or {})),
@@ -98,7 +106,11 @@ def default_deployment(cfg: ModelConfig, *, chips_per_instance: int = 8,
         enable_preemption=enable_preemption,
         restore_hit_rate=restore_hit_rate,
         autoscale=AutoScalePolicy(max_instances=max_instances,
-                                  cooldown=scale_cooldown),
+                                  cooldown=scale_cooldown,
+                                  queue_threshold=queue_threshold,
+                                  min_hot=min_hot,
+                                  keepalive=keepalive,
+                                  scale_in_cooldown=scale_in_cooldown),
     )
 
 
@@ -143,6 +155,8 @@ def build_system(
                 registry.setdefault(model, []).append(f"{cluster}-ep")
 
     router = FederationRouter(endpoints, registry)
+    for ep in endpoints.values():
+        ep.attach_federation(router)   # prefill->decode handoff targeting
     metrics = MetricsLog()
     batch = BatchService(loop, router, endpoints)
     gateway = InferenceGateway(loop, auth, router, compute,

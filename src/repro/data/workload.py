@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import math
 import random
+import zlib
 from dataclasses import dataclass
 
 
@@ -49,7 +50,35 @@ def make_workload(n: int, rate: float, seed: int = 0, user: str = "bench",
     return out
 
 
+def make_bursty_workload(n_bursts: int, burst_n: int, rate: float,
+                         gap: float, seed: int = 0, user: str = "bench",
+                         prefix: str = "b",
+                         **length_kw) -> list[WorkloadRequest]:
+    """Diurnal replay trace: ``n_bursts`` active phases of ``burst_n``
+    Poisson arrivals at ``rate`` req/s, separated by ``gap`` seconds of
+    silence — the arrival shape that makes hot pools matter (a
+    cold-start-on-demand policy pays a spin-up at every burst front)."""
+    out: list[WorkloadRequest] = []
+    t0 = 0.0
+    for b in range(n_bursts):
+        seg = make_workload(burst_n, rate, seed=seed + b, user=user,
+                            prefix=f"{prefix}{b}-", **length_kw)
+        for w in seg:
+            w.arrival += t0
+        t0 = (seg[-1].arrival if seg else t0) + gap
+        out.extend(seg)
+    return out
+
+
+def _stable_seed(request_id: str, seed: int) -> int:
+    """Process-independent digest for per-request RNG seeding. The builtin
+    ``hash`` is randomized per process by PYTHONHASHSEED, which silently
+    broke this module's 'deterministic given a seed' contract across
+    runs/CI — crc32 gives the same stream everywhere."""
+    return zlib.crc32(f"{request_id}/{seed}".encode()) & 0x7FFFFFFF
+
+
 def token_ids_for(req: WorkloadRequest, vocab: int, seed: int = 0) -> list[int]:
     """Materialize synthetic prompt token ids (for real-engine runs)."""
-    rng = random.Random(hash((req.request_id, seed)) & 0x7FFFFFFF)
+    rng = random.Random(_stable_seed(req.request_id, seed))
     return [rng.randrange(2, vocab) for _ in range(req.prompt_tokens)]

@@ -35,6 +35,8 @@ COLLECTIVE_LAUNCH = 5e-6     # per-collective launch floor (tiny all-reduces)
 DISPATCH_OVERHEAD = 2e-4     # per-step kernel dispatch/collective floor
 HOST_SYNC_OVERHEAD = 1.8e-3  # per-sync host transfer+sampling+scheduling
 STEP_OVERHEAD = DISPATCH_OVERHEAD + HOST_SYNC_OVERHEAD  # legacy K=1 total
+KV_TRANSFER_BW = 25e9        # bytes/s inter-instance KV link (200 Gb fabric)
+HANDOFF_OVERHEAD = 2e-3      # per-handoff control-plane hop (disaggregated)
 
 
 def restore_tokens(n_tokens: int, cache_hit_rate: float) -> int:
@@ -91,6 +93,8 @@ class InstanceCost:
     host_io_bw: float = HOST_IO_BW   # KV swap-out/in staging bandwidth
     model_shards: int = 1            # TP width (EngineConfig.mesh mirror)
     ici_bw: float = ICI_BW           # all-reduce ring bandwidth per link
+    kv_transfer_bw: float = KV_TRANSFER_BW  # prefill->decode handoff link
+    handoff_overhead: float = HANDOFF_OVERHEAD  # per-handoff hop floor
 
     def __post_init__(self):
         n = int(self.model_shards)
@@ -153,6 +157,18 @@ class InstanceCost:
         kv_per_tok = (cfg.attn_layer_count() * 2 * cfg.kv_dim
                       * self.bytes_per_param)
         return kv_per_tok * n_tokens / self.host_io_bw
+
+    def handoff_time(self, n_tokens: int) -> float:
+        """Transfer hop of a prefill->decode handoff (disaggregated
+        serving): the sequence's KV pages for ``n_tokens`` positions cross
+        the inter-instance link, plus a fixed control-plane hop. The
+        receiving engine's restore prefill (``restore_time``) is charged
+        separately by its resume admission path."""
+        cfg = self.cfg
+        kv_per_tok = (cfg.attn_layer_count() * 2 * cfg.kv_dim
+                      * self.bytes_per_param)
+        return (self.handoff_overhead
+                + kv_per_tok * max(int(n_tokens), 0) / self.kv_transfer_bw)
 
     # -- decode ------------------------------------------------------------------
     def decode_step_time(self, batch: int, ctx: int = 1024,

@@ -525,6 +525,70 @@ def test_autoscaler_caps_cooldown_and_gating(data):
                                                   need)
 
 
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_scale_in_policy_invariants(data):
+    """Hot-pool scale-IN can never violate the pool contract: no eviction
+    below the min_hot floor, never an instance holding in-flight work,
+    never inside the scale-in cooldown or before the keepalive expires —
+    and always the longest-idle candidate."""
+    from repro.core.autoscale import AutoScalePolicy, AutoScaler
+
+    class _Inst:
+        def __init__(self, state, load, idle_since):
+            self.alive = state in ("queued", "starting", "running")
+            self.state = type("S", (), {"value": state})()
+            self.load = load
+            self.idle_since = idle_since
+
+    keepalive = data.draw(st.one_of(st.none(),
+                                    st.sampled_from([5.0, 60.0])))
+    pol = AutoScalePolicy(max_instances=data.draw(st.integers(1, 5)),
+                          min_hot=data.draw(st.integers(0, 3)),
+                          keepalive=keepalive,
+                          scale_in_cooldown=data.draw(
+                              st.sampled_from([0.0, 10.0])))
+    loop = EventLoop(VirtualClock())
+    scaler = AutoScaler(loop, pol)
+    instances = []
+    for _ in range(data.draw(st.integers(1, 25))):
+        op = data.draw(st.sampled_from(["spawn", "advance", "check"]))
+        if op == "spawn":
+            t = loop.now()
+            instances.append(_Inst(
+                data.draw(st.sampled_from(
+                    ["queued", "starting", "running", "released"])),
+                data.draw(st.integers(0, 3)),
+                data.draw(st.one_of(st.none(), st.floats(0.0, max(t, 1.0))))))
+        elif op == "advance":
+            loop.run_until(loop.now() + data.draw(
+                st.sampled_from([1.0, 30.0, 120.0])))
+        else:
+            victim = scaler.pick_scale_in("m", instances)
+            alive = [i for i in instances if i.alive]
+            if victim is None:
+                continue
+            assert pol.keepalive is not None          # legacy mode never picks
+            assert victim in alive
+            assert len(alive) > pol.min_hot           # floor survives
+            assert victim.state.value == "running"
+            assert victim.load == 0                   # no in-flight work
+            assert loop.now() - victim.idle_since >= pol.keepalive
+            last = scaler._last_scale_in.get("m", -1e18)
+            assert loop.now() - last >= pol.scale_in_cooldown
+            # longest-idle-first among every eligible candidate
+            eligible = [i for i in alive
+                        if i.state.value == "running" and i.load == 0
+                        and i.idle_since is not None
+                        and loop.now() - i.idle_since >= pol.keepalive]
+            assert victim.idle_since == min(i.idle_since for i in eligible)
+            victim.alive = False
+            scaler.record_scale_in("m", len(alive) - 1)
+            # same instant, again: cooldown (if any) must now gate
+            if pol.scale_in_cooldown > 0:
+                assert scaler.pick_scale_in("m", instances) is None
+
+
 @given(free_a=st.integers(0, 4), free_b=st.integers(0, 4),
        hot_a=st.booleans(), hot_b=st.booleans())
 @settings(max_examples=30, deadline=None)
