@@ -22,7 +22,9 @@
   hot_pool      (DES)   hot-node pool vs cold-start-on-demand on a bursty
                         replay trace, plus disaggregated prefill/decode
                         handoff token conservation, JSON output
-  roofline      §Roofline  terms from results/dryrun/*.json
+  roofline      §Roofline  achieved-vs-peak bandwidth for the serving
+                        attention ops (JSON output), plus derived terms
+                        from results/dryrun/*.json when present
 
 ``python -m benchmarks.run [--fast] [--smoke] [--only NAME]``.
 ``--smoke`` runs only the real-engine perf-path suites at minimal sizes
@@ -62,7 +64,7 @@ SUITES = {
 # the ones a perf-path regression breaks, so CI runs exactly these
 SMOKE_SUITES = ["engine_step", "prefix_cache", "decode_loop", "spec_decode",
                 "qos_preemption", "api_stream", "tp_decode", "chaos_soak",
-                "hot_pool"]
+                "hot_pool", "roofline"]
 
 
 def main() -> None:
@@ -88,7 +90,8 @@ def main() -> None:
         kw = {"fast": args.fast or args.smoke}
         if args.smoke and name in ("decode_loop", "spec_decode",
                                    "qos_preemption", "api_stream",
-                                   "tp_decode", "chaos_soak", "hot_pool"):
+                                   "tp_decode", "chaos_soak", "hot_pool",
+                                   "roofline"):
             kw["smoke"] = True
         if args.smoke and name == "prefix_cache":
             kw["min_speedup"] = 1.5     # shared-runner wall-clock headroom

@@ -224,6 +224,13 @@ class ServeSharding:
         kh, hd = self._head_axes(shape[3], shape[4])
         return P(None, None, None, kh, hd)
 
+    def view_spec(self, shape) -> P:
+        """Gathered context view (L, B, S, KH, hd): same head-axis policy
+        as the pool it was gathered from, batch/seq replicated (the fused
+        twin's split attention contracts over S per shard)."""
+        kh, hd = self._head_axes(shape[3], shape[4])
+        return P(None, None, None, kh, hd)
+
     def slot_cache_spec(self, name: str, shape) -> P:
         """Slot cache leaf by name: k/v are (L, B, KH, S, hd); len and the
         SSM/conv states replicate."""
@@ -258,6 +265,10 @@ class ServeSharding:
     def pin_pools(self, pools):
         return {n: self.pin(a, self.pool_spec(a.shape))
                 for n, a in pools.items()}
+
+    def pin_view(self, view):
+        return {n: self.pin(a, self.view_spec(a.shape))
+                for n, a in view.items()}
 
     def pin_slot_cache(self, cache):
         return {n: self.pin(a, self.slot_cache_spec(n, a.shape))

@@ -1,4 +1,4 @@
-"""Public jit'd wrapper for the flash-attention Pallas kernel."""
+"""Public jit'd wrappers for the flash-attention Pallas kernels."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,7 +6,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.kernel import (flash_attention_fwd,
+                                                  paged_flash_prefill_fwd)
+from repro.kernels.paged_attention.ops import (_default_interpret, _pad_axis,
+                                               _sublane)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "q_block", "k_block",
@@ -38,3 +41,48 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_block=256,
                               interpret=interpret)
     out = out.reshape(B, KH, G, Sq + pq, D).transpose(0, 3, 1, 2, 4)
     return out.reshape(B, Sq + pq, H, D)[:, :Sq]
+
+
+@partial(jax.jit, static_argnames=("group", "q_block", "interpret"))
+def _paged_prefill_rows(qr, k_pages, v_pages, block_tables, kv_lens,
+                        q_starts, *, group, q_block, interpret):
+    qp = _pad_axis(qr, 2, q_block)
+    out = paged_flash_prefill_fwd(qp, k_pages, v_pages,
+                                  block_tables.astype(jnp.int32),
+                                  kv_lens.astype(jnp.int32),
+                                  q_starts.astype(jnp.int32),
+                                  group=group, q_block=q_block,
+                                  interpret=interpret)
+    return out[:, :, :qr.shape[2]]
+
+
+def paged_flash_prefill(q, k_pages, v_pages, block_tables, q_offset, kv_len,
+                        *, interpret=None):
+    """Chunked-prefill flash attention reading the paged pool directly.
+
+    Drop-in for ``paged_prefill_attention_ref``: q is (B, C, H, D), a chunk
+    whose first token sits at absolute position ``q_offset`` and whose own
+    KV is already written into the pages; ``kv_len`` counts the valid
+    positions (cached prefix + this chunk). No (B, S, KH, D) gather is
+    materialized — the kernel streams pages straight from the pool.
+    ``q_offset`` / ``kv_len`` may be scalars or (B,). Returns (B, C, H, D).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, C, H, D = q.shape
+    KH = k_pages.shape[2]
+    assert H % KH == 0, \
+        f"query heads ({H}) must be a multiple of kv heads ({KH})"
+    G = H // KH
+    # fold (token, group) into query rows: r = c * G + g
+    qr = q.reshape(B, C, KH, G, D).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(B, KH, C * G, D)
+    sub = _sublane(q.dtype)
+    q_block = min(128, -(-C * G // sub) * sub)
+    starts = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    out = _paged_prefill_rows(qr, k_pages, v_pages, block_tables, lens,
+                              starts, group=G, q_block=q_block,
+                              interpret=interpret)
+    out = out.reshape(B, KH, C, G, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, C, H, D)

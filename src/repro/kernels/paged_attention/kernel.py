@@ -69,6 +69,15 @@ def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _compiler_kw(interpret, semantics):
+    # renamed across jax releases: CompilerParams <-> TPUCompilerParams
+    params_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+    if params_cls is None or interpret:
+        return {}
+    return {"compiler_params": params_cls(dimension_semantics=semantics)}
+
+
 def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
                         interpret=False):
     """q: (B, KH, G, D); k_pages/v_pages: (NP, page, KH, D);
@@ -100,15 +109,9 @@ def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
             pltpu.VMEM((G, D), jnp.float32),
         ],
     )
-    # renamed across jax releases: CompilerParams <-> TPUCompilerParams
-    params_cls = getattr(pltpu, "CompilerParams",
-                         getattr(pltpu, "TPUCompilerParams", None))
-    kw = {}
-    if params_cls is not None and not interpret:
-        # batch and kv-head grid axes are independent; the page axis carries
-        # the online-softmax accumulator and must run in order
-        kw["compiler_params"] = params_cls(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    # batch and kv-head grid axes are independent; the page axis carries
+    # the online-softmax accumulator and must run in order
+    kw = _compiler_kw(interpret, ("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -116,3 +119,123 @@ def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
         interpret=interpret,
         **kw,
     )(block_tables, context_lens, q, k_pages, v_pages)
+
+
+# -- fused decode: paged context + in-flight tail ----------------------------
+
+def _decode_tail_kernel(tables_ref, clens_ref, tlens_ref, q_ref, k_ref, v_ref,
+                        kt_ref, vt_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                        page_size, num_pages, scale):
+    """One extra grid step past the pages attends the in-flight tail.
+
+    The K-step fused decode loop keeps the tokens generated *this call* in
+    small (B, K, KH, D) tail buffers instead of scattering them into the
+    page pool every step.  Grid step ``pi == num_pages`` folds that tail
+    into the same online-softmax accumulator the page steps built, so one
+    kernel launch covers committed context + uncommitted tail.
+    """
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _online_update(k, v, valid):
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    ctx = clens_ref[b]
+    page_start = pi * page_size
+    is_tail = pi == num_pages
+
+    @pl.when(jnp.logical_and(pi < num_pages, page_start < ctx))
+    def _pages():
+        k = k_ref[0, :, 0].astype(jnp.float32)                # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q_ref.shape[2], page_size), 1)
+        _online_update(k, v, pos < ctx)
+
+    @pl.when(jnp.logical_and(is_tail, tlens_ref[b] > 0))
+    def _tail():
+        k = kt_ref[0, :, 0].astype(jnp.float32)               # (Kt, D)
+        v = vt_ref[0, :, 0].astype(jnp.float32)
+        j = jax.lax.broadcasted_iota(
+            jnp.int32, (q_ref.shape[2], kt_ref.shape[1]), 1)
+        _online_update(k, v, j < tlens_ref[b])
+
+    @pl.when(is_tail)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_tail_fwd(q, k_pages, v_pages, block_tables, context_lens,
+                          k_tail, v_tail, tail_lens, *, interpret=False):
+    """q: (B, KH, G, D); k_pages/v_pages: (NP, page, KH, D);
+    k_tail/v_tail: (B, Kt, KH, D) this call's in-flight tokens;
+    block_tables: (B, PPS), context_lens / tail_lens: (B,), all int32.
+    Returns (B, KH, G, D).  Position ``i`` attends committed context
+    ``[0, context_lens[i])`` from the pages plus tail rows
+    ``[0, tail_lens[i])`` — exactly contiguous positions
+    ``[0, context_lens[i] + tail_lens[i])``."""
+    B, KH, G, D = q.shape
+    NP, page, _, _ = k_pages.shape
+    Kt = k_tail.shape[1]
+    PPS = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_tail_kernel, page_size=page,
+                               num_pages=PPS, scale=scale)
+    # grid step PPS is the tail step; its page index_map is clamped onto a
+    # real page (the block is DMA'd but unread — only the tail refs are)
+    last = PPS - 1
+
+    def page_map(b, h, pi, tables, clens, tlens):
+        return (tables[b, jnp.minimum(pi, last)], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KH, PPS + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, pi, tables, clens, tlens: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D), page_map),
+            pl.BlockSpec((1, page, 1, D), page_map),
+            pl.BlockSpec((1, Kt, 1, D),
+                         lambda b, h, pi, tables, clens, tlens: (b, 0, h, 0)),
+            pl.BlockSpec((1, Kt, 1, D),
+                         lambda b, h, pi, tables, clens, tlens: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, D),
+            lambda b, h, pi, tables, clens, tlens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kw = _compiler_kw(interpret, ("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+        **kw,
+    )(block_tables, context_lens, tail_lens, q, k_pages, v_pages,
+      k_tail, v_tail)

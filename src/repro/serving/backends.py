@@ -5,8 +5,12 @@ SlotBackend  — contiguous per-slot KV/state cache, works for every family
                ``max_slots``; prefill fills one slot, decode steps all slots.
 PagedBackend — vLLM-style paged KV pool with block tables, for attention
                families; decode attention goes through the paged-attention
-               path (pure-jnp page gather on CPU, Pallas kernel on TPU via
-               ``use_kernel=True``).
+               path. ``use_kernel=True`` picks the no-per-step-gather hot
+               path: compiled Pallas kernels on TPU (shard_map'd over the
+               kv-head axis under a mesh), and on other backends an "XLA
+               twin" with the same memory-traffic structure — a cached
+               contiguous context view plus per-call tail buffers instead
+               of a full page gather and pool scatter every step.
 
 Both backends expose two decode paths:
 
@@ -62,8 +66,13 @@ from repro.models.layers import (NEG_INF, chunked_attention, mlp_layer,
 from repro.models.moe import moe_ffn
 from repro.models.transformer import _block
 from repro.serving.kv_cache import OutOfPages, PagedKVCache
-from repro.kernels.paged_attention.ops import paged_attention as paged_attn_kernel
-from repro.kernels.paged_attention.ref import (gather_kv, paged_attention_ref,
+from repro.kernels.flash_attention.ops import paged_flash_prefill
+from repro.kernels.paged_attention.ops import (
+    fused_decode_attention, fused_decode_attention_sharded, kernels_compiled,
+    paged_attention as paged_attn_kernel, paged_attention_sharded,
+    shardable_kv_heads)
+from repro.kernels.paged_attention.ref import (decode_tail_attention_ref,
+                                               gather_kv, paged_attention_ref,
                                                paged_prefill_attention_ref)
 
 from repro.serving.sampler import (fold_seeds, sample_from_logits,
@@ -579,11 +588,6 @@ class PagedBackend:
         cfg = model.cfg
         assert cfg.family in ATTENTION_FAMILIES, \
             "paged backend supports attention families"
-        if mesh is not None and use_kernel:
-            raise ValueError(
-                "use_kernel (Pallas paged attention) is incompatible with a "
-                "sharded mesh: GSPMD cannot partition the kernel body — run "
-                "the jnp reference path (use_kernel=False) when sharding")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -609,6 +613,21 @@ class PagedBackend:
             self.params = self.shard.shard_params(params)
             self.pools = self.shard.shard_pools(self.pools)
         self.use_kernel = use_kernel
+        # Kernel dispatch. GSPMD cannot partition a Pallas kernel body, so
+        # under a mesh the kernels run per-shard via shard_map over the
+        # kv-head axis — only possible when the head count divides the
+        # model axis; otherwise the sharded jnp reference serves. Where
+        # compiled Pallas is unavailable (non-TPU), the fused decode loop
+        # runs the "XLA twin": same no-per-step-gather/scatter structure
+        # (cached context view + tail buffers + one deferred commit), jnp
+        # ops instead of a kernel.
+        self._kernel_sharded = use_kernel and shardable_kv_heads(
+            cfg.num_kv_heads, mesh)
+        self._fused_use_pallas = (use_kernel and kernels_compiled()
+                                  and (mesh is None or self._kernel_sharded))
+        self._needs_view = use_kernel and not self._fused_use_pallas
+        self._ctx_view = None       # gathered (L, B, S, KH, hd) ctx view
+        self._gather_view = jax.jit(self._gather_view_impl)
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.slot_of: dict[str, int] = {}
         self.seq_of: dict[int, str] = {}
@@ -658,9 +677,27 @@ class PagedBackend:
     # -- jitted bodies ----------------------------------------------------------
     def _attend(self, q, kp, vp, tables, lens):
         if self.use_kernel:
-            # interpret=None: compiled Pallas on TPU, interpreter elsewhere
-            return paged_attn_kernel(q, kp, vp, tables, lens, interpret=None)
+            if self.shard is not None:
+                if not self._kernel_sharded:
+                    # kv heads don't divide the model axis: shard_map can't
+                    # split the kernel — run the GSPMD-sharded reference
+                    return paged_attention_ref(q, kp, vp, tables, lens)
+                return paged_attention_sharded(q, kp, vp, tables, lens,
+                                               mesh=self.shard.mesh)
+            # interpret resolves once per process: compiled on TPU,
+            # interpreter elsewhere
+            return paged_attn_kernel(q, kp, vp, tables, lens)
         return paged_attention_ref(q, kp, vp, tables, lens)
+
+    def _prefill_attend(self, q, kp, vp, tables, start, kv_len):
+        """Chunked-prefill attention dispatch: the paged flash-prefill
+        kernel streams pages straight from the pool when compiled Pallas
+        is available on a single device; the gather reference otherwise
+        (under a mesh GSPMD shards the gather + einsums — the decode hot
+        loop is where shard_map pays)."""
+        if (self.use_kernel and kernels_compiled() and self.shard is None):
+            return paged_flash_prefill(q, kp, vp, tables, start, kv_len)
+        return paged_prefill_attention_ref(q, kp, vp, tables, start, kv_len)
 
     def _cow_impl(self, pools, src, dst):
         """Copy-on-write: duplicate page ``src`` into ``dst`` on device
@@ -720,8 +757,8 @@ class PagedBackend:
                     k[0].astype(kp.dtype))
                 vp2 = vp.at[write_pages, write_offs].set(
                     v[0].astype(vp.dtype))
-                a = paged_prefill_attention_ref(q, kp2, vp2, table[None],
-                                                start, kv_len)
+                a = self._prefill_attend(q, kp2, vp2, table[None],
+                                         start, kv_len)
                 return a, (kp2, vp2)
 
             return _chunk_layer(h, lp, cfg, positions, write_attend)
@@ -831,6 +868,7 @@ class PagedBackend:
         logits, self.pools = self._prefill[bucket](
             self.params, self._put(toks), self.pools,
             self._put(np.array(write_table, np.int32)), S)
+        self._invalidate_view()
         return logits               # device-resident (V,)
 
     def _compute_chunk(self, task: PrefillTask, chunk: int):
@@ -862,6 +900,7 @@ class PagedBackend:
             self.params, self._put(toks), self.pools,
             self._put(ctx_table), self._put(write_pages),
             self._put(write_offs), pos, chunk)
+        self._invalidate_view()
         return logits               # device-resident (V,)
 
     # -- decode -----------------------------------------------------------------
@@ -884,6 +923,7 @@ class PagedBackend:
         logits, self.pools = self._decode(
             self.params, self.pools, self._put(tokens_by_slot),
             self._put(tables), self._put(lens))
+        self._invalidate_view()
         for sid in self.decoding:
             self.kv.advance(sid)
         return _logits_to_host(logits)
@@ -932,6 +972,140 @@ class PagedBackend:
             lens = self.shard.pin(lens, jax.sharding.PartitionSpec())
         return out, produced, done, pools, st, lens
 
+    # -- fused decode, kernel path ----------------------------------------------
+    def _gather_view_impl(self, pools, tables):
+        """Materialize the contiguous (L, B, S, KH, hd) view of the
+        committed pages — once per allocator state, not once per step.
+        The cache is keyed on ``kv.table_version`` through
+        ``_refresh_tables`` (a version bump re-uploads the tables and
+        drops the view) plus explicit ``_invalidate_view`` calls at every
+        pool-mutation site outside the fused loop."""
+        view = {n: jax.vmap(lambda p: gather_kv(p, tables))(pools[n])
+                for n in ("k", "v")}
+        return view if self.shard is None else self.shard.pin_view(view)
+
+    def _invalidate_view(self) -> None:
+        """Drop the cached context view after any pool mutation outside
+        the fused loop (prefill writes, legacy decode, COW, spec verify,
+        swap-in) — the next fused call re-gathers."""
+        self._ctx_view = None
+
+    def _fused_kernel_impl(self, params, pools, view, st, tables, lens, *,
+                           K):
+        """K fused decode steps with no per-step page gather or scatter.
+
+        The loop body never touches the page pool: each step appends its
+        new KV to (L, B, K, KH, hd) tail buffers and attends committed
+        context + tail under ONE softmax — via the Pallas decode-tail
+        kernel reading pages directly (TPU; shard_map'd over kv heads on a
+        mesh, ``view`` is None), or via the cached contiguous ``view``
+        (the XLA twin elsewhere). After the loop, one batched scatter
+        commits the tails to the pool and advances the view in place, so
+        the next call reuses it unless the allocator moved. Emits the same
+        token stream as ``_fused_impl``: step i of slot b attends exactly
+        positions [0, lens0[b] + produced[b] + 1) with the same values.
+        """
+        cfg = self.cfg
+        ps = self.page_size
+        B = st["tokens"].shape[0]
+        L, KH, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        dt = pools["k"].dtype
+        lens0 = lens
+        kv_ctx = (pools["k"], pools["v"]) if view is None \
+            else (view["k"], view["v"])
+
+        def forward(tokens, written, k_tails, v_tails):
+            x = jnp.take(params["embed"], tokens[:, None], axis=0)
+            positions = (lens0 + written)[:, None]
+            tail_lens = written + 1
+            bidx = jnp.arange(B)
+
+            def body(h, xs):
+                lp, kc, vc, kt, vt = xs
+                xa = rms_norm(h, lp["norm1"], cfg.norm_eps)
+                q, k, v = project_qkv(xa, lp["attn"], cfg, positions)
+                kt = kt.at[bidx, written].set(k[:, 0].astype(dt))
+                vt = vt.at[bidx, written].set(v[:, 0].astype(dt))
+                if view is not None:
+                    a = decode_tail_attention_ref(q[:, 0], kc, vc, lens0,
+                                                  kt, vt, tail_lens)
+                elif self.shard is not None:
+                    a = fused_decode_attention_sharded(
+                        q[:, 0], kc, vc, tables, lens0, kt, vt, tail_lens,
+                        mesh=self.shard.mesh)
+                else:
+                    a = fused_decode_attention(q[:, 0], kc, vc, tables,
+                                               lens0, kt, vt, tail_lens)
+                h = h + (a.reshape(B, 1, -1) @ lp["attn"]["wo"])
+                g = rms_norm(h, lp["norm2"], cfg.norm_eps)
+                if cfg.moe:
+                    f, _ = moe_ffn(g, lp["moe"], cfg, mode="dense")
+                else:
+                    f = mlp_layer(g, lp["mlp"])
+                return h + f, (kt, vt)
+
+            h, (k_tails, v_tails) = lax.scan(
+                body, x, (params["layers"], *kv_ctx, k_tails, v_tails))
+            h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+            return self.model.logits(params, h[:, 0]), k_tails, v_tails
+
+        def step(i, carry):
+            k_tails, v_tails, tokens, n_gen, done, produced, out = carry
+            live = st["active"] & ~done
+            # ``produced`` doubles as the tail write cursor: both advance
+            # by ``live`` each step, so slot b's valid tail rows are
+            # exactly [0, produced[b]) and this step writes row
+            # produced[b] (dead slots overwrite that row in place — their
+            # outputs are discarded by the live mask, like the trash-page
+            # writes on the reference path)
+            logits, k_tails, v_tails = forward(tokens, produced, k_tails,
+                                               v_tails)
+            tokens, n_gen, done, produced = _sample_and_latch(
+                st, logits, tokens, n_gen, done, produced, live)
+            out = out.at[i].set(tokens)
+            return k_tails, v_tails, tokens, n_gen, done, produced, out
+
+        k_tails, v_tails, tokens, n_gen, done, produced, out = lax.fori_loop(
+            0, K, step,
+            (jnp.zeros((L, B, K, KH, hd), dt),
+             jnp.zeros((L, B, K, KH, hd), dt),
+             st["tokens"], st["n_gen"], jnp.zeros((B,), bool),
+             jnp.zeros((B,), jnp.int32), jnp.zeros((K, B), jnp.int32)))
+
+        # one deferred commit: scatter every valid tail row into its page
+        # (rows past ``produced`` drop via an out-of-bounds page id)
+        jj = jnp.arange(K)[None, :]
+        pos = lens0[:, None] + jj                               # (B, K)
+        valid = jj < produced[:, None]
+        page_slot = jnp.minimum(pos // ps, tables.shape[1] - 1)
+        page_idx = jnp.take_along_axis(tables, page_slot, axis=1)
+        page_idx = jnp.where(valid, page_idx, pools["k"].shape[1])
+        off = pos % ps
+
+        def commit(pool_l, tail_l):
+            return pool_l.at[page_idx, off].set(tail_l, mode="drop")
+
+        pools = self._pin_pools(
+            {"k": jax.vmap(commit)(pools["k"], k_tails),
+             "v": jax.vmap(commit)(pools["v"], v_tails)})
+        if view is not None:
+            S = view["k"].shape[2]
+            posv = jnp.where(valid, pos, S)       # invalid rows drop (OOB)
+            brow = jnp.arange(B)[:, None]
+
+            def advance(view_l, tail_l):
+                return view_l.at[brow, posv].set(tail_l, mode="drop")
+
+            view = {"k": jax.vmap(advance)(view["k"], k_tails),
+                    "v": jax.vmap(advance)(view["v"], v_tails)}
+            if self.shard is not None:
+                view = self.shard.pin_view(view)
+        lens = lens0 + produced
+        st = self._pin_st(dict(st, tokens=tokens, n_gen=n_gen))
+        if self.shard is not None:
+            lens = self.shard.pin(lens, jax.sharding.PartitionSpec())
+        return out, produced, done, pools, view, st, lens
+
     def fused_decode(self, K: int, host_state: dict | None = None):
         """Run up to K decode steps on device; sync only token ids and flags.
 
@@ -952,14 +1126,28 @@ class PagedBackend:
         assert self._dec_st is not None, \
             "fused_decode needs host_state on the first call"
         if K_eff not in self._fused:
-            # tables (arg 3) are NOT donated: the device copy is reused
-            # across calls until the allocator bumps table_version
-            self._fused[K_eff] = jax.jit(partial(self._fused_impl, K=K_eff),
-                                         donate_argnums=(1, 2, 4))
+            # tables are NOT donated: the device copy is reused across
+            # calls until the allocator bumps table_version
+            if self.use_kernel:
+                self._fused[K_eff] = jax.jit(
+                    partial(self._fused_kernel_impl, K=K_eff),
+                    donate_argnums=(1, 2, 3, 5))
+            else:
+                self._fused[K_eff] = jax.jit(
+                    partial(self._fused_impl, K=K_eff),
+                    donate_argnums=(1, 2, 4))
         tables_d, lens_d = self._dev_tables
-        out, produced, done, self.pools, self._dec_st, lens_d = \
-            self._fused[K_eff](self.params, self.pools, self._dec_st,
-                               tables_d, lens_d)
+        if self.use_kernel:
+            if self._needs_view and self._ctx_view is None:
+                self._ctx_view = self._gather_view(self.pools, tables_d)
+            (out, produced, done, self.pools, self._ctx_view, self._dec_st,
+             lens_d) = self._fused[K_eff](self.params, self.pools,
+                                          self._ctx_view, self._dec_st,
+                                          tables_d, lens_d)
+        else:
+            out, produced, done, self.pools, self._dec_st, lens_d = \
+                self._fused[K_eff](self.params, self.pools, self._dec_st,
+                                   tables_d, lens_d)
         self._dev_tables = (tables_d, lens_d)
         produced_np = np.asarray(produced)
         for slot, sid in self.seq_of.items():
@@ -993,6 +1181,7 @@ class PagedBackend:
                 cow = self.kv.writable_page(sid, pi * ps)
                 if cow is not None:
                     self.pools = self._cow(self.pools, *cow)
+                    self._invalidate_view()
 
     def _refresh_tables(self, force: bool) -> None:
         """(Re)upload the device-resident (block tables, lengths) pair when
@@ -1008,6 +1197,9 @@ class PagedBackend:
                     lens[slot] = self.kv.length(sid)
             self._dev_tables = (self._put(tables), self._put(lens))
             self._dev_tables_key = self.kv.table_version
+            # allocator moved (or slot state re-seeded): the cached
+            # context view's page mapping is stale with it
+            self._invalidate_view()
 
     # -- speculative decoding ----------------------------------------------------
     @property
@@ -1105,6 +1297,7 @@ class PagedBackend:
             self._spec_fns[T](self.params, self.pools, self._dec_st,
                               tables_d, lens_d,
                               self._put(np.ascontiguousarray(draft_tokens)))
+        self._invalidate_view()
         self._dev_tables = (tables_d, lens_d)
         produced_np = np.asarray(produced)
         for slot, sid in self.seq_of.items():
@@ -1155,6 +1348,7 @@ class PagedBackend:
         self.pools = self._swap(self.pools,
                                 self._put(np.array(pages, np.int32)),
                                 self._put(blob["k"]), self._put(blob["v"]))
+        self._invalidate_view()
         self.decoding.add(seq_id)
 
     def slot(self, seq_id: str) -> int:

@@ -6,10 +6,16 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose
 
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               paged_flash_prefill)
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (fused_decode_attention,
+                                               fused_decode_attention_sharded,
+                                               paged_attention,
+                                               paged_attention_sharded)
+from repro.kernels.paged_attention.ref import (fused_decode_attention_ref,
+                                               paged_attention_ref,
+                                               paged_prefill_attention_ref)
 from repro.kernels.ssd.ops import ssd
 from repro.kernels.ssd.ref import ssd_chunked, ssd_decode_step
 
@@ -137,6 +143,199 @@ def test_paged_attention_page_permutation_invariance():
     out2 = paged_attention(q, kp[inv], vp[inv], perm[tables], lens,
                            interpret=True)
     assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+# edge geometry: page-boundary lengths, single-page, one-token, empty
+# context — the cases the serving allocator actually produces
+EDGE_LEN_CASES = [
+    # page, PPS, lens (None entries filled below)
+    (16, 4, [16, 32]),                # context_len % page_size == 0
+    (16, 4, [64, 48]),                # full table, and 3 exact pages
+    (16, 1, [7, 16]),                 # single-page table, partial + full
+    (16, 4, [1, 17]),                 # one token; first token of page 2
+]
+
+
+@pytest.mark.parametrize("case", EDGE_LEN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_edge_lengths(case, dtype):
+    page, PPS, lens = case
+    B, H, KH, D, NP = len(lens), 6, 2, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (NP, page, KH, D), dtype)
+    vp = jax.random.normal(ks[2], (NP, page, KH, D), dtype)
+    tables = jnp.arange(B * PPS, dtype=jnp.int32).reshape(B, PPS) % NP
+    lens = jnp.asarray(lens, jnp.int32)
+    out = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, tables, lens)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **tol(dtype))
+
+
+def test_paged_attention_empty_context_is_finite():
+    """A zero-length row has no valid positions: the kernel's normalizer
+    clamp must yield finite output (zeros), never NaN, and live rows in
+    the same batch must be unaffected. (The jnp reference softmaxes the
+    all-masked row to uniform instead — the two paths only have to agree
+    on rows that can actually be sampled from.)"""
+    B, H, KH, D, page, PPS, NP = 2, 4, 2, 32, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NP, page, KH, D))
+    vp = jax.random.normal(ks[2], (NP, page, KH, D))
+    tables = jnp.arange(B * PPS, dtype=jnp.int32).reshape(B, PPS)
+    lens = jnp.asarray([0, 20], jnp.int32)
+    out = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    ref = paged_attention_ref(q, kp, vp, tables, lens)
+    assert_allclose(np.asarray(out[1]), np.asarray(ref[1]), rtol=2e-5,
+                    atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused decode-tail attention
+# ---------------------------------------------------------------------------
+
+FUSED_CASES = [
+    # B, H, KH, D, page, PPS, NP, Kt
+    (3, 8, 2, 64, 16, 4, 16, 4),
+    (2, 56, 8, 32, 16, 4, 16, 16),    # yi grouping G=7 (sublane-padded)
+    (2, 4, 4, 32, 16, 2, 8, 1),       # MHA, K=1 tail
+    (2, 4, 1, 32, 16, 2, 8, 5),       # MQA, odd tail (pads to sublane)
+]
+
+
+@pytest.mark.parametrize("case", FUSED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_decode_attention(case, dtype):
+    B, H, KH, D, page, PPS, NP, Kt = case
+    ks = jax.random.split(jax.random.PRNGKey(21), 6)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (NP, page, KH, D), dtype)
+    vp = jax.random.normal(ks[2], (NP, page, KH, D), dtype)
+    kt = jax.random.normal(ks[3], (B, Kt, KH, D), dtype)
+    vt = jax.random.normal(ks[4], (B, Kt, KH, D), dtype)
+    tables = jnp.arange(B * PPS, dtype=jnp.int32).reshape(B, PPS) % NP
+    lens = jax.random.randint(ks[5], (B,), 0, PPS * page + 1)
+    tail_lens = (jnp.arange(B, dtype=jnp.int32) * Kt // max(B - 1, 1)) \
+        if B > 1 else jnp.full((B,), Kt, jnp.int32)
+    tail_lens = jnp.maximum(tail_lens, 1)  # >= 1 like the fused loop
+    out = fused_decode_attention(q, kp, vp, tables, lens, kt, vt,
+                                 tail_lens, interpret=True)
+    ref = fused_decode_attention_ref(q, kp, vp, tables, lens, kt, vt,
+                                     tail_lens)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **tol(dtype))
+
+
+def test_fused_decode_attention_equals_materialized_pages():
+    """Committing the tail into the pages and running plain paged
+    attention over context_len + tail_len must give the same answer — the
+    deferred-commit contract of the fused decode loop."""
+    B, H, KH, D, page, PPS, NP, Kt = 2, 8, 2, 64, 16, 4, 32, 4
+    ks = jax.random.split(jax.random.PRNGKey(22), 6)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NP, page, KH, D))
+    vp = jax.random.normal(ks[2], (NP, page, KH, D))
+    kt = jax.random.normal(ks[3], (B, Kt, KH, D))
+    vt = jax.random.normal(ks[4], (B, Kt, KH, D))
+    # disjoint tables so the committed tails can't collide across rows
+    tables = jnp.arange(1, 1 + B * PPS, dtype=jnp.int32).reshape(B, PPS)
+    lens = jnp.asarray([13, 32], jnp.int32)   # mid-page and page-boundary
+    tail_lens = jnp.asarray([4, 3], jnp.int32)
+    out = fused_decode_attention(q, kp, vp, tables, lens, kt, vt,
+                                 tail_lens, interpret=True)
+    kp2, vp2 = kp, vp
+    for b in range(B):
+        for j in range(int(tail_lens[b])):
+            pos = int(lens[b]) + j
+            pid = int(tables[b, pos // page])
+            kp2 = kp2.at[pid, pos % page].set(kt[b, j])
+            vp2 = vp2.at[pid, pos % page].set(vt[b, j])
+    ref = paged_attention_ref(q, kp2, vp2, tables, lens + tail_lens)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged flash prefill
+# ---------------------------------------------------------------------------
+
+PREFILL_CASES = [
+    # B, C, H, KH, D, page, PPS, NP, start
+    (2, 16, 8, 2, 64, 16, 4, 16, 0),      # fresh prompt chunk
+    (1, 16, 4, 4, 32, 16, 4, 8, 32),      # later chunk (cached prefix)
+    (2, 8, 56, 8, 32, 16, 2, 8, 8),       # yi grouping, tiny chunk
+    (1, 5, 4, 1, 32, 16, 1, 4, 0),        # MQA, ragged chunk, single page
+    (1, 16, 4, 2, 32, 16, 4, 8, 15),      # chunk straddles a page boundary
+]
+
+
+@pytest.mark.parametrize("case", PREFILL_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_prefill(case, dtype):
+    B, C, H, KH, D, page, PPS, NP, start = case
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    q = jax.random.normal(ks[0], (B, C, H, D), dtype)
+    kp = jax.random.normal(ks[1], (NP, page, KH, D), dtype)
+    vp = jax.random.normal(ks[2], (NP, page, KH, D), dtype)
+    tables = jnp.arange(B * PPS, dtype=jnp.int32).reshape(B, PPS) % NP
+    kv_len = start + C
+    assert kv_len <= PPS * page
+    out = paged_flash_prefill(q, kp, vp, tables, start, kv_len,
+                              interpret=True)
+    ref = paged_prefill_attention_ref(q, kp, vp, tables, start, kv_len)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# shard_map variants (simulated mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh4():
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices; run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(1, 4)
+
+
+def test_paged_attention_sharded_matches_unsharded(mesh4):
+    """shard_map over the kv-head axis (8 kv heads / 4 shards): per-shard
+    kernels must reproduce the single-device kernel bit-for-bit — the
+    heads are independent, no collective touches the math."""
+    B, H, KH, D, page, PPS, NP = 2, 16, 8, 32, 16, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(41), 5)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NP, page, KH, D))
+    vp = jax.random.normal(ks[2], (NP, page, KH, D))
+    tables = jax.random.randint(ks[3], (B, PPS), 0, NP)
+    lens = jax.random.randint(ks[4], (B,), 1, PPS * page + 1)
+    ref = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    out = paged_attention_sharded(q, kp, vp, tables, lens, mesh=mesh4,
+                                  interpret=True)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=0, atol=0)
+
+
+def test_fused_decode_attention_sharded_matches_unsharded(mesh4):
+    B, H, KH, D, page, PPS, NP, Kt = 2, 8, 4, 32, 16, 2, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(42), 6)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NP, page, KH, D))
+    vp = jax.random.normal(ks[2], (NP, page, KH, D))
+    kt = jax.random.normal(ks[3], (B, Kt, KH, D))
+    vt = jax.random.normal(ks[4], (B, Kt, KH, D))
+    tables = jax.random.randint(ks[5], (B, PPS), 0, NP)
+    lens = jnp.asarray([16, 9], jnp.int32)
+    tail_lens = jnp.asarray([2, 4], jnp.int32)
+    ref = fused_decode_attention(q, kp, vp, tables, lens, kt, vt,
+                                 tail_lens, interpret=True)
+    out = fused_decode_attention_sharded(q, kp, vp, tables, lens, kt, vt,
+                                         tail_lens, mesh=mesh4,
+                                         interpret=True)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=0, atol=0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,16 +1,27 @@
 """Cross-backend parity matrix: dense vs paged x greedy vs seeded top-p x
-MHA vs GQA x speculative on/off x single-device vs tensor-parallel mesh.
+MHA vs GQA x speculative on/off x single-device vs tensor-parallel mesh x
+kernel path on/off.
 
 One reference stream per (model, sampling) cell — the dense backend's
 legacy host-driven path on a single device — and every other combination
 must reproduce it token-for-token: the cache layout, the fused device
-loop, the draft-and-verify round, AND the 4-way sharded execution are all
-optimizations of the SAME sampler, never samplers of their own. Sharded
-logits differ from single-device by ~1e-6 (all-reduce accumulation
-order), but sampling is replicated over full logits, so the argmax /
-seeded top-p decision — and therefore the token stream — is identical.
-Fused/speculative runs must also complete without a single device->host
-logits transfer (the PR 2 ``TRANSFER_STATS`` hook), sharded or not.
+loop, the draft-and-verify round, the 4-way sharded execution, AND the
+``use_kernel`` hot path are all optimizations of the SAME sampler, never
+samplers of their own. Sharded logits differ from single-device by ~1e-6
+(all-reduce accumulation order) and the kernel path's split context+tail
+softmax reorders reductions similarly, but sampling is replicated over
+full logits, so the argmax / seeded top-p decision — and therefore the
+token stream — is identical. Fused/speculative runs must also complete
+without a single device->host logits transfer (the PR 2
+``TRANSFER_STATS`` hook), sharded or not.
+
+The ``use_kernel`` axis here exercises the engine-level dispatch end to
+end (on CPU that is the XLA twin of the fused kernel — same split
+attention, view caching, and deferred page commit); numerical parity of
+the actual Pallas kernels versus their jnp oracles is enforced at op
+level in ``test_kernels.py`` interpret-mode tests, which is where the
+kernel bodies run on non-TPU hosts without paying interpreter cost inside
+a whole engine loop.
 """
 import pytest
 
@@ -20,11 +31,16 @@ KW = dict(max_slots=3, max_seq_len=64, page_size=16)
 _REF = {}        # (arch, sampling) -> legacy dense reference stream
 
 
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["xla-ops", "kernel"])
 @pytest.mark.parametrize("spec", [0, 3], ids=["spec-off", "spec-on"])
 def test_backend_sampling_grouping_spec_matrix(grouped_lm, sampling, spec,
-                                               backend, mesh, engine_factory,
+                                               backend, mesh, use_kernel,
+                                               engine_factory,
                                                request_factory, run_engine):
     cfg, model, params = grouped_lm
+    if use_kernel and backend != "paged":
+        pytest.skip("the kernel path is a paged-backend optimization")
     kw = dict(KW)
     reqs = request_factory(cfg.vocab_size, n=3, plen=12, max_tokens=10,
                            **sampling)
@@ -43,12 +59,13 @@ def test_backend_sampling_grouping_spec_matrix(grouped_lm, sampling, spec,
     eng = engine_factory(
         model, params, backend=backend, spec_tokens=spec,
         draft=(model, params) if spec else None, mesh=mesh,
+        use_kernel=use_kernel,
         decode_steps_per_sync=1 if spec else 4, **kw)
     got, eng = run_engine(eng, reqs)
     tp = "1dev" if mesh is None else f"tp{mesh.shape['model']}"
     assert got == ref, (
-        f"{backend} spec={spec} {tp} diverged from the dense legacy "
-        f"single-device reference")
+        f"{backend} spec={spec} {tp} use_kernel={use_kernel} diverged "
+        f"from the dense legacy single-device reference")
     # the device-resident paths never ship logits to the host — sampling
     # stays replicated on the mesh, so sharding must not break this
     assert backends.TRANSFER_STATS["decode_logits_transfers"] == 0

@@ -69,11 +69,42 @@ def test_make_local_mesh_rejects_nonpositive():
         make_local_mesh(1, -2)
 
 
-def test_kernel_backend_refuses_mesh(qwen, engine_factory, mesh4):
+def test_kernel_backend_serves_under_mesh(qwen, engine_factory, mesh4,
+                                          request_factory, run_engine):
+    """use_kernel under a mesh is no longer rejected: the decode kernels
+    run per-shard via shard_map over the kv-head axis (qwen's 4 MHA kv
+    heads divide 4 shards), token-identical to the unsharded non-kernel
+    engine."""
     cfg, model, params = qwen
-    with pytest.raises(ValueError, match="use_kernel"):
-        engine_factory(model, params, backend="paged", use_kernel=True,
-                       mesh=mesh4)
+    reqs = request_factory(cfg.vocab_size, n=3, plen=12, max_tokens=10)
+    ref_eng = engine_factory(model, params, backend="paged",
+                             max_seq_len=64, page_size=16)
+    ref, _ = run_engine(ref_eng, reqs)
+    backends.reset_transfer_stats()
+    eng = engine_factory(model, params, backend="paged", use_kernel=True,
+                         mesh=mesh4, max_seq_len=64, page_size=16)
+    got, eng = run_engine(eng, reqs)
+    assert got == ref
+    assert backends.TRANSFER_STATS["decode_logits_transfers"] == 0
+    assert eng.backend._kernel_sharded
+
+
+def test_kernel_backend_mesh_gqa_fallback(llama, engine_factory, mesh4,
+                                          request_factory, run_engine):
+    """GQA head counts that don't divide the model axis (llama's 2 kv
+    heads on 4 shards) can't shard_map the kernel — the backend must fall
+    back to the sharded reference path, still token-identical."""
+    cfg, model, params = llama
+    assert cfg.num_kv_heads % N_SHARDS != 0
+    reqs = request_factory(cfg.vocab_size, n=3, plen=12, max_tokens=10)
+    ref_eng = engine_factory(model, params, backend="paged",
+                             max_seq_len=64, page_size=16)
+    ref, _ = run_engine(ref_eng, reqs)
+    eng = engine_factory(model, params, backend="paged", use_kernel=True,
+                         mesh=mesh4, max_seq_len=64, page_size=16)
+    got, eng = run_engine(eng, reqs)
+    assert got == ref
+    assert not eng.backend._kernel_sharded
 
 
 # -- placement invariants ----------------------------------------------------
