@@ -78,7 +78,6 @@ def main(fast: bool = False, smoke: bool = False) -> dict:
     recs = {r.request_id: r for r in sysd.metrics.records if r.streamed}
     ttfts = sorted(r.ttft for r in recs.values())
     e2es = sorted(r.e2e for r in recs.values())
-    gaps = sorted(g for r in recs.values() for g in r.itl)
     s = sysd.metrics.summary()
     probe = run_cancel_probe()
 

@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Pretty firstlint runner: clickable file:line findings for editors/CI logs.
+
+    PYTHONPATH=src python scripts/lint_findings.py [paths...]
+
+Wraps ``python -m repro.analysis --format=json`` and prints one
+``path:line:col`` line per finding (the format terminals and editors link),
+grouped by rule, plus the suppression count so waivers stay visible.
+Exit code mirrors the analyzer: 0 clean, 1 findings.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+
+def main(argv):
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    paths = argv or ["src", "tests", "benchmarks", "scripts", "examples"]
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *paths, "--format=json"],
+        cwd=repo, capture_output=True, text=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(repo / "src")})
+    if proc.returncode not in (0, 1):
+        sys.stderr.write(proc.stdout + proc.stderr)
+        return proc.returncode
+    doc = json.loads(proc.stdout)
+    by_rule: dict = {}
+    for f in doc["findings"]:
+        by_rule.setdefault(f["rule"], []).append(f)
+    for rule in sorted(by_rule):
+        print(f"{rule} ({len(by_rule[rule])}):")
+        for f in by_rule[rule]:
+            print(f"  {f['path']}:{f['line']}:{f['col']}  {f['message']}")
+    print(f"{doc['files_checked']} files checked, "
+          f"{len(doc['findings'])} findings, "
+          f"{doc['suppressed']} suppressed")
+    return 1 if doc["findings"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,28 @@
+"""firstlint — AST-based invariant checker for the serving stack.
+
+The engine's hot paths rest on contracts that are cheap to break and
+expensive to debug at runtime: the zero-logits-transfer rule on the fused
+decode path, the XLA twin's cached context view that must be invalidated
+at every ``PagedKVCache``/pool mutation site, Pallas kernel bodies that
+silently miscompile when branched on tracers or left unguarded on dead
+grid steps, buffer donation, and the typed /v1 wire envelope. ``firstlint``
+walks the repo's ASTs with a shared visitor framework and enforces those
+contracts at review time — the static complement of what the parity
+matrix and ``TRANSFER_STATS`` only catch dynamically.
+
+Usage::
+
+    python -m repro.analysis src tests [--format=json]
+
+Findings are suppressed inline with a reason::
+
+    np.asarray(x)  # firstlint: disable=host-sync-in-hot-path -- host wrapper
+
+See docs/ANALYSIS.md for the rule catalogue.
+"""
+from repro.analysis.framework import (Finding, ModuleInfo, Rule,
+                                      analyze_paths, analyze_source)
+from repro.analysis.rules import ALL_RULES, get_rules
+
+__all__ = ["Finding", "ModuleInfo", "Rule", "ALL_RULES", "get_rules",
+           "analyze_paths", "analyze_source"]

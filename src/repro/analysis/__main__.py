@@ -1,0 +1,67 @@
+"""Command-line entry point: ``python -m repro.analysis [paths...]``.
+
+Exit status: 0 when clean, 1 when there are unsuppressed findings (or
+unparsable files), 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Sequence
+
+from repro.analysis.framework import analyze_paths, render
+from repro.analysis.rules import RULES_BY_NAME, get_rules
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "scripts", "examples")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="firstlint: AST invariant checker for the FIRST "
+                    "serving stack (hot-path syncs, cache invalidation, "
+                    "Pallas kernel safety, donation, wire schemas)")
+    parser.add_argument(
+        "paths", nargs="*",
+        help="files or directories to check (default: "
+             f"{' '.join(DEFAULT_PATHS)}, skipping ones that don't exist)")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="output format (default: text)")
+    parser.add_argument(
+        "--rules", metavar="NAME[,NAME...]",
+        help="comma-separated subset of rules to run")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the available rules and exit")
+    return parser
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for name, cls in sorted(RULES_BY_NAME.items()):
+            print(f"{name}: {cls.description}")
+        return 0
+    try:
+        rules = get_rules(
+            [n.strip() for n in args.rules.split(",") if n.strip()]
+            if args.rules else None)
+    except KeyError as exc:
+        print(f"error: {exc.args[0]}", file=sys.stderr)
+        return 2
+    paths = args.paths or [p for p in DEFAULT_PATHS]
+    report = analyze_paths(paths, rules)
+    if report.files_checked == 0 and not report.findings:
+        print("firstlint: no python files found under "
+              f"{' '.join(paths)}", file=sys.stderr)
+    if args.format == "json":
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(render(report, "text"))
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""firstlint rule registry."""
+from __future__ import annotations
+
+from repro.analysis.framework import Rule
+from repro.analysis.rules.cache_invalidation import CacheInvalidationRule
+from repro.analysis.rules.donation import DonationSafetyRule
+from repro.analysis.rules.host_sync import HostSyncRule
+from repro.analysis.rules.pallas_safety import PallasKernelSafetyRule
+from repro.analysis.rules.wire_schema import WireSchemaRule
+
+ALL_RULES: tuple[type[Rule], ...] = (
+    HostSyncRule,
+    CacheInvalidationRule,
+    PallasKernelSafetyRule,
+    DonationSafetyRule,
+    WireSchemaRule,
+)
+
+RULES_BY_NAME = {cls.name: cls for cls in ALL_RULES}
+
+
+def get_rules(names: list[str] | None = None) -> list[Rule]:
+    """Instantiate the selected rules (all of them by default)."""
+    if not names:
+        return [cls() for cls in ALL_RULES]
+    unknown = [n for n in names if n not in RULES_BY_NAME]
+    if unknown:
+        known = ", ".join(sorted(RULES_BY_NAME))
+        raise KeyError(f"unknown rule(s) {unknown}; known rules: {known}")
+    return [RULES_BY_NAME[n]() for n in names]

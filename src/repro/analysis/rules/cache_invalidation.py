@@ -1,0 +1,179 @@
+"""cache-invalidation: pool/table mutations must invalidate derived state.
+
+Two contracts from the paged serving stack (PR 9's XLA twin):
+
+1. **Allocator version bump** — in a class that maintains a
+   ``table_version`` counter (``PagedKVCache``), every method that mutates
+   the block tables (``self._tables`` — directly, through a subscript, or
+   through a local alias) must bump ``self.table_version`` in the same
+   method. The fused decode path caches device-resident tables keyed on
+   that counter; an unbumped mutation serves stale tables silently.
+
+2. **Cached-view invalidation** — in a class that defines an
+   ``_invalidate_view`` hook (``PagedBackend``), every method that mutates
+   the page pools (``self.pools`` / ``self.cache``) or re-uploads the
+   device table pair (``self._dev_tables``) must either call
+   ``self._invalidate_view()`` or maintain ``self._ctx_view`` in place
+   (assign it from the mutating call, the fused-loop contract) in the same
+   method. ``__init__`` (no committed KV yet) and the hook itself are
+   exempt. This keeps the hand-enumerated mutation-site inventory in
+   ``serving/backends.py`` from drifting: deleting any one invalidation
+   call makes this rule fail.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import is_self_attr
+from repro.analysis.framework import Finding, ModuleInfo, Rule
+
+POOL_ATTRS = ("pools", "cache", "_dev_tables")
+VIEW_ATTR = "_ctx_view"
+INVALIDATE_HOOK = "_invalidate_view"
+TABLES_ATTR = "_tables"
+VERSION_ATTR = "table_version"
+MUTATOR_METHODS = {"append", "pop", "insert", "extend", "remove", "clear",
+                   "setdefault", "update"}
+
+
+def _assign_target_attrs(stmt: ast.stmt) -> set[str]:
+    """self.X attributes assigned by a statement (incl. tuple targets)."""
+    out: set[str] = set()
+    targets: list[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    flat: list[ast.AST] = []
+    while targets:
+        t = targets.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            targets.extend(t.elts)
+        else:
+            flat.append(t)
+    for t in flat:
+        if is_self_attr(t):
+            out.add(t.attr)
+    return out
+
+
+def _methods(cls: ast.ClassDef) -> list[ast.FunctionDef]:
+    return [n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _method_assigns(method: ast.AST, attr: str) -> bool:
+    for node in ast.walk(method):
+        if isinstance(node, ast.stmt) and attr in _assign_target_attrs(node):
+            return True
+    return False
+
+
+def _calls_hook(method: ast.AST, hook: str) -> bool:
+    for node in ast.walk(method):
+        if isinstance(node, ast.Call) and is_self_attr(node.func, hook):
+            return True
+    return False
+
+
+def _rooted_at(node: ast.AST, attr: str, aliases: set[str]) -> bool:
+    """Does the access chain bottom out at ``self.<attr>`` or an alias?"""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        if is_self_attr(node, attr):
+            return True
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id in aliases
+    return is_self_attr(node, attr)
+
+
+def _tables_aliases(method: ast.AST) -> set[str]:
+    """Local names bound to ``self._tables`` or an element of it."""
+    aliases: set[str] = set()
+    for node in ast.walk(method):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            value = node.value
+            # table = self._tables[x]  |  t = self._tables.get(x, ...)
+            if isinstance(value, ast.Call):
+                value = value.func
+            if _rooted_at(value, TABLES_ATTR, set()):
+                aliases.add(node.targets[0].id)
+    return aliases
+
+
+def _mutates_tables(method: ast.AST) -> ast.AST | None:
+    """First node that mutates the block tables, else None."""
+    aliases = _tables_aliases(method)
+    for node in ast.walk(method):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) \
+                        and _rooted_at(t, TABLES_ATTR, aliases):
+                    return node
+                if is_self_attr(t, TABLES_ATTR):
+                    return node
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if _rooted_at(t, TABLES_ATTR, aliases):
+                    return node
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in MUTATOR_METHODS \
+                and _rooted_at(node.func.value, TABLES_ATTR, aliases):
+            # .get() and reads are not mutations; only the mutator set
+            return node
+    return None
+
+
+class CacheInvalidationRule(Rule):
+    name = "cache-invalidation"
+    description = ("block-table mutations must bump table_version; pool "
+                   "mutations must invalidate the cached context view")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(mod, node)
+
+    def _check_class(self, mod: ModuleInfo,
+                     cls: ast.ClassDef) -> Iterator[Finding]:
+        methods = _methods(cls)
+        names = {m.name for m in methods}
+        init = next((m for m in methods if m.name == "__init__"), None)
+
+        # contract 1: table_version bump
+        has_version = init is not None and _method_assigns(init, VERSION_ATTR)
+        if has_version:
+            for m in methods:
+                if m.name == "__init__":
+                    continue
+                site = _mutates_tables(m)
+                if site is not None and not _method_assigns(m, VERSION_ATTR):
+                    yield self.finding(
+                        mod, site,
+                        f"{cls.name}.{m.name} mutates self.{TABLES_ATTR} "
+                        f"without bumping self.{VERSION_ATTR} — "
+                        "device-resident block tables go stale silently")
+
+        # contract 2: cached-view invalidation
+        if INVALIDATE_HOOK not in names:
+            return
+        for m in methods:
+            if m.name in ("__init__", INVALIDATE_HOOK):
+                continue
+            touched = sorted(
+                a for a in POOL_ATTRS if _method_assigns(m, a))
+            if not touched:
+                continue
+            if _calls_hook(m, INVALIDATE_HOOK):
+                continue
+            if _method_assigns(m, VIEW_ATTR):
+                continue        # fused-loop contract: view advanced in place
+            yield self.finding(
+                mod, m,
+                f"{cls.name}.{m.name} mutates self.{' / self.'.join(touched)} "
+                f"without calling self.{INVALIDATE_HOOK}() (or maintaining "
+                f"self.{VIEW_ATTR} in place) — the XLA twin's cached "
+                "context view would serve stale KV")

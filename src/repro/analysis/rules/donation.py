@@ -1,0 +1,238 @@
+"""donation-safety: never read a buffer after donating it.
+
+The serving backends donate their big buffers (KV pools, slot caches,
+decode state) into every jitted step so XLA reuses the memory in place.
+On TPU a donated buffer is *gone* after the call — reading it afterwards
+returns garbage or raises, and on CPU (where donation is silently
+ignored) the bug hides until the code first runs on real hardware.
+
+The rule collects every ``jax.jit(..., donate_argnums=...)`` registration
+(decorator, plain assignment, per-shape jit dicts like
+``self._fused[K] = jax.jit(...)``) scoped to its class, then checks each
+call site: an argument in a donated position that is a plain variable or
+``self.`` attribute must be rebound by the call statement itself (the
+``x, self.pools = f(self.params, self.pools, ...)`` idiom) — otherwise
+any later read of it in the same function is flagged.
+
+When one key holds several registrations (per-K dicts), only positions
+donated under every registration are enforced; non-literal
+``donate_argnums`` disables checking for that key (nothing provable).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import (ImportMap, call_key, is_self_attr,
+                                    literal_argnums, resolves_to)
+from repro.analysis.framework import Finding, ModuleInfo, Rule
+
+# identity of a donated operand: ("name", x) for locals, ("self", x) for
+# instance attributes
+Ident = tuple[str, str]
+
+
+def _ident(node: ast.AST) -> Ident | None:
+    if isinstance(node, ast.Name):
+        return ("name", node.id)
+    if is_self_attr(node):
+        return ("self", node.attr)
+    return None
+
+
+def _unwrap_partial(imports: ImportMap, node: ast.AST) -> ast.AST:
+    while (isinstance(node, ast.Call)
+           and resolves_to(imports, node.func, "functools.partial")
+           and node.args):
+        node = node.args[0]
+    return node
+
+
+def _donate_kw(call: ast.Call) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return kw.value
+    return None
+
+
+class _Registry:
+    """(class name | None, callable key) -> donated positions."""
+
+    def __init__(self) -> None:
+        self._regs: dict[tuple[str | None, str], list] = {}
+
+    def add(self, cls: str | None, key: str,
+            donated: frozenset[int] | None) -> None:
+        self._regs.setdefault((cls, key), []).append(donated)
+
+    def donated(self, cls: str | None, key: str) -> frozenset[int]:
+        regs = self._regs.get((cls, key)) or self._regs.get((None, key))
+        if not regs:
+            return frozenset()
+        out: frozenset[int] | None = None
+        for d in regs:
+            if d is None:            # non-literal donate_argnums: unprovable
+                return frozenset()
+            out = d if out is None else (out & d)
+        return out or frozenset()
+
+
+def _collect_registry(tree: ast.Module, imports: ImportMap) -> _Registry:
+    reg = _Registry()
+
+    def visit(node: ast.AST, cls: str | None) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_cls = child.name if isinstance(child, ast.ClassDef) else cls
+            if isinstance(child, ast.Assign) \
+                    and isinstance(child.value, ast.Call) \
+                    and resolves_to(imports, child.value.func, "jax.jit"):
+                donated = literal_argnums(_donate_kw(child.value))
+                if donated:                       # frozenset() -> no donation
+                    for tgt in child.targets:
+                        key = call_key(tgt)
+                        if key is not None:
+                            reg.add(child_cls, key, donated)
+                elif donated is None:
+                    for tgt in child.targets:
+                        key = call_key(tgt)
+                        if key is not None:
+                            reg.add(child_cls, key, None)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in child.decorator_list:
+                    dec = _unwrap_partial(imports, dec) if not isinstance(
+                        dec, ast.Call) else dec
+                    if isinstance(dec, ast.Call) and (
+                            resolves_to(imports, dec.func, "jax.jit")
+                            or (resolves_to(imports, dec.func,
+                                            "functools.partial") and dec.args
+                                and resolves_to(imports, dec.args[0],
+                                                "jax.jit"))):
+                        donated = literal_argnums(_donate_kw(dec))
+                        if donated or donated is None:
+                            reg.add(child_cls, child.name, donated)
+            visit(child, child_cls)
+
+    visit(tree, None)
+    return reg
+
+
+# simple (non-compound) statements: the unit a donating call belongs to
+_SIMPLE_STMTS = (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.Expr,
+                 ast.Return, ast.Raise, ast.Assert, ast.Delete)
+
+
+def _simple_statements(fn: ast.FunctionDef):
+    for node in ast.walk(fn):
+        if isinstance(node, _SIMPLE_STMTS):
+            yield node
+
+
+def _stmt_rebinds(stmt: ast.stmt) -> set[Ident]:
+    """Identities (re)bound by a statement's assignment targets."""
+    out: set[Ident] = set()
+    targets: list[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    while targets:
+        t = targets.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            targets.extend(t.elts)
+        elif isinstance(t, ast.Starred):
+            targets.append(t.value)
+        else:
+            ident = _ident(t)
+            if ident is not None:
+                out.add(ident)
+    return out
+
+
+class DonationSafetyRule(Rule):
+    name = "donation-safety"
+    description = ("no reads of a buffer after it was passed through a "
+                   "donate_argnums call in the same scope")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        imports = ImportMap(mod.tree)
+        registry = _collect_registry(mod.tree, imports)
+
+        def visit(node: ast.AST, cls: str | None) -> Iterator[Finding]:
+            for child in ast.iter_child_nodes(node):
+                child_cls = child.name if isinstance(child, ast.ClassDef) \
+                    else cls
+                if isinstance(child,
+                              (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield from self._check_function(mod, registry,
+                                                    child_cls, child)
+                yield from visit(child, child_cls)
+
+        yield from visit(mod.tree, None)
+
+    def _check_function(self, mod: ModuleInfo, registry: _Registry,
+                        cls: str | None,
+                        fn: ast.FunctionDef) -> Iterator[Finding]:
+        # map each call node to its enclosing simple statement
+        stmt_of: dict[int, ast.stmt] = {}
+        for stmt in _simple_statements(fn):
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call):
+                    stmt_of[id(sub)] = stmt
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            key = call_key(call.func)
+            if key is None:
+                continue
+            donated = registry.donated(cls, key)
+            if not donated:
+                continue
+            stmt = stmt_of.get(id(call))
+            if stmt is None:
+                continue
+            rebound = _stmt_rebinds(stmt)
+            end = getattr(stmt, "end_lineno", stmt.lineno)
+            for pos in sorted(donated):
+                if pos >= len(call.args):
+                    continue
+                ident = _ident(call.args[pos])
+                if ident is None or ident in rebound:
+                    continue
+                read = self._first_read_after(fn, ident, end)
+                if read is not None:
+                    label = ident[1] if ident[0] == "name" \
+                        else f"self.{ident[1]}"
+                    yield self.finding(
+                        mod, read,
+                        f"'{label}' is read after being donated to "
+                        f"'{key}' (donate_argnums position {pos}, line "
+                        f"{stmt.lineno}) — donated buffers are dead after "
+                        "the call; rebind the result or copy first")
+
+    @staticmethod
+    def _first_read_after(fn: ast.FunctionDef, ident: Ident,
+                          after_line: int) -> ast.AST | None:
+        """First load of ``ident`` past ``after_line`` that is not preceded
+        by a rebinding store (linear source order — loops are approximated,
+        which is the conservative direction for straight-line jit glue)."""
+        events: list[tuple[int, int, str, ast.AST]] = []
+        for node in ast.walk(fn):
+            found = None
+            if ident[0] == "name" and isinstance(node, ast.Name) \
+                    and node.id == ident[1]:
+                found = node
+            elif ident[0] == "self" and is_self_attr(node, ident[1]):
+                found = node
+            if found is None:
+                continue
+            ctx = getattr(found, "ctx", None)
+            kind = "store" if isinstance(ctx, (ast.Store, ast.Del)) \
+                else "load"
+            events.append((found.lineno, found.col_offset, kind, found))
+        for line, _, kind, node in sorted(events, key=lambda e: (e[0], e[1])):
+            if line <= after_line:
+                continue
+            if kind == "store":
+                return None
+            return node
+        return None

@@ -1,0 +1,89 @@
+"""host-sync-in-hot-path: no device->host transfers inside jitted code.
+
+The fused decode path's contract is that logits (and everything else big)
+never cross to the host mid-loop — ``TRANSFER_STATS`` asserts it at run
+time for one path; this rule enforces the whole class statically. Any
+function whose body executes under ``jax.jit`` (decorated, registered via
+``jax.jit(f, ...)`` / ``partial`` wrappers, or reachable from one through
+same-module calls) must not:
+
+* call ``.item()`` or ``.block_until_ready()`` on anything,
+* call ``numpy.asarray`` / ``numpy.array`` / ``jax.device_get`` (tracer
+  -> host copy, or a silent constant-fold + transfer at trace time),
+* coerce a traced value with ``int(...)`` / ``float(...)`` (flagged for
+  bare-name / simple-subscript arguments; shape arithmetic on constants
+  is fine and not matched).
+
+Inside jit these either crash at trace time in the best case or, worse,
+silently pin a once-per-call sync on the hot path when jax manages to
+constant-fold them. Host wrappers (``fused_decode`` itself, the legacy
+``decode_batch`` sync points) are outside the hot set and stay free to
+sync — that is where the intended O(max_slots) payload crosses.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import ImportMap, dotted, hot_set
+from repro.analysis.framework import Finding, ModuleInfo, Rule
+
+_HOST_CALLS = {
+    "numpy.asarray": "numpy.asarray materializes the value on the host",
+    "numpy.array": "numpy.array materializes the value on the host",
+    "numpy.ascontiguousarray":
+        "numpy.ascontiguousarray materializes the value on the host",
+    "jax.device_get": "jax.device_get is an explicit device->host transfer",
+}
+
+_HOST_METHODS = {
+    "item": ".item() synchronizes and copies to the host",
+    "block_until_ready": ".block_until_ready() stalls the dispatch queue",
+    "tolist": ".tolist() synchronizes and copies to the host",
+}
+
+
+def _is_simple_coercion_arg(node: ast.AST) -> bool:
+    """int(x) / float(x[i]) style args that plausibly coerce a tracer."""
+    if isinstance(node, ast.Name):
+        return True
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+        return True
+    return False
+
+
+class HostSyncRule(Rule):
+    name = "host-sync-in-hot-path"
+    description = ("no .item()/np.asarray/device_get/int()/float() host "
+                   "syncs inside jit-reachable code")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        imports = ImportMap(mod.tree)
+        hot = hot_set(mod.tree, imports)
+        for fname, subtree in hot.subtrees():
+            yield from self._check_subtree(mod, imports, fname, subtree)
+
+    def _check_subtree(self, mod: ModuleInfo, imports: ImportMap,
+                       fname: str, subtree: ast.AST) -> Iterator[Finding]:
+        where = f"jit-reachable function '{fname}'"
+        for node in ast.walk(subtree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = imports.resolve(dotted(node.func))
+            if callee in _HOST_CALLS:
+                yield self.finding(
+                    mod, node, f"{_HOST_CALLS[callee]} — forbidden in "
+                    f"{where}")
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _HOST_METHODS:
+                yield self.finding(
+                    mod, node, f"{_HOST_METHODS[node.func.attr]} — "
+                    f"forbidden in {where}")
+                continue
+            if callee in ("int", "float") and len(node.args) == 1 \
+                    and not node.keywords \
+                    and _is_simple_coercion_arg(node.args[0]):
+                yield self.finding(
+                    mod, node, f"{callee}() on a traced value forces a "
+                    f"host sync — forbidden in {where}")

@@ -1,0 +1,248 @@
+"""pallas-kernel-safety: kernel bodies that lower correctly on TPU.
+
+Pallas kernels miscompile *silently* when these are broken — interpret
+mode (the CI stand-in) happily runs code the Mosaic lowering would reject
+or, worse, compile to garbage:
+
+1. **No Python branches on traced values** — ``if``/``while`` on anything
+   derived from ``pl.program_id``, a ref read, or ``pl.load`` takes one
+   side at trace time. Use ``pl.when`` / ``jnp.where``.
+2. **Guard ref stores with pl.when** — kernel grids here include dead
+   steps (pages past a sequence's context length, the init/finalize
+   steps of an online-softmax accumulator). A store to any ``*_ref`` /
+   ``*_scr`` parameter outside a ``pl.when``-guarded region runs on every
+   grid step, clobbering accumulators or committing garbage from absent
+   pages. Helper functions only ever called from guarded regions count
+   as guarded.
+3. **BlockSpec tiles align to the dtype tile** — literal block dims must
+   be multiples of 8 on the sublane (second-to-last) axis and 128 on the
+   lane (last) axis (the f32 minimum; bf16 needs 16 sublanes — the rule
+   checks the weaker bound it can know statically). Size-1 dims are
+   squeezed axes and exempt; symbolic dims are trusted (the wrappers pad
+   them via ``_pad_axis``/``_sublane``).
+
+Only modules that import ``jax.experimental.pallas`` are checked; kernel
+bodies are recognized by their ``*_ref``/``*_scr`` parameter convention
+or by being passed to ``pl.pallas_call``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import ImportMap, resolves_to
+from repro.analysis.framework import Finding, ModuleInfo, Rule
+
+PALLAS = "jax.experimental.pallas"
+REF_SUFFIXES = ("_ref", "_scr")
+SUBLANE, LANE = 8, 128
+
+
+def _imports_pallas(imports: ImportMap) -> bool:
+    return any(v.startswith(PALLAS) for v in imports.aliases.values())
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _ref_params(fn: ast.FunctionDef) -> set[str]:
+    return {n for n in _param_names(fn) if n.endswith(REF_SUFFIXES)}
+
+
+def _kernel_bodies(mod: ModuleInfo,
+                   imports: ImportMap) -> list[ast.FunctionDef]:
+    """Functions with >=2 ref-convention params, plus anything passed (via
+    a local ``partial`` alias) as the first argument of pl.pallas_call."""
+    fns = [n for n in ast.walk(mod.tree)
+           if isinstance(n, ast.FunctionDef)]
+    by_name = {f.name: f for f in fns}
+    bodies = {id(f): f for f in fns if len(_ref_params(f)) >= 2}
+    # name -> wrapped function, from `kernel = functools.partial(_fn, ...)`
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and resolves_to(imports, node.value.func,
+                                "functools.partial") \
+                and node.value.args \
+                and isinstance(node.value.args[0], ast.Name):
+            partial_of[node.targets[0].id] = node.value.args[0].id
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) \
+                and resolves_to(imports, node.func,
+                                f"{PALLAS}.pallas_call") and node.args:
+            first = node.args[0]
+            name = first.id if isinstance(first, ast.Name) else None
+            name = partial_of.get(name, name)
+            fn = by_name.get(name or "")
+            if fn is not None:
+                bodies[id(fn)] = fn
+    return list(bodies.values())
+
+
+def _is_pl_when(node: ast.AST, imports: ImportMap) -> bool:
+    return isinstance(node, ast.Call) \
+        and resolves_to(imports, node.func, f"{PALLAS}.when")
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _reads_ref_or_grid(node: ast.AST, refs: set[str],
+                       imports: ImportMap) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript) and isinstance(n.value, ast.Name) \
+                and n.value.id in refs:
+            return True
+        if isinstance(n, ast.Call) and resolves_to(
+                imports, n.func, f"{PALLAS}.program_id",
+                f"{PALLAS}.num_programs", f"{PALLAS}.load"):
+            return True
+    return False
+
+
+class PallasKernelSafetyRule(Rule):
+    name = "pallas-kernel-safety"
+    description = ("no Python branches on tracers, pl.when-guarded ref "
+                   "stores, sublane/lane-aligned literal BlockSpec tiles")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        imports = ImportMap(mod.tree)
+        if not _imports_pallas(imports):
+            return
+        for fn in _kernel_bodies(mod, imports):
+            yield from self._check_tracer_branches(mod, imports, fn)
+            yield from self._check_guarded_stores(mod, imports, fn)
+        yield from self._check_blockspecs(mod, imports)
+
+    # -- check 1: Python branches on traced values ---------------------------
+    def _check_tracer_branches(self, mod: ModuleInfo, imports: ImportMap,
+                               fn: ast.FunctionDef) -> Iterator[Finding]:
+        refs = _ref_params(fn)
+        tainted: set[str] = set()
+        assigns = [n for n in ast.walk(fn) if isinstance(n, ast.Assign)]
+        for _ in range(2):                      # cheap fixpoint, 2 passes
+            for node in assigns:
+                value_tainted = (
+                    _reads_ref_or_grid(node.value, refs, imports)
+                    or bool(_names_in(node.value) & tainted))
+                if value_tainted:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            tainted.add(t.id)
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if _reads_ref_or_grid(node.test, refs, imports) \
+                    or (_names_in(node.test) & tainted):
+                kind = "while" if isinstance(node, ast.While) else "if"
+                yield self.finding(
+                    mod, node,
+                    f"Python `{kind}` on a traced value in kernel body "
+                    f"'{fn.name}' — resolved once at trace time, not per "
+                    "grid step; use pl.when or jnp.where")
+
+    # -- check 2: unguarded ref stores ---------------------------------------
+    def _check_guarded_stores(self, mod: ModuleInfo, imports: ImportMap,
+                              fn: ast.FunctionDef) -> Iterator[Finding]:
+        refs = _ref_params(fn)
+        nested = {n.name: n for n in ast.walk(fn)
+                  if isinstance(n, ast.FunctionDef) and n is not fn}
+        guarded: set[str] = {
+            name for name, d in nested.items()
+            if any(_is_pl_when(dec, imports) for dec in d.decorator_list)}
+        # helper defs count as guarded once every call site sits inside an
+        # already-guarded def (fixpoint)
+        changed = True
+        while changed:
+            changed = False
+            for name, d in nested.items():
+                if name in guarded:
+                    continue
+                sites = self._call_sites(fn, name, nested)
+                if sites and all(s in guarded for s in sites):
+                    guarded.add(name)
+                    changed = True
+        owner: dict[int, str | None] = {}
+        self._map_owners(fn, None, nested, owner)
+        for node in ast.walk(fn):
+            target = None
+            if isinstance(node, ast.Assign):
+                target = next((t for t in node.targets
+                               if self._is_ref_store(t, refs)), None)
+            elif isinstance(node, ast.AugAssign) \
+                    and self._is_ref_store(node.target, refs):
+                target = node.target
+            if target is None:
+                continue
+            home = owner.get(id(node))
+            if home is not None and home in guarded:
+                continue
+            yield self.finding(
+                mod, node,
+                f"unguarded ref store in kernel body '{fn.name}': runs on "
+                "every grid step (absent pages / accumulator init included)"
+                " — wrap in a pl.when-guarded region")
+
+    @staticmethod
+    def _is_ref_store(target: ast.AST, refs: set[str]) -> bool:
+        return isinstance(target, ast.Subscript) \
+            and isinstance(target.value, ast.Name) \
+            and target.value.id in refs
+
+    def _call_sites(self, fn: ast.FunctionDef, name: str,
+                    nested: dict) -> set[str | None]:
+        """Names of the nested defs (or None for top level) that call
+        ``name``."""
+        owner: dict[int, str | None] = {}
+        self._map_owners(fn, None, nested, owner)
+        sites: set[str | None] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == name:
+                sites.add(owner.get(id(node)))
+        return sites
+
+    def _map_owners(self, node: ast.AST, home: str | None, nested: dict,
+                    owner: dict) -> None:
+        """Tag every node with the innermost nested def containing it."""
+        for child in ast.iter_child_nodes(node):
+            child_home = home
+            if isinstance(child, ast.FunctionDef) and child.name in nested:
+                child_home = child.name
+            owner[id(child)] = child_home
+            self._map_owners(child, child_home, nested, owner)
+
+    # -- check 3: BlockSpec literal tile alignment ---------------------------
+    def _check_blockspecs(self, mod: ModuleInfo,
+                          imports: ImportMap) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and resolves_to(imports, node.func,
+                                    f"{PALLAS}.BlockSpec")):
+                continue
+            shape = node.args[0] if node.args else None
+            if not isinstance(shape, (ast.Tuple, ast.List)) \
+                    or len(shape.elts) < 2:
+                continue
+            dims = [e.value if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int) else None
+                    for e in shape.elts]
+            lane, sub = dims[-1], dims[-2]
+            if lane is not None and lane > 1 and lane % LANE:
+                yield self.finding(
+                    mod, node,
+                    f"BlockSpec lane (last) dim {lane} is not a multiple "
+                    f"of {LANE} — the TPU lowering pads or rejects "
+                    "misaligned lane tiles")
+            if sub is not None and sub > 1 and sub % SUBLANE:
+                yield self.finding(
+                    mod, node,
+                    f"BlockSpec sublane dim {sub} is not a multiple of "
+                    f"{SUBLANE} (f32 tile; bf16 needs 16) — pad the axis "
+                    "like ops._pad_axis does")

@@ -26,7 +26,8 @@ class APIError(Exception):
         self.retry_after = retry_after
 
     def to_dict(self) -> dict:
-        err = {"message": self.message, "type": self.code, "code": self.code}
+        err: dict = {"message": self.message, "type": self.code,
+                     "code": self.code}
         if self.param is not None:
             err["param"] = self.param
         if self.retry_after is not None:

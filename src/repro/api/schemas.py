@@ -30,6 +30,7 @@ from __future__ import annotations
 import hashlib
 import json
 from dataclasses import dataclass, field, replace
+from typing import Any
 
 from repro.api.errors import InvalidRequestError
 
@@ -152,6 +153,9 @@ class _RequestBase:
 
     endpoint = "completions"              # class attr, set per subclass
 
+    def _prompt(self) -> int | list:
+        raise NotImplementedError         # each endpoint defines its prompt
+
     def _validate(self):
         if not self.model or not isinstance(self.model, str):
             raise InvalidRequestError("field 'model' is required",
@@ -187,6 +191,9 @@ class _RequestBase:
         they carry no content and MUST NOT be cached."""
         if self.prompt_hash:
             return self.prompt_hash
+        return self._ids_hash()
+
+    def _ids_hash(self) -> str | None:
         ids = self.prompt_token_ids
         if ids is None:
             return None
@@ -291,7 +298,7 @@ class ChatCompletionRequest(_RequestBase):
             for m in self.messages:
                 h.update(f"{m.role}\x00{m.content}\x00".encode())
             return h.hexdigest()[:32]
-        return _RequestBase.content_hash.fget(self)
+        return self._ids_hash()
 
     def validate(self) -> "ChatCompletionRequest":
         if self.prompt_tokens is None and not self.messages:
@@ -386,6 +393,11 @@ def to_wire(req) -> dict:
     """Version-tagged wire envelope for the gateway -> endpoint hop."""
     d = req.to_dict()
     return {"v": API_VERSION, "kind": d["object"], "data": d}
+
+
+def abort_wire(request_id: str) -> dict:
+    """Version-tagged control payload for the 'abort' endpoint function."""
+    return {"v": API_VERSION, "request_id": request_id}
 
 
 def from_wire(payload: dict):
@@ -526,7 +538,10 @@ class CompletionResponse(_ResponseBase):
 
     object = "text_completion"
 
-    to_dict = ChatCompletionResponse.to_dict
+    def to_dict(self) -> dict:
+        d = self._base_dict()
+        d["choices"] = [c.to_dict() for c in self.choices]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "CompletionResponse":
@@ -647,7 +662,7 @@ class BatchItem:
     ``parsed_body()`` so one malformed line becomes a per-request error
     instead of rejecting the whole batch."""
     custom_id: str
-    body: object                          # typed request OR its raw dict
+    body: Any                             # typed request OR its raw dict
     method: str = "POST"
     url: str = "/v1/completions"
 

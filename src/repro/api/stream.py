@@ -16,7 +16,7 @@ from repro.api.schemas import StreamDelta
 class StreamAssembler:
     """Reassemble a streamed response; call the instance with each frame."""
 
-    def __init__(self, clock=None):
+    def __init__(self, clock=None) -> None:
         self._clock = clock
         self.deltas: list[StreamDelta] = []
         self.tokens: list = []            # token ids (data plane)

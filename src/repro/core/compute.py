@@ -661,8 +661,7 @@ class ComputeClient:
             return fut
 
         def _deliver():
-            ep.execute("abort", {"v": "v1", "request_id": request_id}) \
-                .chain(fut)
+            ep.execute("abort", schemas.abort_wire(request_id)).chain(fut)
 
         self.loop.call_after(self.dispatch_latency, _deliver)
         return fut

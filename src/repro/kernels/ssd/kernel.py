@@ -45,7 +45,9 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
     y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)   # (Q,P)
     y = y + y_off * jnp.exp(a_cs)[:, None]
-    y_ref[0] = y.astype(y_ref.dtype)
+    # every grid step is a live chunk (S % chunk == 0): the per-chunk output
+    # store and state advance are unconditional by design, not dead steps
+    y_ref[0] = y.astype(y_ref.dtype)  # firstlint: disable=pallas-kernel-safety -- grid has no dead steps; each ci writes its own block
 
     # state update: state' = exp(a_sum)*state + (x * exp(a_sum - a_cs))^T @ B
     a_sum = a_cs[-1]
@@ -53,7 +55,7 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
     xw = x * decay_in[:, None]                # (Q, P)
     upd = jax.lax.dot_general(xw, B, (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)     # (P, N)
-    state_scr[...] = state * jnp.exp(a_sum) + upd
+    state_scr[...] = state * jnp.exp(a_sum) + upd  # firstlint: disable=pallas-kernel-safety -- carried SSM state must advance on every chunk
 
     @pl.when(ci == num_chunks - 1)
     def _final():

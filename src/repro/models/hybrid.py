@@ -138,7 +138,6 @@ def prefill(params, x, cfg, *, max_len=None, window=0):
 
 def decode_step(params, x, cfg, cache, *, window=0):
     """x: (B,1,D). Returns (hidden (B,1,D), new cache)."""
-    B = x.shape[0]
     positions = cache["len"][:, None]
     grouped, G, per = _group_params(params, cfg)
     sp = params.get("shared")

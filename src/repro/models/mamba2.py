@@ -177,7 +177,6 @@ def mamba_layer(x, p, cfg, *, state=None):
             tail = jnp.pad(tail, ((0, 0), (K1 - S, 0), (0, 0)))
         new_state = {"conv": tail, "ssm": final}
     else:
-        K = cfg.ssm.conv_kernel
         window = jnp.concatenate([state["conv"], xBC], axis=1)  # (B, K, Ch)
         conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
         xBC1 = jax.nn.silu(conv_out)[:, None, :]               # (B,1,Ch)

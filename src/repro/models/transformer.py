@@ -119,7 +119,6 @@ def decode_step(params, x, cfg, cache, *, window=0):
     The layer scan only emits each layer's new kv vectors; the stacked cache
     is updated with ONE batched scatter afterwards (per-layer in-scan cache
     updates cost a full-cache round trip per layer — §Perf)."""
-    B = x.shape[0]
     positions = cache["len"][:, None]
 
     def body(h, xs):

@@ -986,8 +986,15 @@ class PagedBackend:
 
     def _invalidate_view(self) -> None:
         """Drop the cached context view after any pool mutation outside
-        the fused loop (prefill writes, legacy decode, COW, spec verify,
-        swap-in) — the next fused call re-gathers."""
+        the fused loop — the next fused call re-gathers. Seven sites:
+        prefill writes (``_one_shot``, ``_compute_chunk``), legacy decode
+        (``decode_batch``), COW resolution (``_resolve_cow``), the device
+        table re-upload (``_refresh_tables``), spec-decode verification
+        (``spec_verify``), and swap-in. ``fused_decode`` itself is exempt:
+        it maintains ``self._ctx_view`` in place from the donated call's
+        return. The cache-invalidation firstlint rule enforces this
+        inventory — a new pool-mutating method without an invalidation
+        call (or in-place view maintenance) fails CI."""
         self._ctx_view = None
 
     def _fused_kernel_impl(self, params, pools, view, st, tables, lens, *,
@@ -1117,7 +1124,6 @@ class PagedBackend:
         otherwise the device-resident copies carry over. Returns
         (tokens (K_eff, max_slots), produced, done) as numpy arrays.
         """
-        ps = self.page_size
         K_eff = self._reserve_headroom(max(1, K))
         self._resolve_cow(K_eff)
         self._refresh_tables(force=host_state is not None)

@@ -45,7 +45,6 @@ def make_train_step(model: LM, opt_cfg: AdamWConfig,
                                             mbs)
             grads = jax.tree.map(lambda g: g / n, grads)
             loss = loss_sum / n
-            metrics = {}
 
         params, opt_state, opt_metrics = adamw_update(params, grads,
                                                       opt_state, opt_cfg)

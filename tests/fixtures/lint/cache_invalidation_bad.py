@@ -1,0 +1,32 @@
+"""Fixture: table/pool mutations missing their invalidation (all flagged)."""
+
+
+class Cache:
+    def __init__(self):
+        self._tables = {}
+        self.table_version = 0
+
+    def allocate(self, seq):
+        self._tables[seq] = [0]       # no version bump
+
+    def grow(self, seq, page):
+        table = self._tables[seq]
+        table.append(page)            # alias mutation, no version bump
+
+    def drop(self, seq):
+        del self._tables[seq]         # delete, no version bump
+
+
+class Backend:
+    def __init__(self):
+        self.pools = {}
+        self._ctx_view = None
+
+    def _invalidate_view(self):
+        self._ctx_view = None
+
+    def prefill(self, new_pools):
+        self.pools = new_pools        # no invalidation call
+
+    def reupload(self, tables):
+        self._dev_tables = tables     # no invalidation call

@@ -1,0 +1,41 @@
+"""Fixture: every mutation bumps/invalidates (or is exempt by contract)."""
+
+
+class Cache:
+    def __init__(self):
+        self._tables = {}
+        self._lens = {}
+        self.table_version = 0
+
+    def allocate(self, seq):
+        self._tables[seq] = [0]
+        self.table_version += 1
+
+    def grow(self, seq, page):
+        table = self._tables[seq]
+        table.append(page)
+        self.table_version += 1
+
+    def advance(self, seq):
+        # lens-only mutation: intentionally NOT a table mutation
+        self._lens[seq] = self._lens.get(seq, 0) + 1
+
+    def lookup(self, seq):
+        return self._tables.get(seq)  # reads never need a bump
+
+
+class Backend:
+    def __init__(self):
+        self.pools = {}
+        self._ctx_view = None
+
+    def _invalidate_view(self):
+        self._ctx_view = None
+
+    def prefill(self, new_pools):
+        self.pools = new_pools
+        self._invalidate_view()
+
+    def fused_decode(self, step):
+        # fused-loop contract: view maintained in place by the donated call
+        self.pools, self._ctx_view = step(self.pools, self._ctx_view)

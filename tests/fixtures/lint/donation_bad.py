@@ -1,0 +1,20 @@
+"""Fixture: buffers read after being donated (all flagged)."""
+import jax
+
+
+def _step(params, buf):
+    return buf + 1
+
+
+class Runner:
+    def __init__(self):
+        self.step = jax.jit(_step, donate_argnums=(1,))
+        self.buf = None
+
+    def run_local(self, params, buf):
+        out = self.step(params, buf)
+        return out + buf              # buf is dead after the call
+
+    def run_attr(self, params):
+        out = self.step(params, self.buf)
+        return out + self.buf         # self.buf is dead after the call

@@ -1,0 +1,25 @@
+"""Fixture: the rebind-in-place donation idiom the backends use."""
+import jax
+
+
+def _step(params, buf):
+    return buf + 1, buf * 0
+
+
+class Runner:
+    def __init__(self):
+        self.step = jax.jit(_step, donate_argnums=(1,))
+        self.buf = None
+
+    def run_local(self, params, buf):
+        out, buf = self.step(params, buf)     # rebound by the call stmt
+        return out + buf
+
+    def run_attr(self, params):
+        out, self.buf = self.step(params, self.buf)
+        return out + self.buf
+
+    def run_temp(self, params, buf):
+        # donating a temporary (not a named variable) is always fine
+        out, _ = self.step(params, buf * 2)
+        return out + buf

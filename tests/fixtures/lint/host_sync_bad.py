@@ -1,0 +1,21 @@
+"""Fixture: host syncs inside jit-reachable code (all flagged)."""
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_step(x):
+    n = int(x)                        # coercion forces a host sync
+    y = np.asarray(x)                 # host materialization
+    z = x.item()                      # host sync
+    return n + y + z
+
+
+def _inner(v):
+    jax.device_get(v)                 # explicit transfer
+    return v.block_until_ready()      # dispatch stall
+
+
+step2 = jax.jit(partial(_inner))

@@ -1,0 +1,14 @@
+"""Fixture: kernel-safety violations (all flagged)."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bad_kernel(x_ref, o_ref, acc_scr):
+    i = pl.program_id(0)
+    if i == 0:                                     # python branch on tracer
+        acc_scr[...] = jnp.zeros_like(acc_scr)     # unguarded store
+    o_ref[...] = acc_scr[...] + x_ref[...]         # unguarded store
+
+
+def misaligned_spec():
+    return pl.BlockSpec((4, 100), lambda i: (i, 0))   # 4 % 8, 100 % 128

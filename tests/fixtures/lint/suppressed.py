@@ -1,0 +1,12 @@
+"""Fixture: every violation explicitly waived (0 findings, 3 suppressed)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    a = np.asarray(x)  # firstlint: disable=host-sync-in-hot-path -- fixture
+    # firstlint: disable-next-line=host-sync-in-hot-path -- fixture
+    b = x.item()
+    c = x.tolist()  # firstlint: disable=all -- fixture
+    return a + b + c

@@ -1,0 +1,11 @@
+"""Fixture: file-level waiver silences the whole module."""
+# firstlint: disable-file=wire-schema -- fixture exercises file waivers
+API_VERSION = "v1"
+
+
+def send(ep, rid):
+    return ep.execute("abort", {"v": "v1", "request_id": rid})
+
+
+def send2(ep, rid):
+    return ep.execute("abort", {"v": API_VERSION, "request_id": rid})

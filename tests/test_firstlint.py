@@ -1,0 +1,220 @@
+"""firstlint (repro.analysis) — rule fixtures, suppressions, CLI, and the
+run-on-repo regression that keeps the serving stack's invariants enforced.
+
+Each rule has a bad fixture (every violation flagged) and a good fixture
+(the idiomatic pattern, zero findings). The mutation regressions textually
+delete each invalidation call / version bump from the REAL serving sources
+and assert the cache-invalidation rule notices — that is the property the
+issue gates on: the hand-enumerated invalidation inventory cannot drift.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source, get_rules
+from repro.analysis.framework import Report
+from repro.analysis.rules import ALL_RULES, RULES_BY_NAME
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+REPO_PATHS = ["src", "tests", "benchmarks", "scripts", "examples"]
+
+
+def run_on(path: pathlib.Path, rules=None):
+    kept, waived = analyze_source(path.read_text(), str(path),
+                                  get_rules(rules))
+    return kept, waived
+
+
+def cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: bad flags, good passes
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("host-sync-in-hot-path", "host_sync_bad.py", "host_sync_good.py", 5),
+    ("cache-invalidation", "cache_invalidation_bad.py",
+     "cache_invalidation_good.py", 5),
+    ("pallas-kernel-safety", "pallas_safety_bad.py",
+     "pallas_safety_good.py", 5),
+    ("donation-safety", "donation_bad.py", "donation_good.py", 2),
+    ("wire-schema", "wire_schema_bad.py", "wire_schema_good.py", 3),
+]
+
+
+@pytest.mark.parametrize("rule,bad,good,n_bad",
+                         CASES, ids=[c[0] for c in CASES])
+def test_rule_flags_bad_fixture(rule, bad, good, n_bad):
+    kept, waived = run_on(FIXTURES / bad)
+    assert len(kept) == n_bad, [f.render() for f in kept]
+    assert {f.rule for f in kept} == {rule}
+    assert waived == 0
+    for f in kept:
+        assert f.line > 0 and f.message
+
+
+@pytest.mark.parametrize("rule,bad,good,n_bad",
+                         CASES, ids=[c[0] for c in CASES])
+def test_rule_passes_good_fixture(rule, bad, good, n_bad):
+    kept, waived = run_on(FIXTURES / good)
+    assert kept == [], [f.render() for f in kept]
+    assert waived == 0
+
+
+def test_rule_registry_complete():
+    assert len(ALL_RULES) == 5
+    assert set(RULES_BY_NAME) == {c[0] for c in CASES}
+    with pytest.raises(KeyError):
+        get_rules(["no-such-rule"])
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_inline_nextline_and_all_suppressions():
+    kept, waived = run_on(FIXTURES / "suppressed.py")
+    assert kept == [], [f.render() for f in kept]
+    assert waived == 3          # same-line, next-line, disable=all
+
+
+def test_file_level_suppression():
+    kept, waived = run_on(FIXTURES / "suppressed_file.py")
+    assert kept == []
+    assert waived == 2
+
+
+def test_suppression_is_rule_specific():
+    src = (
+        "import jax\nimport numpy as np\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np.asarray(x)"
+        "  # firstlint: disable=wire-schema -- wrong rule name\n")
+    kept, waived = analyze_source(src, "t.py", get_rules())
+    assert len(kept) == 1 and kept[0].rule == "host-sync-in-hot-path"
+    assert waived == 0
+
+
+def test_parse_error_is_unsuppressable_finding():
+    kept, _ = analyze_source("def broken(:\n", "t.py", get_rules())
+    assert len(kept) == 1 and kept[0].rule == "parse-error"
+
+
+# ---------------------------------------------------------------------------
+# JSON output schema + CLI behavior
+# ---------------------------------------------------------------------------
+
+def test_json_output_schema_and_exit_code():
+    proc = cli(str(FIXTURES / "wire_schema_bad.py"), "--format=json")
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["version"] == 1 and doc["tool"] == "firstlint"
+    assert doc["files_checked"] == 1 and doc["suppressed"] == 0
+    assert doc["counts"] == {"wire-schema": 3}
+    assert len(doc["findings"]) == 3
+    for f in doc["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message"}
+
+
+def test_cli_clean_file_exits_zero():
+    proc = cli(str(FIXTURES / "wire_schema_good.py"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 findings" in proc.stdout
+
+
+def test_cli_rule_subset_and_list_rules():
+    proc = cli(str(FIXTURES / "host_sync_bad.py"), "--rules=wire-schema")
+    assert proc.returncode == 0          # host-sync findings not selected
+    proc = cli("--list-rules")
+    assert proc.returncode == 0
+    for name in RULES_BY_NAME:
+        assert name in proc.stdout
+    proc = cli("--rules=bogus", str(FIXTURES / "wire_schema_good.py"))
+    assert proc.returncode == 2
+
+
+def test_report_to_dict_roundtrips_through_json():
+    report = analyze_paths([str(FIXTURES / "donation_bad.py")], get_rules())
+    assert isinstance(report, Report)
+    doc = json.loads(json.dumps(report.to_dict()))
+    assert doc["counts"]["donation-safety"] == 2
+
+
+# ---------------------------------------------------------------------------
+# run-on-repo regression: the tree must be clean
+# ---------------------------------------------------------------------------
+
+def test_repo_is_clean_under_all_rules():
+    report = analyze_paths([str(REPO / p) for p in REPO_PATHS], get_rules())
+    assert report.files_checked > 50
+    assert report.findings == [], "\n".join(
+        f.render() for f in report.findings)
+    assert not report.errors
+
+
+def test_directory_walk_skips_fixtures_but_explicit_path_checks_them():
+    walked = analyze_paths([str(FIXTURES.parent.parent)], get_rules())
+    fixture_paths = {str(FIXTURES / "host_sync_bad.py")}
+    assert not {f.path for f in walked.findings} & fixture_paths
+    explicit = analyze_paths([str(FIXTURES / "host_sync_bad.py")],
+                             get_rules())
+    assert len(explicit.findings) == 5
+
+
+# ---------------------------------------------------------------------------
+# mutation regressions against the real serving sources
+# ---------------------------------------------------------------------------
+
+def _delete_line_findings(path: pathlib.Path, needle: str):
+    """Delete each line equal to ``needle`` (stripped) in turn; yield the
+    cache-invalidation findings that deletion produces."""
+    lines = path.read_text().splitlines(keepends=True)
+    rules = get_rules(["cache-invalidation"])
+    sites = [i for i, l in enumerate(lines) if l.strip() == needle]
+    assert sites, f"no {needle!r} lines found in {path}"
+    for i in sites:
+        mutated = "".join(lines[:i] + lines[i + 1:])
+        kept, _ = analyze_source(mutated, str(path), rules)
+        yield i + 1, kept
+
+
+def test_deleting_any_invalidation_call_in_backends_is_caught():
+    path = REPO / "src" / "repro" / "serving" / "backends.py"
+    seen = 0
+    for line_no, kept in _delete_line_findings(path,
+                                               "self._invalidate_view()"):
+        assert kept, f"deleting backends.py:{line_no} went unnoticed"
+        assert all(f.rule == "cache-invalidation" for f in kept)
+        seen += 1
+    assert seen == 7      # the documented seven-site inventory
+
+
+def test_deleting_table_version_bumps_in_kv_cache_is_caught():
+    path = REPO / "src" / "repro" / "serving" / "kv_cache.py"
+    caught = 0
+    for _line_no, kept in _delete_line_findings(path,
+                                                "self.table_version += 1"):
+        caught += bool(kept)
+    # every bump guarding a block-table mutation is load-bearing (one bump
+    # protects a lens-only re-upload, outside this rule's contract)
+    assert caught >= 6
+
+
+def test_unchanged_serving_sources_are_clean():
+    for rel in ("src/repro/serving/backends.py",
+                "src/repro/serving/kv_cache.py"):
+        path = REPO / rel
+        kept, _ = analyze_source(path.read_text(), str(path), get_rules())
+        assert kept == [], "\n".join(f.render() for f in kept)

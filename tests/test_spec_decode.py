@@ -152,7 +152,6 @@ def test_spec_draft_resyncs_after_fused_fallback(llama, cold_draft,
     cfg, model, params = llama
 
     def drive(spec):
-        rng = np.random.default_rng(0)
         eng = engine_factory(
             model, params, max_slots=4, max_seq_len=128, backend="paged",
             page_size=PAGE, chunked_prefill_budget=8,

@@ -1,0 +1,23 @@
+"""Light-mode mypy gate over the typed surfaces (api/, core/resilience).
+
+Runs mypy exactly as CI does (config in pyproject.toml [tool.mypy]) and
+fails on any reported error. Skips cleanly when mypy is not installed —
+same graceful degradation as the hypothesis/zstandard extras.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+pytest.importorskip("mypy")
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_mypy_clean_on_typed_surfaces():
+    proc = subprocess.run(
+        [sys.executable, "-m", "mypy", "--no-error-summary"],
+        cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        "mypy found type errors:\n" + proc.stdout + proc.stderr)
